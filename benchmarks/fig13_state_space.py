@@ -1,0 +1,38 @@
+"""Fig. 13: decode state space (N_req, N_kv) → EcoFreq frequency regions,
+with the tile-boundary "frequency cliffs" EcoRoute navigates around.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.registry import REGISTRY
+from repro.core.ecofreq import EcoFreq
+from repro.core.power import A100
+from repro.core.state_space import frequency_cliffs, frequency_field
+
+from benchmarks.common import predictor_for, write_csv
+
+
+def run(out_dir=None):
+    pred = predictor_for("llama-3.1-8b", A100, A100.freq_levels_2)
+    ef = EcoFreq(A100.freq_levels_2, pred, slo_ttft_s=0.6, slo_itl_s=0.06)
+    n_req = list(range(16, 513, 16))
+    n_kv = [int(x) for x in np.linspace(2e4, 6e5, 24)]
+    field = frequency_field(ef, n_req, n_kv)
+    rows = []
+    for i, q in enumerate(n_req):
+        for j, k in enumerate(n_kv):
+            rows.append({
+                "n_req": q, "n_kv": k, "freq_mhz": field[i, j],
+            })
+    cliffs = frequency_cliffs(ef, n_kv=250 * 800, max_req=512)
+    for c in cliffs:
+        rows.append({
+            "n_req": c[0], "n_kv": "cliff", "freq_mhz": f"{c[1]}->{c[2]}",
+        })
+    write_csv("fig13_state_space", rows, out_dir)
+    return cliffs
+
+
+if __name__ == "__main__":
+    print("cliffs:", run())

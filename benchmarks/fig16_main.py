@@ -1,0 +1,40 @@
+"""Fig. 16 (main result): TTFT/ITL SLO attainment + E2E energy across
+models × datasets × request rates, VoltanaLLM vs the SGLang-1005 /
+SGLang-1410 static baselines (2P2D, F = {1005, 1410} MHz, Δ = 500).
+
+Expected shape (paper): VoltanaLLM ≈ SGLang-1410 attainment with up to
+~36% less energy; SGLang-1005 saves energy but collapses SLO attainment
+at high RPS.
+"""
+from __future__ import annotations
+
+from benchmarks.common import RPS_GRID, serve_once, write_csv
+
+MODELS = ("ministral-3b", "llama-3.1-8b", "qwen3-32b")
+DATASETS = ("sharegpt", "lmsys")
+
+
+def run(out_dir=None, models=MODELS, datasets=DATASETS, duration=90.0):
+    rows = []
+    for model in models:
+        for ds in datasets:
+            for rps in RPS_GRID[model]:
+                rows.append(serve_once(
+                    model, "voltana", rps, dataset=ds, duration=duration))
+                rows.append(serve_once(
+                    model, "static", rps, dataset=ds, duration=duration,
+                    static_freq=1005.0))
+                rows.append(serve_once(
+                    model, "static", rps, dataset=ds, duration=duration,
+                    static_freq=1410.0))
+                v, lo, hi = rows[-3], rows[-2], rows[-1]
+                v["energy_vs_1410_pct"] = round(
+                    100 * (1 - v["energy_j"] / hi["energy_j"]), 1
+                )
+    write_csv("fig16_main", rows, out_dir)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

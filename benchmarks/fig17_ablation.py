@@ -1,0 +1,46 @@
+"""Fig. 17 (+ Fig. 28 / Appx. I): per-component ablation — EcoFreq-only
+vs full VoltanaLLM (EcoFreq + EcoRoute), with per-phase energy split.
+EcoRoute's extra saving is decode-specific.
+"""
+from __future__ import annotations
+
+from benchmarks.common import RPS_GRID, serve_once, write_csv
+
+
+def run(out_dir=None, duration=90.0):
+    rows = []
+    for rps in RPS_GRID["llama-3.1-8b"]:
+        for policy, static in (
+            ("static", 1410.0),
+            ("ecofreq-only", None),
+            ("voltana", None),
+        ):
+            row, m, _ = serve_once(
+                "llama-3.1-8b", policy, rps, duration=duration,
+                static_freq=static, return_metrics=True,
+            )
+            phases = m.energy_by_phase()
+            row["prefill_j"] = round(phases.get("prefill", 0.0), 1)
+            row["decode_j"] = round(phases.get("decode", 0.0), 1)
+            rows.append(row)
+    # per-phase savings vs the static-1410 row at the same RPS (Fig. 28)
+    by_rps = {}
+    for r in rows:
+        by_rps.setdefault(r["rps"], {})[r["policy"]] = r
+    for rps, d in by_rps.items():
+        base = d.get("static-1410")
+        for name in ("ecofreq-only", "voltana"):
+            if name in d and base:
+                d[name]["prefill_save_pct"] = round(
+                    100 * (1 - d[name]["prefill_j"] / base["prefill_j"]), 1
+                )
+                d[name]["decode_save_pct"] = round(
+                    100 * (1 - d[name]["decode_j"] / base["decode_j"]), 1
+                )
+    write_csv("fig17_ablation", rows, out_dir)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

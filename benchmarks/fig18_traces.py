@@ -1,0 +1,45 @@
+"""Fig. 18 (+ Appx. L Fig. 31): real-time frequency/batch traces of P/D
+instances under EcoFreq at low vs high RPS, and round-robin vs EcoRoute
+batch-size traces showing one instance held below the tile boundary.
+"""
+from __future__ import annotations
+
+from benchmarks.common import serve_once, write_csv
+
+
+def run(out_dir=None, duration=60.0):
+    rows = []
+    for rps in (4, 30):
+        _, m, cluster = serve_once(
+            "llama-3.1-8b", "ecofreq-only", rps, duration=duration,
+            record_traces=True, return_metrics=True,
+        )
+        for e in m.instances:
+            for (t, f, n) in e.freq_trace[::5]:
+                rows.append({
+                    "rps": rps, "instance": e.name,
+                    "t_s": round(t, 2), "freq_mhz": round(f, 0),
+                    "batch": n, "policy": "ecofreq-only",
+                })
+    # Appx. L: round-robin vs EcoRoute decode batch traces at high load
+    for policy in ("ecofreq-only", "voltana"):
+        _, m, cluster = serve_once(
+            "llama-3.1-8b", policy, 30, duration=duration,
+            record_traces=True, return_metrics=True,
+        )
+        for e in m.instances:
+            if not e.name.startswith("decode"):
+                continue
+            for (t, f, n) in e.freq_trace[::5]:
+                rows.append({
+                    "rps": 30, "instance": e.name,
+                    "t_s": round(t, 2), "freq_mhz": round(f, 0),
+                    "batch": n, "policy": policy,
+                })
+    write_csv("fig18_31_traces", rows, out_dir)
+    return rows[:5]
+
+
+if __name__ == "__main__":
+    run()
+    print("traces written")

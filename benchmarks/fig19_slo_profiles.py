@@ -1,0 +1,32 @@
+"""Fig. 19: behavior under different SLO profiles (low/medium/high =
+400/40, 600/60, 800/80 ms TTFT/ITL for LLaMA-3.1-8B + ShareGPT). Looser
+SLOs let VoltanaLLM trade more latency for energy.
+"""
+from __future__ import annotations
+
+from benchmarks.common import serve_once, write_csv
+
+PROFILES = {"low": (0.400, 0.040), "medium": (0.600, 0.060),
+            "high": (0.800, 0.080)}
+
+
+def run(out_dir=None, duration=90.0):
+    rows = []
+    for name, slo in PROFILES.items():
+        for rps in (10, 20, 30):
+            for policy, static in (
+                ("voltana", None), ("static", 1005.0), ("static", 1410.0),
+            ):
+                r = serve_once(
+                    "llama-3.1-8b", policy, rps, duration=duration,
+                    static_freq=static, slo=slo,
+                )
+                r["slo_profile"] = name
+                rows.append(r)
+    write_csv("fig19_slo_profiles", rows, out_dir)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

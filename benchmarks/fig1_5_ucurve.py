@@ -1,0 +1,60 @@
+"""Fig. 1 + Fig. 5: U-shaped energy-frequency curves and monotone
+latency-frequency curves, per phase (LLaMA-3.1-8B on A100).
+
+Validates the paper's anchors:
+* both phases have an interior energy sweet spot at ~1005 MHz;
+* frequencies below the sweet spot are strictly worse (both E and T up);
+* decode 1005→1410 MHz: ≈20% ITL reduction for ≈50% more energy;
+* prefill hits the TDP wall near 1305 MHz (f_eff < f_req).
+"""
+from __future__ import annotations
+
+from repro.configs.registry import REGISTRY
+from repro.core.hwmodel import HardwareModel, energy_frequency_curve, sweet_spot
+from repro.core.power import A100
+
+from benchmarks.common import write_csv
+
+
+def run(out_dir=None):
+    hw = HardwareModel(REGISTRY["llama-3.1-8b"], A100)
+    rows = []
+    states = {
+        "prefill": dict(n_tok=4096, avg_ctx=1024),
+        "decode": dict(n_req=64, n_kv=64 * 1000),
+    }
+    for phase, st in states.items():
+        for f, t, e in energy_frequency_curve(hw, phase, n_grid=40, **st):
+            c = (
+                hw.prefill_iter(st["n_tok"], st["avg_ctx"], f)
+                if phase == "prefill"
+                else hw.decode_iter(st["n_req"], st["n_kv"], f)
+            )
+            rows.append({
+                "phase": phase, "freq_mhz": round(f, 1),
+                "f_effective_mhz": round(c.f_effective, 1),
+                "latency_ms": round(t * 1e3, 3),
+                "energy_j": round(e, 4),
+                "power_w": round(c.power_w, 1),
+            })
+    # anchor summary
+    d_lo = hw.decode_iter(64, 64000, 1005.0)
+    d_hi = hw.decode_iter(64, 64000, 1410.0)
+    p_hi = hw.prefill_iter(4096, 1024, 1410.0)
+    rows.append({
+        "phase": "anchors",
+        "freq_mhz": 0,
+        "f_effective_mhz": round(p_hi.f_effective, 1),
+        "latency_ms": round(d_hi.time_s / d_lo.time_s, 3),  # ITL ratio
+        "energy_j": round(d_hi.energy_j / d_lo.energy_j, 3),  # E ratio
+        "power_w": round(
+            sweet_spot(hw, "decode", n_req=64, n_kv=64000), 1
+        ),  # sweet spot
+    })
+    write_csv("fig1_5_ucurve", rows, out_dir)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

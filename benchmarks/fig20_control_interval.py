@@ -1,0 +1,28 @@
+"""Fig. 20: per-iteration vs window-based frequency control (1P1D so
+EcoRoute is inert). Window-based control degrades SLO attainment —
+most severely for prefill, whose iteration-level load varies fastest.
+"""
+from __future__ import annotations
+
+from benchmarks.common import serve_once, write_csv
+
+INTERVALS = {"per-iteration": None, "100ms": 0.1, "1s": 1.0, "5s": 5.0}
+
+
+def run(out_dir=None, duration=90.0):
+    rows = []
+    for label, interval in INTERVALS.items():
+        for rps in (10, 20):
+            r = serve_once(
+                "llama-3.1-8b", "ecofreq-only", rps, duration=duration,
+                control_interval_s=interval, n_prefill=1, n_decode=1,
+            )
+            r["control_interval"] = label
+            rows.append(r)
+    write_csv("fig20_control_interval", rows, out_dir)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

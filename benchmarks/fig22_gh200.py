@@ -1,0 +1,50 @@
+"""Fig. 22 (+ Appx. M): hardware generalization — GH200 with Qwen3-32B
+(no TP), phase-specific frequency options F_P={1095,1980},
+F_D={1395,1980}, vs SGLang-1980 and SGLang-Sweet (per-phase static
+sweet spots).
+"""
+from __future__ import annotations
+
+from repro.configs.registry import REGISTRY
+from repro.core.hwmodel import HardwareModel, sweet_spot
+from repro.core.power import GH200
+
+from benchmarks.common import serve_once, write_csv
+
+F_P = (1095.0, 1980.0)
+F_D = (1395.0, 1980.0)
+
+
+def run(out_dir=None, duration=90.0):
+    rows = []
+    # Appx. M curve summary: per-phase sweet spots on GH200
+    hw = HardwareModel(REGISTRY["qwen3-32b"], GH200)
+    rows.append({
+        "model": "qwen3-32b", "policy": "sweet-spots", "rps": 0,
+        "prefill_sweet_mhz": round(
+            sweet_spot(hw, "prefill", n_tok=4096, avg_ctx=1024), 0),
+        "decode_sweet_mhz": round(
+            sweet_spot(hw, "decode", n_req=64, n_kv=64000), 0),
+    })
+    slo = (1.200, 0.120)
+    for rps in (2, 5, 10, 16):
+        rows.append(serve_once(
+            "qwen3-32b", "voltana", rps, chip=GH200, duration=duration,
+            freq_options=F_D, freq_options_prefill=F_P, slo=slo,
+        ))
+        rows.append(serve_once(
+            "qwen3-32b", "static", rps, chip=GH200, duration=duration,
+            static_freq=1980.0, slo=slo,
+        ))
+        # SGLang-Sweet: per-phase static sweet spots
+        rows.append(serve_once(
+            "qwen3-32b", "static", rps, chip=GH200, duration=duration,
+            static_freq=1395.0, slo=slo,
+        ))
+    write_csv("fig22_gh200", rows, out_dir)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,25 @@
+"""Appx. E (Fig. 25): throughput — VoltanaLLM approaches SGLang-1410's
+throughput at high RPS (where it boosts) and trades a little at low RPS.
+"""
+from __future__ import annotations
+
+from benchmarks.common import RPS_GRID, serve_once, write_csv
+
+
+def run(out_dir=None, duration=90.0):
+    rows = []
+    for rps in RPS_GRID["llama-3.1-8b"]:
+        for policy, static in (
+            ("voltana", None), ("static", 1005.0), ("static", 1410.0),
+        ):
+            rows.append(serve_once(
+                "llama-3.1-8b", policy, rps, duration=duration,
+                static_freq=static,
+            ))
+    write_csv("fig25_throughput", rows, out_dir)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

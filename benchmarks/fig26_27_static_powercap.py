@@ -1,0 +1,31 @@
+"""Appx. G/H (Fig. 26/27): intermediate static frequencies (1095/1200/
+1305 MHz) and a 350 W power cap, vs VoltanaLLM. Static intermediates
+waste energy at low RPS and miss SLOs at high RPS; the cap blocks
+boosting under pressure and doesn't down-clock at low load.
+"""
+from __future__ import annotations
+
+from benchmarks.common import serve_once, write_csv
+
+
+def run(out_dir=None, duration=90.0):
+    rows = []
+    for rps in (4, 10, 20, 30):
+        rows.append(serve_once("llama-3.1-8b", "voltana", rps,
+                               duration=duration))
+        for f in (1095.0, 1200.0, 1305.0):
+            rows.append(serve_once(
+                "llama-3.1-8b", "static", rps, duration=duration,
+                static_freq=f,
+            ))
+        rows.append(serve_once(
+            "llama-3.1-8b", "powercap", rps, duration=duration,
+            power_cap_w=350.0,
+        ))
+    write_csv("fig26_27_static_powercap", rows, out_dir)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,34 @@
+"""Appx. J/K (Fig. 29/30): 2-level vs 5-level frequency options, and the
+Δ imbalance-threshold sensitivity {110, 210, 310, 410} under 5 levels.
+"""
+from __future__ import annotations
+
+from benchmarks.common import serve_once, write_csv
+
+
+def run(out_dir=None, duration=90.0):
+    rows = []
+    for rps in (10, 20, 30):
+        for levels in (2, 5):
+            r = serve_once(
+                "llama-3.1-8b", "voltana", rps, duration=duration,
+                freq_levels=levels,
+            )
+            r["levels"] = levels
+            r["delta"] = 500
+            rows.append(r)
+        for delta in (110.0, 210.0, 310.0, 410.0):
+            r = serve_once(
+                "llama-3.1-8b", "voltana", rps, duration=duration,
+                freq_levels=5, delta=delta,
+            )
+            r["levels"] = 5
+            r["delta"] = delta
+            rows.append(r)
+    write_csv("fig29_30_levels_delta", rows, out_dir)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,38 @@
+"""Appx. F (Fig. 34): TTFT and ITL CDFs at the lowest and highest request
+rates. Expected shape: at low RPS VoltanaLLM's CDF tracks SGLang-1005
+(low frequency suffices); at high RPS it tracks SGLang-1410 (boosting).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import RPS_GRID, serve_once, write_csv
+
+
+def run(out_dir=None, duration=60.0):
+    rows = []
+    grid = RPS_GRID["llama-3.1-8b"]
+    for rps in (grid[0], grid[-2]):
+        for policy, static in (
+            ("voltana", None), ("static", 1005.0), ("static", 1410.0),
+        ):
+            row, m, _ = serve_once(
+                "llama-3.1-8b", policy, rps, duration=duration,
+                static_freq=static, return_metrics=True,
+            )
+            for metric in ("ttft", "itl"):
+                xs, qs = m.cdf(metric, points=25)
+                for x, q in zip(xs, qs):
+                    rows.append({
+                        "rps": rps, "policy": row["policy"],
+                        "metric": metric,
+                        "latency_ms": round(float(x) * 1e3, 2),
+                        "quantile": round(float(q), 3),
+                    })
+    write_csv("fig34_cdfs", rows, out_dir)
+    return rows[:5]
+
+
+if __name__ == "__main__":
+    run()
+    print("fig34 written")

@@ -1,0 +1,32 @@
+"""Fig. 4: decode ITL reduction from frequency scaling (1005→1410 MHz)
+grows with batch size — decode transitions memory-bound → compute-bound.
+"""
+from __future__ import annotations
+
+from repro.configs.registry import REGISTRY
+from repro.core.hwmodel import HardwareModel
+from repro.core.power import A100
+
+from benchmarks.common import write_csv
+
+
+def run(out_dir=None):
+    hw = HardwareModel(REGISTRY["llama-3.1-8b"], A100)
+    rows = []
+    for bs in (1, 8, 32, 64, 128, 256, 384, 512):
+        t_lo = hw.decode_time(bs, bs * 1000, 1005.0)
+        t_hi = hw.decode_time(bs, bs * 1000, 1410.0)
+        rows.append({
+            "batch_size": bs,
+            "itl_lo_ms": round(t_lo * 1e3, 3),
+            "itl_hi_ms": round(t_hi * 1e3, 3),
+            "itl_decrease_pct": round(100 * (1 - t_hi / t_lo), 2),
+            "theta": round(hw.decode_iter(bs, bs * 1000, 1410.0).theta, 3),
+        })
+    write_csv("fig4_itl_sensitivity", rows, out_dir)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

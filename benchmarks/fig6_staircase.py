@@ -1,0 +1,48 @@
+"""Fig. 6 (+ Appx. A): tile-quantization "staircase" in decode ITL and
+energy-per-output-token as batch size crosses GEMM M-tile boundaries.
+
+On the A100 target the boundary period is 256 (paper); on the TPU v5e
+target it is the 128-wide MXU tile (DESIGN.md §2 hardware adaptation).
+The prefill staircase exists at small token counts and washes out above
+~2k batched tokens (Appx. A).
+"""
+from __future__ import annotations
+
+from repro.configs.registry import REGISTRY
+from repro.core.hwmodel import HardwareModel
+from repro.core.power import A100, TPU_V5E
+
+from benchmarks.common import write_csv
+
+
+def run(out_dir=None):
+    rows = []
+    for chip in (A100, TPU_V5E):
+        hw = HardwareModel(REGISTRY["llama-3.1-8b"], chip)
+        t = chip.mxu_tile
+        for bs in sorted({
+            *range(max(1, t - 8), t + 9),
+            *range(2 * t - 8, 2 * t + 9),
+            *range(16, 3 * t, 16),
+        }):
+            c = hw.decode_iter(bs, bs * 800, chip.f_max)
+            rows.append({
+                "chip": chip.name, "phase": "decode", "batch": bs,
+                "itl_ms": round(c.time_s * 1e3, 4),
+                "epot_mj": round(c.energy_j / bs * 1e3, 4),
+            })
+        # prefill staircase (Appx. A): visible small, washed out large
+        for ntok in (*range(t - 4, t + 5), 512, 1024, 2048, 4096, 8192):
+            c = hw.prefill_iter(ntok, ntok, chip.f_max)
+            rows.append({
+                "chip": chip.name, "phase": "prefill", "batch": ntok,
+                "itl_ms": round(c.time_s * 1e3, 4),
+                "epot_mj": round(c.energy_j / ntok * 1e3, 4),
+            })
+    write_csv("fig6_staircase", rows, out_dir)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

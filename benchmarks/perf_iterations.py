@@ -1,0 +1,132 @@
+"""§Perf hillclimbing: hypothesis → change → re-lower → re-analyse, for
+the three selected cells (see EXPERIMENTS.md §Perf for the narrative).
+
+Cells (from the baseline roofline table):
+* qwen3-moe-30b-a3b × prefill_32k — most collective-bound cell (MoE
+  all-to-all + Megatron-TP all-reduces ≈ 0.88 of step time).
+* phi4-mini-3.8b × decode_32k — most representative of the paper's
+  technique (dense GQA decode, the EcoFreq/EcoRoute energy lever);
+  memory-bound on KV + weight reads.
+* jamba-v0.1-52b × long_500k — worst roofline fraction (single-stream
+  decode reads the full weight shard per token).
+
+Every iteration re-compiles the cell (proof the variant lowers/shards)
+and recomputes the three roofline terms. The paper-faithful BASELINE and
+the beyond-paper optimized variants are recorded as separate rows.
+NOTE: spawns 512-host-device compiles — run standalone, not in the
+default benchmark sweep (benchmarks.run includes its *results* via CSV).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+ITERATIONS = [
+    # (arch, shape, label, variant, hypothesis)
+    ("qwen3-moe-30b-a3b", "prefill_32k", "baseline", {},
+     "BASELINE (paper-faithful mesh use: Megatron-TP + EP): collective-"
+     "bound, MoE all-to-all ~190 GB/dev + TP all-reduce ~48 GB/dev."),
+    ("qwen3-moe-30b-a3b", "prefill_32k", "fsdp_sp", {"mode": "fsdp_sp"},
+     "Sequence parallelism + flat weight sharding: replace per-sublayer "
+     "activation all-reduces (~48 GB) with per-layer weight all-gathers "
+     "(~dense-params ≈ 5 GB) + K/V gathers (~6 GB). Napkin: collective "
+     "241→~200 GB (-17%); MoE a2a untouched."),
+    ("qwen3-moe-30b-a3b", "prefill_32k", "fsdp_sp+int8a2a",
+     {"mode": "fsdp_sp", "dispatch_dtype": "int8"},
+     "Quantize the MoE dispatch/combine buffers to int8: the all-to-all "
+     "is pure token payload, tolerant to 8-bit (<1% output error, see "
+     "tests). Napkin: a2a 190→97 GB; total ~108 GB (-55% vs baseline)."),
+    ("phi4-mini-3.8b", "decode_32k", "baseline", {},
+     "BASELINE: memory-bound (0.92 share): KV-cache read 2.1 GB/dev + "
+     "weight read 0.5 GB/dev per step."),
+    ("phi4-mini-3.8b", "decode_32k", "int8kv", {"kv_dtype": "int8"},
+     "int8 KV cache (per-position/head scales): cache read halves. "
+     "Napkin: memory term 3.2→~1.9 ms (-40%); accuracy cost ~4e-4 rel "
+     "(validated)."),
+    ("phi4-mini-3.8b", "decode_32k", "int8kv+w8",
+     {"kv_dtype": "int8", "weight_dtype": "int8"},
+     "ALSO int8 weights (per-channel): weight stream halves too. Napkin: "
+     "memory term → ~1.6 ms; diminishing because cache dominated."),
+    ("jamba-v0.1-52b", "long_500k", "baseline", {},
+     "BASELINE: worst roofline fraction — batch=1 decode reads the full "
+     "6.5 GB/dev weight shard per generated token (memory share 0.996)."),
+    ("jamba-v0.1-52b", "long_500k", "w8", {"weight_dtype": "int8"},
+     "int8 weights: the dominant weight stream halves. Napkin: memory "
+     "term ~6.5→3.3 GB -> ~-49%."),
+    ("jamba-v0.1-52b", "long_500k", "w8+int8kv",
+     {"weight_dtype": "int8", "kv_dtype": "int8"},
+     "ALSO int8 KV: jamba's 4 attn layers hold only ~17 MB/dev at this "
+     "shape — expect NO measurable gain (testing the hypothesis that "
+     "cache is negligible here)."),
+]
+
+
+def run(out_dir=None, results_path=None):
+    """Reads perf_results.jsonl produced by `python -m benchmarks.perf_iterations`
+    (standalone mode) and emits the §Perf table; returns rows."""
+    from benchmarks.common import write_csv
+    from benchmarks.roofline import terms_for_record
+
+    results_path = results_path or os.path.join(
+        os.path.dirname(__file__), "..", "perf_results.jsonl"
+    )
+    rows = []
+    if not os.path.exists(results_path):
+        print("no perf_results.jsonl — run "
+              "`PYTHONPATH=src python -m benchmarks.perf_iterations` first")
+        return rows
+    recs = {}
+    with open(results_path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r.get("label", "baseline"))] = r
+    for arch, shape, label, variant, hypothesis in ITERATIONS:
+        r = recs.get((arch, shape, label))
+        if r is None or r.get("status") != "ok":
+            rows.append({"arch": arch, "shape": shape, "label": label,
+                         "status": "missing/fail"})
+            continue
+        t = terms_for_record(r)
+        base = recs.get((arch, shape, "baseline"))
+        tb = terms_for_record(base) if base else t
+        dom = max(t, key=t.get)
+        domb = max(tb, key=tb.get)
+        rows.append({
+            "arch": arch, "shape": shape, "label": label,
+            "hypothesis": hypothesis[:90],
+            "compute_s": f"{t['compute']:.3e}",
+            "memory_s": f"{t['memory']:.3e}",
+            "collective_s": f"{t['collective']:.3e}",
+            "total_s": f"{sum(t.values()):.3e}",
+            "dominant": dom,
+            "dom_before_s": f"{tb[domb]:.3e}",
+            "dom_delta_pct": round(
+                100 * (t[domb] - tb[domb]) / tb[domb], 1
+            ),
+            "total_delta_pct": round(
+                100 * (sum(t.values()) - sum(tb.values()))
+                / sum(tb.values()), 1
+            ),
+        })
+    write_csv("perf_iterations", rows, out_dir)
+    return rows
+
+
+def main():
+    """Standalone: run the actual 512-device compiles for every row."""
+    from repro.launch.dryrun import run_cell
+
+    out = os.path.join(os.path.dirname(__file__), "..",
+                       "perf_results.jsonl")
+    with open(out, "w") as f:
+        for arch, shape, label, variant, hypothesis in ITERATIONS:
+            rec = run_cell(arch, shape, False, variant=variant)
+            rec["label"] = label
+            rec.pop("traceback", None)
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

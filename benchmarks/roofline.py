@@ -1,0 +1,155 @@
+"""§Roofline: three-term roofline per (arch × shape) single-pod cell.
+
+Reads the dry-run record (``dryrun_results.jsonl``) and derives, per cell:
+
+    compute term    = HLO_FLOPs/device  / (197 TFLOP/s bf16)
+    memory term     = HBM bytes/device  / (819 GB/s)
+    collective term = wire bytes/device / (50 GB/s/link)
+
+* FLOPs: exact loop-free lowered-HLO totals (dry-run ``flops_per_device``).
+* HBM bytes: analytic traffic model (weights + cache + activation streams
+  under the cell's remat/microbatch policy) — the pre-fusion HLO byte
+  count is kept as an upper bound (``hlo_bytes_global``).
+* Collectives: the sharding-policy traffic model (``comm_model_bytes``),
+  cross-checked against the HLO op mix.
+
+Also reports MODEL_FLOPS (6·N·D train / 2·N·D inference, active params
+for MoE) and MODEL_FLOPS/HLO_FLOPs — the useful-compute fraction that
+exposes remat/padding waste — plus the dominant term and what would move
+it down.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from repro.configs.registry import REGISTRY
+from repro.configs.shapes import SHAPES
+from repro.core.power import TPU_V5E
+
+from benchmarks.common import write_csv
+
+BF16 = 2
+F32 = 4
+
+
+def _hbm_traffic_per_device(rec: dict) -> float:
+    """First-order per-device HBM bytes for one step."""
+    from repro.launch.dryrun import apply_variant
+
+    cfg = apply_variant(REGISTRY[rec["arch"]], rec.get("variant") or {})
+    shape = SHAPES[rec["shape"]]
+    n_dev = rec["n_devices"]
+    mem = rec["mem_model_gb"]
+    p_local = mem["params"] * 1e9
+    mb = rec.get("microbatches", 1)
+    if shape.kind == "train":
+        act_stream = mem["saved_residuals"] * 1e9
+        # fwd + bwd + remat-refwd weight reads, grad write/read, opt update
+        return (
+            3 * p_local * mb  # weights touched per microbatch pass
+            + 2 * mem["grads_fp32"] * 1e9
+            + 3 * mem["opt_mv"] * 1e9 / 2
+            + 4 * act_stream
+        )
+    # serving reads the full model-axis weight shard each step (FSDP-held
+    # fractions are gathered into HBM first, then read — same traffic)
+    w_elem = 1.02 if cfg.weight_dtype == "int8" else 2
+    w_read = cfg.param_count() * w_elem / 16  # model axis = 16
+    if shape.kind == "prefill":
+        return w_read + mem.get("cache_out", 0) * 1e9 + \
+            mem.get("activations", 0) * 1e9 * 4
+    return (
+        w_read
+        + mem.get("cache", 0) * 1e9
+        + mem.get("activations", 0) * 1e9
+    )
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = REGISTRY[arch]
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token/request
+
+
+def terms_for_record(rec: dict, chip=TPU_V5E) -> dict:
+    """Three roofline terms (seconds) for one dry-run record."""
+    return {
+        "compute": rec["flops_per_device"] / chip.peak_flops,
+        "memory": _hbm_traffic_per_device(rec) / chip.hbm_bw,
+        "collective": rec["comm_model_bytes"]["total"] / chip.ici_bw,
+    }
+
+
+def _advice(dom: str, rec: dict) -> str:
+    if dom == "collective":
+        return ("sequence-parallel TP (reduce-scatter + all-gather instead "
+                "of all-reduce) / overlap collectives with compute")
+    if dom == "memory":
+        if SHAPES[rec["shape"]].kind == "decode":
+            return ("larger decode batch per chip (raise arithmetic "
+                    "intensity) / quantize KV cache to int8")
+        return "fuse activation streams; fewer remat passes"
+    return ("reduce padding waste (MXU tile alignment) and remat recompute; "
+            "already compute-bound — near the ideal regime")
+
+
+def run(out_dir=None, results_path: Optional[str] = None):
+    results_path = results_path or os.path.join(
+        os.path.dirname(__file__), "..", "dryrun_results.jsonl"
+    )
+    rows = []
+    if not os.path.exists(results_path):
+        print(f"no dry-run results at {results_path}; run "
+              "`python -m repro.launch.dryrun --all --out "
+              "dryrun_results.jsonl` first")
+        return rows
+    chip = TPU_V5E
+    with open(results_path) as f:
+        recs = [json.loads(line) for line in f if line.strip()]
+    for rec in recs:
+        if rec.get("status") != "ok" or rec.get("mesh") != "16x16":
+            continue
+        terms = terms_for_record(rec, chip)
+        t_comp, t_mem, t_coll = (
+            terms["compute"], terms["memory"], terms["collective"],
+        )
+        dom = max(terms, key=terms.get)
+        mf = model_flops(rec["arch"], rec["shape"])
+        hlo_f = rec["flops_global"]
+        total = sum(terms.values())
+        n_dev = rec["n_devices"]
+        # roofline fraction: model-useful compute time / estimated step
+        # time (serial-term estimate). 1.0 == the chip does nothing but
+        # useful model math. This is the §Perf score.
+        t_useful = mf / n_dev / chip.peak_flops
+        rows.append({
+            "arch": rec["arch"],
+            "shape": rec["shape"],
+            "compute_s": f"{t_comp:.4e}",
+            "memory_s": f"{t_mem:.4e}",
+            "collective_s": f"{t_coll:.4e}",
+            "dominant": dom,
+            "roofline_frac": round(t_useful / total, 4),
+            "dominant_share": round(terms[dom] / total, 3),
+            "model_flops": f"{mf:.3e}",
+            "hlo_flops_global": f"{hlo_f:.3e}",
+            "useful_frac": round(mf / hlo_f, 3) if hlo_f else 0.0,
+            "peak_mem_gb": round(rec["mem_model_gb"]["total"], 2),
+            "advice": _advice(dom, rec),
+        })
+    write_csv("roofline", rows, out_dir)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print({k: v for k, v in r.items() if k != "advice"})

@@ -1,0 +1,70 @@
+"""Benchmark driver: one module per paper figure/table.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig16 fig6 # subset
+    PYTHONPATH=src python -m benchmarks.run --quick    # cheap subset
+
+Each module writes ``benchmarks/results/<name>.csv``; this driver prints
+a one-line summary per module and a final manifest.
+"""
+from __future__ import annotations
+
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig1_5_ucurve", "Fig.1/5  U-shaped E-f curves + anchors"),
+    ("fig2_3_workload_dynamics", "Fig.2/3  multi-timescale workload dynamics"),
+    ("fig4_itl_sensitivity", "Fig.4    decode ITL sensitivity vs batch"),
+    ("fig6_staircase", "Fig.6    tile-quantization staircase"),
+    ("fig10_predictability", "Fig.10   latency predictability scatter"),
+    ("fig13_state_space", "Fig.13   decode state-space freq regions"),
+    ("fig16_main", "Fig.16   MAIN: SLO attainment + energy"),
+    ("fig17_ablation", "Fig.17/28 EcoFreq-only vs full + phase split"),
+    ("fig18_traces", "Fig.18/31 frequency/batch traces"),
+    ("fig19_slo_profiles", "Fig.19   SLO profile sweep"),
+    ("fig20_control_interval", "Fig.20   control-interval ablation"),
+    ("fig21_ecopred_mae", "Fig.21   EcoPred offline vs online MAE"),
+    ("fig22_gh200", "Fig.22   GH200 generalization"),
+    ("fig25_throughput", "Fig.25   throughput comparison"),
+    ("fig26_27_static_powercap", "Fig.26/27 static-intermediate + powercap"),
+    ("fig29_30_levels_delta", "Fig.29/30 freq levels + delta sweep"),
+    ("tab2_pd_ratio", "Tab.II   synthetic P/D-ratio workload"),
+    ("fig34_cdfs", "Fig.34   TTFT/ITL CDFs at low/high RPS"),
+    ("roofline", "§Roofline table from dry-run records"),
+    ("perf_iterations", "§Perf    hillclimb log from perf records"),
+]
+
+QUICK = {"fig1_5_ucurve", "fig4_itl_sensitivity", "fig6_staircase",
+         "fig13_state_space", "fig20_control_interval", "roofline"}
+
+
+def main() -> int:
+    args = [a for a in sys.argv[1:] if not a.startswith("-")]
+    quick = "--quick" in sys.argv
+    failures = 0
+    for name, desc in MODULES:
+        if args and not any(a in name for a in args):
+            continue
+        if quick and name not in QUICK:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            rows = mod.run()
+            n = len(rows) if rows is not None else 0
+            print(f"[ok]   {desc:45s} {n:4d} rows  {time.time()-t0:6.1f}s",
+                  flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"[FAIL] {desc:45s} {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    print(f"\nbenchmarks done ({failures} failures); results in "
+          "benchmarks/results/")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

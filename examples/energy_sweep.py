@@ -1,0 +1,58 @@
+"""Energy/latency sweep: reproduce the paper's core plots from the
+calibrated hardware model — the per-phase U-curves (Fig. 5), the
+batch-size staircase (Fig. 6), and a policy comparison across request
+rates (Fig. 16's shape) — as terminal tables.
+
+    PYTHONPATH=src python examples/energy_sweep.py
+"""
+import warnings
+
+warnings.filterwarnings("ignore")
+
+from repro.configs.registry import REGISTRY
+from repro.core import A100, HardwareModel
+from repro.serving import ClusterConfig, PDCluster, poisson_workload, SHAREGPT
+from repro.serving.cluster import build_predictor
+
+
+def main():
+    model = REGISTRY["llama-3.1-8b"]
+    hw = HardwareModel(model, A100)
+
+    print("== per-phase energy/latency vs frequency (Fig. 5) ==")
+    print(f"{'MHz':>6s} | {'prefill ms':>10s} {'prefill J':>10s} | "
+          f"{'decode ms':>10s} {'decode J':>10s}")
+    for f in (700, 900, 1005, 1100, 1200, 1305, 1410):
+        p = hw.prefill_iter(4096, 1024, float(f))
+        d = hw.decode_iter(64, 64_000, float(f))
+        print(f"{f:6d} | {p.time_s*1e3:10.1f} {p.energy_j:10.2f} | "
+              f"{d.time_s*1e3:10.2f} {d.energy_j:10.3f}")
+
+    print("\n== decode staircase at the 256-tile boundary (Fig. 6) ==")
+    for bs in (248, 252, 256, 257, 260, 264):
+        c = hw.decode_iter(bs, bs * 800, 1410.0)
+        print(f"batch {bs:4d}: ITL {c.time_s*1e3:6.2f} ms   "
+              f"EPOT {c.energy_j/bs*1e3:6.3f} mJ")
+
+    print("\n== policies across request rates (Fig. 16 shape) ==")
+    pred = build_predictor(model, A100, A100.freq_levels_2, kv_cap=400_000)
+    print(f"{'rps':>4s} {'policy':12s} {'ttft':>6s} {'itl':>6s} "
+          f"{'energy J':>9s}")
+    for rps in (6, 15, 30, 55):
+        for policy, static in (
+            ("voltana", None), ("static", 1005.0), ("static", 1410.0),
+        ):
+            cfg = ClusterConfig(
+                model=model, chip=A100, policy=policy, static_freq=static,
+                predictor=pred, kv_capacity_tokens=400_000,
+                online_adapt=False, seed=1,
+            )
+            reqs = poisson_workload(SHAREGPT, rps, 45.0, seed=5)
+            s = PDCluster(cfg).run(reqs).summary()
+            name = policy if static is None else f"static-{static:.0f}"
+            print(f"{rps:4d} {name:12s} {s['ttft_attain']:6.3f} "
+                  f"{s['itl_attain']:6.3f} {s['energy_j']:9.0f}")
+
+
+if __name__ == "__main__":
+    main()

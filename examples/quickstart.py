@@ -1,0 +1,83 @@
+"""Quickstart: the VoltanaLLM control plane in 60 seconds.
+
+Builds the offline-profiled latency predictor (EcoPred), shows EcoFreq's
+per-iteration frequency decisions across load levels, shows an EcoRoute
+what-if routing decision near a tile boundary, then runs a short P/D
+disaggregated serving simulation and prints SLO + energy vs the static
+max-frequency baseline.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import warnings
+
+warnings.filterwarnings("ignore")
+
+from repro.configs.registry import REGISTRY
+from repro.core import (
+    A100,
+    BatchInfo,
+    EcoFreq,
+    EcoRoute,
+    HardwareModel,
+    InstanceView,
+    RouteRequest,
+    SystemState,
+    sweet_spot,
+)
+from repro.serving import ClusterConfig, PDCluster, poisson_workload, SHAREGPT
+from repro.serving.cluster import build_predictor
+
+
+def main():
+    model = REGISTRY["llama-3.1-8b"]
+    hw = HardwareModel(model, A100)
+
+    print("== the U-curve (paper Fig. 1) ==")
+    f_star = sweet_spot(hw, "decode", n_req=64, n_kv=64_000)
+    print(f"decode energy sweet spot: {f_star:.0f} MHz (paper: 1005 MHz)")
+
+    print("\n== EcoPred + EcoFreq (Alg. 1) ==")
+    pred = build_predictor(model, A100, A100.freq_levels_2, kv_cap=400_000)
+    ef = EcoFreq(A100.freq_levels_2, pred, slo_ttft_s=0.6, slo_itl_s=0.06)
+    for n_req, n_kv in ((8, 6_000), (128, 96_000), (400, 320_000)):
+        f = ef.select(SystemState(),
+                      BatchInfo("decode", n_req=n_req, n_kv=n_kv))
+        t = pred.predict_decode(f, n_req, n_kv)[0] * 1e3
+        print(f"decode batch {n_req:4d} ({n_kv:7d} kv) -> {f:6.0f} MHz "
+              f"(predicted ITL {t:5.1f} ms vs SLO 60 ms)")
+    print("waiting queue ->",
+          ef.select(SystemState(has_waiting=True),
+                    BatchInfo("decode", n_req=8, n_kv=6_000)), "MHz")
+
+    print("\n== EcoRoute what-if (Alg. 2) ==")
+    er = EcoRoute(ef, delta=500.0)
+    # find the learned cliff, then put instance 0 right at its edge
+    from repro.core.state_space import frequency_cliffs
+
+    cliff = frequency_cliffs(ef, n_kv=250 * 600, max_req=400)
+    edge = cliff[0][0] - 1 if cliff else 255
+    views = [InstanceView(0, edge, edge * 600),
+             InstanceView(1, edge - 40, (edge - 40) * 600)]
+    pick = er.route(views, RouteRequest(prompt_len=600))
+    print(f"instances at N_req = {edge} / {edge-40}, cliff at "
+          f"{edge+1} -> route to instance {pick} "
+          "(don't push #0 over the frequency cliff)")
+
+    print("\n== 60 s serving simulation (2P2D, ShareGPT, 15 RPS) ==")
+    reqs = poisson_workload(SHAREGPT, 15.0, 60.0, seed=0)
+    rows = {}
+    for policy, static in (("voltana", None), ("static", 1410.0)):
+        cfg = ClusterConfig(
+            model=model, chip=A100, policy=policy, static_freq=static,
+            predictor=pred, kv_capacity_tokens=400_000, online_adapt=False,
+        )
+        rows[policy] = PDCluster(cfg).run(list(reqs)).summary()
+    for k, s in rows.items():
+        print(f"{k:10s} ttft {s['ttft_attain']:.3f}  itl "
+              f"{s['itl_attain']:.3f}  energy {s['energy_j']:8.0f} J")
+    save = 1 - rows["voltana"]["energy_j"] / rows["static"]["energy_j"]
+    print(f"\nVoltanaLLM saves {save:.1%} energy at matched SLO attainment")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.configs.base import LayerSpec, MambaConfig, ModelConfig, MoEConfig  # noqa: F401

@@ -1,0 +1,206 @@
+"""EcoPred — online-adaptive, load-aware latency prediction (paper §V-D).
+
+Two models, exactly the paper's Eqs. 8-9 and Appx. C:
+
+    T_P(M, B, f) = model_P(f, N_tok)            (gblinear, MAE objective)
+    T_D(M, B, f) = model_D(f, N_req, N_kv)      (gbtree,   MAE objective)
+
+Lifecycle (paper Fig. 12):
+
+1. **Offline profiling** — uniform, distribution-agnostic sampling over the
+   feasible ``(f, N_tok)`` / ``(f, N_req, N_kv)`` ranges against a latency
+   oracle (on real hardware: measured; here: the roofline-calibrated
+   :class:`~repro.core.hwmodel.HardwareModel` plus measurement noise).
+2. **Online adaptation** — the engine records ``(features, measured_time)``
+   for every iteration; every ``adapt_every`` new samples a background
+   fine-tune (``continue_fit``) absorbs the offline->online distribution
+   shift. Samples are kept in a bounded replay window.
+
+Prediction is vectorized so EcoRoute's what-if queries over all candidate
+decode instances batch into one call (paper §V-E: "multiple queries ...
+are batched together").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.gbdt import GBLinear, GBTree
+from repro.core.hwmodel import HardwareModel
+
+
+@dataclass
+class ProfileRanges:
+    """Feasible feature ranges for offline uniform profiling."""
+
+    max_tokens: int = 16_384  # prefill batched-token budget
+    max_requests: int = 512  # decode running-request cap
+    max_kv_tokens: int = 1_000_000  # KV-cache token capacity
+
+
+class EcoPred:
+    """Prefill + decode inference-time predictors with online adaptation."""
+
+    def __init__(
+        self,
+        freq_options: Sequence[float],
+        adapt_every: int = 512,
+        replay_window: int = 8_192,
+        seed: int = 0,
+    ):
+        self.freq_options = tuple(sorted(set(freq_options)))
+        self.adapt_every = adapt_every
+        self.replay_window = replay_window
+        self._rng = np.random.default_rng(seed)
+        self.prefill_model = GBLinear(n_rounds=60, learning_rate=0.5,
+                                      objective="mae")
+        self.decode_model = GBTree(
+            n_estimators=300, learning_rate=0.1, max_depth=6,
+            subsample=0.8, colsample=1.0, objective="mae",
+            early_stopping_rounds=50, seed=seed,
+        )
+        self._buf_p: List[np.ndarray] = []
+        self._buf_d: List[np.ndarray] = []
+        self._since_p = 0
+        self._since_d = 0
+        self.n_adaptations = 0
+        self.online_enabled = True
+
+    # ------------------------------------------------------------------
+    # Offline profiling (paper: measured profiles; here: hwmodel + noise)
+    # ------------------------------------------------------------------
+    def offline_profile(
+        self,
+        hw: HardwareModel,
+        ranges: Optional[ProfileRanges] = None,
+        n_prefill: int = 2_000,
+        n_decode: int = 6_000,
+        noise_sigma: float = 0.03,
+        seed: int = 1,
+    ) -> "EcoPred":
+        r = ranges or ProfileRanges()
+        rng = np.random.default_rng(seed)
+        freqs = np.asarray(self.freq_options)
+
+        # prefill: uniform over N_tok, uniform over frequency options
+        n_tok = rng.integers(1, r.max_tokens + 1, n_prefill)
+        f_p = freqs[rng.integers(0, len(freqs), n_prefill)]
+        y_p = np.array(
+            [hw.prefill_time(int(t), float(f)) for t, f in zip(n_tok, f_p)]
+        )
+        y_p *= np.exp(rng.normal(0.0, noise_sigma, n_prefill))
+        self.prefill_model.fit(self._pfeat(f_p, n_tok), y_p)
+
+        # decode: uniform over (N_req, N_kv) with N_kv >= N_req
+        n_req = rng.integers(1, r.max_requests + 1, n_decode)
+        n_kv = np.minimum(
+            r.max_kv_tokens,
+            n_req * rng.uniform(1.0, r.max_kv_tokens /
+                                np.maximum(n_req, 1), n_decode),
+        ).astype(int)
+        f_d = freqs[rng.integers(0, len(freqs), n_decode)]
+        y_d = np.array(
+            [
+                hw.decode_time(int(q), int(k), float(f))
+                for q, k, f in zip(n_req, n_kv, f_d)
+            ]
+        )
+        y_d *= np.exp(rng.normal(0.0, noise_sigma, n_decode))
+        Xd = np.stack([f_d, n_req.astype(float), n_kv.astype(float)], axis=1)
+        cut = int(0.9 * n_decode)
+        self.decode_model.fit(
+            Xd[:cut], y_d[:cut], eval_set=(Xd[cut:], y_d[cut:])
+        )
+        return self
+
+    # ------------------------------------------------------------------
+    # Prediction (vectorized; <0.5 ms per batched query in the paper)
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _pfeat(f, n_tok) -> np.ndarray:
+        """Prefill features: the paper's Eq. 6 per-frequency affine form
+        T ≈ a_f·N_tok + b_f is captured exactly by adding the physical
+        interaction terms N_tok/f and 1/f (T_comp ∝ N_tok/f)."""
+        f, t = np.broadcast_arrays(
+            np.asarray(f, float).ravel(), np.asarray(n_tok, float).ravel()
+        )
+        return np.stack([f, t, t / f * 1e3, 1e3 / f], axis=-1)
+
+    def predict_prefill(self, f, n_tok) -> np.ndarray:
+        return np.maximum(
+            self.prefill_model.predict(self._pfeat(f, n_tok)), 0.0
+        )
+
+    def predict_decode(self, f, n_req, n_kv) -> np.ndarray:
+        f, q, k = np.broadcast_arrays(
+            np.asarray(f, float), np.asarray(n_req, float),
+            np.asarray(n_kv, float),
+        )
+        X = np.stack([f, q, k], axis=-1).reshape(-1, 3)
+        return np.maximum(self.decode_model.predict(X), 0.0)
+
+    # ------------------------------------------------------------------
+    # Online adaptation
+    # ------------------------------------------------------------------
+    def record_prefill(self, f: float, n_tok: int, t_s: float) -> None:
+        if not self.online_enabled:
+            return
+        self._buf_p.append(np.array([f, n_tok, t_s]))
+        self._since_p += 1
+        if self._since_p >= self.adapt_every:
+            self._adapt_prefill()
+
+    def record_decode(
+        self, f: float, n_req: int, n_kv: int, t_s: float
+    ) -> None:
+        if not self.online_enabled:
+            return
+        self._buf_d.append(np.array([f, n_req, n_kv, t_s]))
+        self._since_d += 1
+        if self._since_d >= self.adapt_every:
+            self._adapt_decode()
+
+    def _adapt_prefill(self) -> None:
+        self._since_p = 0
+        buf = np.stack(self._buf_p[-self.replay_window:])
+        self.prefill_model.continue_fit(
+            self._pfeat(buf[:, 0], buf[:, 1]), buf[:, 2]
+        )
+        self.n_adaptations += 1
+
+    def _adapt_decode(self) -> None:
+        self._since_d = 0
+        buf = np.stack(self._buf_d[-self.replay_window:])
+        self.decode_model.continue_fit(buf[:, :3], buf[:, 3], n_more=25)
+        self.n_adaptations += 1
+
+    def flush_adaptation(self) -> None:
+        """Force a fine-tune on whatever is buffered (end-of-window)."""
+        if self._buf_p and self._since_p:
+            self._adapt_prefill()
+        if self._buf_d and self._since_d:
+            self._adapt_decode()
+
+    # ------------------------------------------------------------------
+    def mae(
+        self,
+        phase: str,
+        oracle: Callable[..., float],
+        samples: np.ndarray,
+    ) -> float:
+        """Mean-absolute-error against an oracle on given feature rows."""
+        if phase == "prefill":
+            pred = self.predict_prefill(samples[:, 0], samples[:, 1])
+            true = np.array(
+                [oracle(int(t), float(f)) for f, t in samples]
+            )
+        else:
+            pred = self.predict_decode(
+                samples[:, 0], samples[:, 1], samples[:, 2]
+            )
+            true = np.array(
+                [oracle(int(q), int(k), float(f)) for f, q, k in samples]
+            )
+        return float(np.abs(pred - true).mean())

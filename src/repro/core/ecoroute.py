@@ -1,0 +1,157 @@
+"""EcoRoute — state-space guided decode routing (paper §V-E, Alg. 2).
+
+Each decode instance's operating condition is a point in the
+``(N_req, N_kv)`` state space; EcoFreq maps that point (plus the ITL SLO)
+to a frequency, and MXU/GEMM tile boundaries carve the space into
+frequency regions with "cliffs" (Fig. 13). Routing a request moves an
+instance through this space, so EcoRoute runs a *what-if* pass:
+
+    F  = freq(m_i)        current frequency of each instance
+    F' = freq(m_i ⊕ r)    frequency after hypothetically adding request r
+
+* **Case ①** — some-but-not-all instances would raise frequency AND
+  ``max(F') − min(F') ≤ Δ``: pick the instance with the lowest *unchanged*
+  frequency (don't push anyone over a cliff).
+* **Case ②** — otherwise (no change / all raise / spread > Δ): round-robin
+  among the instances with the lowest *resulting* frequency ``min(F')``.
+
+The what-if EcoPred queries for all candidates batch into one call.
+Round-robin and a recency-spread prefill router live here as baselines.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import List, Optional, Protocol, Sequence
+
+import numpy as np
+
+from repro.core.ecofreq import BatchInfo, EcoFreq, SystemState
+
+
+@dataclass
+class InstanceView:
+    """Router-visible state of one decode instance (m_i)."""
+
+    idx: int
+    n_req: int
+    n_kv: int
+    has_waiting: bool = False
+    alive: bool = True
+    kv_headroom: int = 1 << 62  # tokens of KV space left
+    latency_bias_s: float = 0.0  # straggler signal from EcoPred residuals
+
+
+@dataclass
+class RouteRequest:
+    """What the router knows about the request being placed."""
+
+    prompt_len: int  # tokens entering the instance's KV cache
+
+
+class Router(Protocol):
+    def route(self, views: List[InstanceView], req: RouteRequest) -> int: ...
+
+
+# ---------------------------------------------------------------------------
+# Round-robin (SGLang default; prefill router everywhere)
+# ---------------------------------------------------------------------------
+
+
+class RoundRobinRouter:
+    def __init__(self):
+        self._rr = itertools.count()
+
+    def route(self, views: List[InstanceView], req: RouteRequest) -> int:
+        alive = [v for v in views if v.alive and v.kv_headroom >= req.prompt_len]
+        if not alive:
+            alive = [v for v in views if v.alive]
+        assert alive, "no alive instances"
+        return alive[next(self._rr) % len(alive)].idx
+
+
+# ---------------------------------------------------------------------------
+# EcoRoute (Alg. 2)
+# ---------------------------------------------------------------------------
+
+
+class EcoRoute:
+    def __init__(self, ecofreq: EcoFreq, delta: float):
+        """``delta`` is the imbalance-prevention threshold Δ (MHz)."""
+        self.ecofreq = ecofreq
+        self.delta = delta
+        self._rr = 0
+
+    # -- frequency decision for a hypothetical decode state ---------------
+    def _freqs(
+        self, states: np.ndarray, bias: Optional[np.ndarray] = None
+    ) -> np.ndarray:
+        """states: (n, 2) of (n_req, n_kv) -> chosen frequency per row.
+
+        Vectorized Alg. 1 step-3 (no waiting queue in the what-if): for
+        every (instance, frequency-option) pair predict T_D and take the
+        lowest option meeting the ITL SLO. ``bias`` adds a per-row latency
+        offset (straggler signal from EcoPred residuals).
+        """
+        opts = np.asarray(self.ecofreq.freq_options)
+        n = states.shape[0]
+        ff = np.repeat(opts[None, :], n, axis=0)  # (n, k)
+        qq = np.repeat(states[:, 0:1], len(opts), axis=1)
+        kk = np.repeat(states[:, 1:2], len(opts), axis=1)
+        t = self.ecofreq.predictor.predict_decode(
+            ff.ravel(), qq.ravel(), kk.ravel()
+        ).reshape(n, len(opts))
+        if bias is not None:
+            t = t + bias[:, None]
+        ok = t <= self.ecofreq.slo_itl_s
+        # first qualifying option; none -> max
+        first = np.where(ok.any(axis=1), ok.argmax(axis=1), len(opts) - 1)
+        return opts[first]
+
+    def route(self, views: List[InstanceView], req: RouteRequest) -> int:
+        cands = [
+            v for v in views if v.alive and v.kv_headroom >= req.prompt_len
+        ]
+        if not cands:
+            cands = [v for v in views if v.alive]
+        assert cands, "no alive decode instances"
+        cur = np.array([[v.n_req, v.n_kv] for v in cands], float)
+        hyp = cur + np.array([[1.0, float(req.prompt_len)]])
+        bias = np.array([v.latency_bias_s for v in cands] * 2)
+        # one batched EcoPred pass for current + hypothetical states
+        both = self._freqs(np.concatenate([cur, hyp], axis=0), bias)
+        f_cur, f_hyp = both[: len(cands)], both[len(cands):]
+
+        raised = f_hyp > f_cur
+        spread = float(f_hyp.max() - f_hyp.min())
+        if raised.any() and not raised.all() and spread <= self.delta:
+            # case ① — lowest *unchanged* frequency
+            unchanged = np.flatnonzero(~raised)
+            j = unchanged[np.argmin(f_cur[unchanged])]
+            return cands[int(j)].idx
+        # case ② — round-robin among argmin resulting frequency
+        lo = np.flatnonzero(f_hyp == f_hyp.min())
+        j = lo[self._rr % len(lo)]
+        self._rr += 1
+        return cands[int(j)].idx
+
+
+# ---------------------------------------------------------------------------
+# Failure-aware wrapper (fleet substrate, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+class FaultTolerantRouter:
+    """Drops dead instances from the candidate set; if the chosen instance
+    died between heartbeat and dispatch, falls back to any alive one."""
+
+    def __init__(self, inner: Router):
+        self.inner = inner
+
+    def route(self, views: List[InstanceView], req: RouteRequest) -> int:
+        alive = [v for v in views if v.alive]
+        assert alive, "cluster has no alive instances"
+        idx = self.inner.route(alive, req)
+        if not next(v for v in views if v.idx == idx).alive:
+            idx = alive[0].idx
+        return idx

@@ -1,0 +1,382 @@
+"""Roofline-calibrated iteration latency/energy ground truth.
+
+This is the "hardware" that the serving simulator runs on and that EcoPred
+learns (the paper learns from measured GPU profiles; we derive the ground
+truth from the same analytic quantities the dry-run's
+``compiled.cost_analysis()`` reports — FLOPs and HBM bytes — plus the three
+mechanisms of :mod:`repro.core.power`).
+
+Latency model (serial composition, DESIGN.md §2):
+
+    T(f) = (T_comp + (1-mu) * T_mem) * (f_max / f)  +  mu * T_mem * g(f)
+
+* ``T_comp`` — GEMM/attention FLOPs at ``peak_flops * gemm_eff``, with the
+  **MXU tile-quantization staircase**: the GEMM M-dim (batched tokens for
+  prefill, batched requests for decode) is padded to a multiple of
+  ``chip.mxu_tile`` before the FLOP count, which produces the paper's Fig. 6
+  "staircase" discontinuities exactly (a 1-request overflow launches a whole
+  new tile row).
+* ``T_mem`` — weight + KV/SSM-state + activation HBM traffic at
+  ``hbm_bw * mem_eff``; a fraction ``mu`` is truly DRAM-bound
+  (frequency-independent above the memory knee, slowed by ``g(f) >= 1``
+  below it), the rest rides the core clock (L2/NoC/issue).
+* The TDP wall throttles the *effective* frequency before any of this
+  (prefill at high f runs at the throttled clock, paper Fig. 5a).
+
+The serial (non-overlapped) composition with the calibrated ``gemm_eff`` /
+``mem_eff`` reproduces the paper's anchors: decode 1005->1410 MHz on A100
+gives ITL x0.8 at energy x1.5; theta_prefill ~ 0.97, theta_decode ~ 0.62.
+
+Everything here is a pure function of ``(ModelConfig, ChipSpec, phase
+state, frequency)`` — no JAX, no device state — so the control plane can
+query it thousands of times per simulated second.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.core import power as P
+from repro.core.power import ChipSpec
+
+BF16 = 2  # bytes
+F32 = 4
+
+
+# ---------------------------------------------------------------------------
+# Analytic per-iteration work accounting
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class IterWork:
+    """FLOPs / bytes of one engine iteration (one forward of the batch)."""
+
+    flops: float  # useful FLOPs (model-level, no padding)
+    useful_flops: float  # == flops (kept for API compat)
+    hbm_bytes: float  # weight + state + activation traffic
+    gemm_m: int  # the GEMM M-dim (staircase-relevant)
+    pad_flops: float = 0.0  # MXU tile-padding FLOPs (staircase waste)
+
+    def __add__(self, o: "IterWork") -> "IterWork":
+        return IterWork(
+            self.flops + o.flops,
+            self.useful_flops + o.useful_flops,
+            self.hbm_bytes + o.hbm_bytes,
+            max(self.gemm_m, o.gemm_m),
+            self.pad_flops + o.pad_flops,
+        )
+
+
+def _pad_up(n: int, tile: int) -> int:
+    return max(tile, ((n + tile - 1) // tile) * tile)
+
+
+@lru_cache(maxsize=None)
+def _body_params(cfg: ModelConfig) -> tuple:
+    """(total_body, active_body, expert_params_per_layer*n_moe, n_moe_layers,
+    attn_kv_bytes_per_token, mamba_state_bytes_per_req, non_moe_body)."""
+    per_block_total = sum(cfg._layer_params(s)[0] for s in cfg.block_pattern)
+    per_block_active = sum(cfg._layer_params(s)[1] for s in cfg.block_pattern)
+    total = per_block_total * cfg.n_blocks
+    active = per_block_active * cfg.n_blocks
+
+    n_moe_layers = (
+        sum(1 for s in cfg.block_pattern if s.ffn == "moe") * cfg.n_blocks
+    )
+    expert_params = (
+        3 * cfg.d_model * cfg.moe.d_ff_expert if cfg.moe is not None else 0
+    )
+    # KV bytes appended per token (all attention layers, K+V); int8 cache
+    # stores 1 B/elem plus per-(position, head) fp32 scales
+    if cfg.kv_dtype == "int8":
+        kv_bytes_tok = (
+            2 * cfg.kv_dim + 2 * cfg.n_kv_heads * F32
+        ) * cfg.n_attn_layers
+    else:
+        kv_bytes_tok = 2 * cfg.kv_dim * cfg.n_attn_layers * BF16
+    # recurrent state bytes per request (SSM fp32 state + conv tail)
+    state_bytes_req = 0
+    if cfg.has_mamba:
+        m = cfg.mamba
+        n_mamba = (
+            sum(1 for s in cfg.block_pattern if s.mixer == "mamba")
+            * cfg.n_blocks
+        )
+        ssm = m.n_heads(cfg.d_model) * m.head_dim * m.d_state * F32
+        conv = (m.d_inner(cfg.d_model) + 2 * m.d_state) * (m.d_conv - 1) * BF16
+        state_bytes_req = n_mamba * (ssm + conv)
+    non_moe = total - n_moe_layers * (
+        cfg.moe.num_experts * expert_params if cfg.moe else 0
+    )
+    return (total, active, expert_params, n_moe_layers, kv_bytes_tok,
+            state_bytes_req, non_moe)
+
+
+def _experts_touched(cfg: ModelConfig, n_tokens: int) -> float:
+    """Expected number of distinct experts hit by ``n_tokens`` top-k draws.
+
+    Coupon-collector expectation under uniform routing:
+    E[touched] = E * (1 - (1 - k/E)^n). Decode batches typically touch all
+    experts once n_req*k >> E; tiny batches touch ~n*k.
+    """
+    if cfg.moe is None:
+        return 0.0
+    E, k = cfg.moe.num_experts, cfg.moe.top_k
+    if n_tokens <= 0:
+        return 0.0
+    return E * (1.0 - (1.0 - k / E) ** n_tokens)
+
+
+def prefill_work(
+    cfg: ModelConfig,
+    chip: ChipSpec,
+    n_tok: int,
+    avg_ctx: Optional[float] = None,
+    tp: int = 1,
+) -> IterWork:
+    """Work of one prefill iteration over ``n_tok`` batched prompt tokens.
+
+    ``avg_ctx`` is the mean prompt length in the batch (attention is
+    quadratic in it); defaults to ``n_tok`` (single request).
+    """
+    if n_tok <= 0:
+        return IterWork(0.0, 0.0, 0.0, 0)
+    total, active, expert_p, n_moe, kv_b, st_b, non_moe = _body_params(cfg)
+    avg_ctx = float(avg_ctx if avg_ctx is not None else n_tok)
+
+    # GEMM flops: 2 * active params/token * tokens; M-dim tile padding is
+    # tracked separately (it only costs time when compute-limited)
+    m_pad = _pad_up(n_tok, chip.mxu_tile)
+    gemm_useful = 2.0 * active * n_tok
+    gemm_pad = 2.0 * active * (m_pad - n_tok)
+    # attention: 4*Hq*Dh per (q,k) pair, causal avg ctx/2; windows clip it
+    attn = 0.0
+    for s in cfg.block_pattern:
+        if s.mixer != "attn":
+            continue
+        span = avg_ctx / 2.0
+        if s.window is not None:
+            span = min(span, float(s.window))
+        attn += 4.0 * cfg.q_dim * span * n_tok * cfg.n_blocks
+    # mamba SSD: ~10 * d_inner * d_state flops/token/layer (intra+inter chunk)
+    ssd = 0.0
+    if cfg.has_mamba:
+        m = cfg.mamba
+        n_mamba = (
+            sum(1 for s in cfg.block_pattern if s.mixer == "mamba")
+            * cfg.n_blocks
+        )
+        ssd = 10.0 * m.d_inner(cfg.d_model) * m.d_state * n_tok * n_mamba
+
+    # bytes: weights (touched experts only) + activations + KV write
+    touched = _experts_touched(cfg, n_tok)
+    w_itemsize = 1.02 if cfg.weight_dtype == "int8" else BF16
+    w_bytes = (non_moe + n_moe * touched * expert_p) * w_itemsize
+    act_bytes = 12.0 * cfg.d_model * n_tok * BF16  # residual stream traffic
+    kv_write = kv_b * n_tok + (st_b * (n_tok / max(avg_ctx, 1.0)))
+    flops = (gemm_useful + attn + ssd) / tp
+    return IterWork(
+        flops=flops,
+        useful_flops=flops,
+        hbm_bytes=(w_bytes + act_bytes + kv_write) / tp,
+        gemm_m=n_tok,
+        pad_flops=gemm_pad / tp,
+    )
+
+
+def decode_work(
+    cfg: ModelConfig,
+    chip: ChipSpec,
+    n_req: int,
+    n_kv: int,
+    tp: int = 1,
+) -> IterWork:
+    """Work of one decode iteration: ``n_req`` running requests, ``n_kv``
+    total tokens resident in KV cache across them."""
+    if n_req <= 0:
+        return IterWork(0.0, 0.0, 0.0, 0)
+    total, active, expert_p, n_moe, kv_b, st_b, non_moe = _body_params(cfg)
+
+    m_pad = _pad_up(n_req, chip.mxu_tile)
+    gemm_useful = 2.0 * active * n_req
+    gemm_pad = 2.0 * active * (m_pad - n_req)
+    # attention reads every cached token once per decode step.
+    # ``n_kv`` follows the paper's definition: token positions resident in
+    # the cache summed over requests (each position stores K/V per layer),
+    # so both flops and bytes multiply by the attention layer count.
+    attn = 0.0
+    if cfg.has_attention:
+        attn = 4.0 * cfg.q_dim * n_kv * cfg.n_attn_layers
+    ssd = 0.0
+    if cfg.has_mamba:
+        m = cfg.mamba
+        n_mamba = (
+            sum(1 for s in cfg.block_pattern if s.mixer == "mamba")
+            * cfg.n_blocks
+        )
+        # state update + output read: ~6 * d_inner * d_state per req/layer
+        ssd = 6.0 * m.d_inner(cfg.d_model) * m.d_state * n_req * n_mamba
+
+    touched = _experts_touched(cfg, n_req)
+    w_itemsize = 1.02 if cfg.weight_dtype == "int8" else BF16
+    w_bytes = (non_moe + n_moe * touched * expert_p) * w_itemsize
+    kv_read = kv_b * n_kv  # dtype-aware (see _body_params)
+    st_rw = 2 * st_b * n_req  # read + write recurrent state
+    act_bytes = 12.0 * cfg.d_model * n_req * BF16
+    flops = (gemm_useful + attn + ssd) / tp
+    return IterWork(
+        flops=flops,
+        useful_flops=flops,
+        hbm_bytes=(w_bytes + kv_read + st_rw + act_bytes) / tp,
+        gemm_m=n_req,
+        pad_flops=gemm_pad / tp,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Latency / power / energy at an operating point
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class IterCost:
+    time_s: float
+    power_w: float
+    energy_j: float
+    f_effective: float  # post-TDP-throttle clock
+    theta: float  # f-scalable time share (drives power utilization)
+
+
+def _raw_times(chip: ChipSpec, work: IterWork) -> tuple:
+    t_comp = work.flops / (chip.peak_flops * chip.gemm_eff)
+    t_mem = work.hbm_bytes / (chip.hbm_bw * chip.mem_eff)
+    return t_comp, t_mem
+
+
+def iter_cost(chip: ChipSpec, work: IterWork, f: float) -> IterCost:
+    """Latency + power + energy of one iteration at frequency ``f`` (MHz).
+
+    MXU tile-padding FLOPs only cost wall time to the extent the GEMM is
+    compute-limited: when memory-bound, under-filled tiles hide behind the
+    weight/KV streams. The hiding factor ``kappa = min(1, t_comp/t_mem)``
+    makes the staircase strong near full tiles at large batch (paper
+    Fig. 6) while keeping small-batch decode memory-bound with weak
+    frequency sensitivity (paper Fig. 4).
+    """
+    t_comp, t_mem = _raw_times(chip, work)
+    if t_comp + t_mem <= 0.0:
+        return IterCost(0.0, chip.p_idle, 0.0, f, 0.0)
+    kappa = min(1.0, t_comp / max(t_mem, 1e-12))
+    t_pad = kappa * work.pad_flops / (chip.peak_flops * chip.gemm_eff)
+    mu = chip.mu_dram
+    t_scal = t_comp + t_pad + (1.0 - mu) * t_mem  # core-clock-coupled
+    t_dram = mu * t_mem  # DRAM-bound
+    theta = t_scal / (t_scal + t_dram)
+    util = P.power_util(chip, theta)
+    f_eff = P.throttled_frequency(chip, f, util)
+    time_s = t_scal * (chip.f_max / f_eff) + t_dram * P.mem_slowdown(
+        chip, f_eff
+    )
+    p = P.power(chip, f_eff, util)
+    return IterCost(time_s, p, p * time_s, f_eff, theta)
+
+
+def iter_time(chip: ChipSpec, work: IterWork, f: float) -> float:
+    return iter_cost(chip, work, f).time_s
+
+
+# ---------------------------------------------------------------------------
+# Instance-level hardware model (what SimEngine + profiling query)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HardwareModel:
+    """Latency/energy oracle for one serving instance of ``cfg`` on ``chip``.
+
+    ``tp`` is the tensor-parallel degree of the instance (per-chip work and
+    weight bytes divide by it; energy multiplies back by ``tp`` chips).
+    """
+
+    cfg: ModelConfig
+    chip: ChipSpec
+    tp: int = 1
+
+    # -- phase work ---------------------------------------------------------
+    def prefill_iter(
+        self, n_tok: int, avg_ctx: Optional[float] = None, f: float = None
+    ) -> IterCost:
+        f = f if f is not None else self.chip.f_max
+        w = prefill_work(self.cfg, self.chip, n_tok, avg_ctx, self.tp)
+        c = iter_cost(self.chip, w, f)
+        return IterCost(c.time_s, c.power_w * self.tp,
+                        c.energy_j * self.tp, c.f_effective, c.theta)
+
+    def decode_iter(self, n_req: int, n_kv: int, f: float = None) -> IterCost:
+        f = f if f is not None else self.chip.f_max
+        w = decode_work(self.cfg, self.chip, n_req, n_kv, self.tp)
+        c = iter_cost(self.chip, w, f)
+        return IterCost(c.time_s, c.power_w * self.tp,
+                        c.energy_j * self.tp, c.f_effective, c.theta)
+
+    # -- convenience for EcoPred ground truth -------------------------------
+    def prefill_time(self, n_tok: int, f: float,
+                     avg_ctx: Optional[float] = None) -> float:
+        return self.prefill_iter(n_tok, avg_ctx, f).time_s
+
+    def decode_time(self, n_req: int, n_kv: int, f: float) -> float:
+        return self.decode_iter(n_req, n_kv, f).time_s
+
+    def idle_power(self) -> float:
+        return self.chip.p_idle * self.tp
+
+    # -- capacity -----------------------------------------------------------
+    def kv_bytes_per_token(self) -> float:
+        return _body_params(self.cfg)[4]
+
+    def state_bytes_per_request(self) -> float:
+        return _body_params(self.cfg)[5]
+
+    def kv_capacity_tokens(self, reserve_frac: float = 0.35) -> int:
+        """KV tokens that fit in HBM after weights + activation reserve."""
+        total, *_ = _body_params(self.cfg)
+        emb = self.cfg.vocab_size * self.cfg.d_model * (
+            1 if self.cfg.tie_embeddings else 2
+        )
+        w = (total + emb) * BF16 / self.tp
+        free = self.chip.hbm_bytes * (1 - reserve_frac) - w
+        per_tok = max(self.kv_bytes_per_token() / self.tp, 1.0)
+        return max(0, int(free / per_tok))
+
+
+# ---------------------------------------------------------------------------
+# U-curve / staircase sweeps (used by benchmarks + offline profiling)
+# ---------------------------------------------------------------------------
+
+
+def energy_frequency_curve(
+    hw: HardwareModel, phase: str, n_grid: int = 40, **state
+):
+    """[(f, time_s, energy_j)] across the chip's frequency range.
+
+    ``state``: prefill -> n_tok (and optional avg_ctx); decode -> n_req, n_kv.
+    """
+    out = []
+    for f in hw.chip.freq_grid(n_grid):
+        c = (
+            hw.prefill_iter(state["n_tok"], state.get("avg_ctx"), f)
+            if phase == "prefill"
+            else hw.decode_iter(state["n_req"], state["n_kv"], f)
+        )
+        out.append((f, c.time_s, c.energy_j))
+    return out
+
+
+def sweet_spot(hw: HardwareModel, phase: str, **state) -> float:
+    """argmin-energy frequency (the paper's 'sweet spot')."""
+    curve = energy_frequency_curve(hw, phase, n_grid=80, **state)
+    return min(curve, key=lambda r: r[2])[0]

@@ -1,0 +1,60 @@
+"""Decode state-space analysis utilities (paper Fig. 13).
+
+The decode instance's state is ``(N_req, N_kv)``; EcoFreq + the ITL SLO
+induce a frequency field over this plane whose discontinuities along
+``N_req`` are the tile-quantization "cliffs". These helpers rasterize the
+field (for the Fig. 13 benchmark and EcoRoute analysis) and locate the
+cliff boundaries.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.ecofreq import BatchInfo, EcoFreq, SystemState
+from repro.core.power import ChipSpec
+
+
+def tile_boundaries(chip: ChipSpec, max_req: int) -> List[int]:
+    """GEMM M-dim tile multiples in [1, max_req] (staircase cliffs)."""
+    t = chip.mxu_tile
+    return list(range(t, max_req + 1, t))
+
+
+def frequency_field(
+    ecofreq: EcoFreq,
+    n_req_grid: Sequence[int],
+    n_kv_grid: Sequence[int],
+) -> np.ndarray:
+    """Chosen frequency at every (n_req, n_kv) grid point.
+
+    Returns (len(n_req_grid), len(n_kv_grid)) array of frequencies (MHz).
+    """
+    state = SystemState(has_waiting=False)
+    out = np.empty((len(n_req_grid), len(n_kv_grid)))
+    for i, q in enumerate(n_req_grid):
+        for j, k in enumerate(n_kv_grid):
+            out[i, j] = ecofreq.select(
+                state, BatchInfo(phase="decode", n_req=int(q), n_kv=int(k))
+            )
+    return out
+
+
+def frequency_cliffs(
+    ecofreq: EcoFreq, n_kv: int, max_req: int
+) -> List[Tuple[int, float, float]]:
+    """(n_req, f_before, f_after) where the chosen frequency jumps as
+    ``N_req`` crosses a boundary at fixed ``n_kv``."""
+    state = SystemState(has_waiting=False)
+    cliffs = []
+    prev = None
+    for q in range(1, max_req + 1):
+        f = ecofreq.select(
+            state, BatchInfo(phase="decode", n_req=q, n_kv=n_kv)
+        )
+        if prev is not None and f != prev:
+            cliffs.append((q, prev, f))
+        prev = f
+    return cliffs

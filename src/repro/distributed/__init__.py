@@ -1,0 +1,15 @@
+from repro.distributed.context import (  # noqa: F401
+    active_axes,
+    expert_pspec,
+    has_axis,
+    mesh_context,
+)
+from repro.distributed.hloanalysis import CollectiveStats, collective_bytes  # noqa: F401
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingPolicy,
+    batch_pspec,
+    cache_pspecs,
+    default_policy,
+    named,
+    param_pspecs,
+)

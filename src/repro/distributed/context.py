@@ -1,0 +1,63 @@
+"""Mesh context for mesh-agnostic model code.
+
+Model layers never import mesh objects; they consult this context for
+optional sharding constraints (e.g. the MoE expert-parallel dispatch
+buffer). Launch code enters :func:`mesh_context`; outside any mesh the
+helpers return ``None`` and the model lowers unconstrained (single-device
+tests, RealEngine).
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+_ACTIVE: ContextVar[Optional[dict]] = ContextVar(
+    "repro_mesh_axes", default=None
+)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    """Enter a physical mesh + advertise its axis names/sizes to model code."""
+    token = _ACTIVE.set(dict(zip(mesh.axis_names, mesh.devices.shape)))
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _ACTIVE.reset(token)
+
+
+def active_axes() -> Optional[Tuple[str, ...]]:
+    d = _ACTIVE.get()
+    return tuple(d) if d is not None else None
+
+
+def has_axis(name: str) -> bool:
+    d = _ACTIVE.get()
+    return d is not None and name in d
+
+
+def axis_size(name: str) -> int:
+    d = _ACTIVE.get()
+    return d.get(name, 1) if d is not None else 1
+
+
+def expert_pspec() -> Optional[P]:
+    """Sharding for the (E, C, d) MoE dispatch buffer (EP over "model")."""
+    return P("model", None, None) if has_axis("model") else None
+
+
+def ssd_head_pspec(n_heads: int) -> Optional[P]:
+    """Sharding for SSD activations (B, S, H, P): heads over "model".
+
+    The SSD intra-chunk decay is (L, L) *per head*, so head-sharding is
+    what keeps the chunked scan's working set per device bounded
+    (DESIGN.md §4). Falls back to None when heads don't divide.
+    """
+    if has_axis("model") and n_heads % axis_size("model") == 0:
+        return P(None, None, "model", None)
+    return None

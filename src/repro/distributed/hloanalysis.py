@@ -1,0 +1,189 @@
+"""Collective-traffic extraction from compiled (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but not
+inter-chip traffic, so the roofline's third term comes from parsing the
+HLO. Two subtleties:
+
+1. **Loop scaling.** XLA prints a ``while`` body once; a collective inside
+   the block-scan executes ``n_blocks`` times per step. The parser splits
+   the module into computations, finds every ``while`` call, reads the
+   trip count out of the loop-condition computation (the ``constant(N)``
+   the induction variable is compared against), and multiplies nested
+   body traffic accordingly.
+
+2. **Wire factors.** Estimated per-device wire volume per op:
+   all-gather ≈ result bytes (what a device must receive); all-reduce ≈
+   2× (ring reduce-scatter + all-gather); reduce-scatter / all-to-all /
+   collective-permute ≈ result bytes once. A consistent estimator for
+   comparing sharding variants — absolute ICI seconds carry this caveat
+   in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_WIRE_FACTOR = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# computation header: "%name (args...) -> type {" or "ENTRY %name ... {".
+# Args/return types may contain nested parens (tuple types), so only the
+# leading name token is parsed.
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)\s*,\s*condition=%?([\w\.\-]+)\s*,\s*body=%?([\w\.\-]+)"
+)
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(seg: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(seg):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Computation:
+    name: str
+    is_entry: bool = False
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, int] = field(default_factory=dict)
+    whiles: List[Tuple[str, str]] = field(default_factory=list)  # (cond, body)
+    max_const: int = 1  # largest int constant (trip-count heuristic)
+
+
+def _split_computations(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        m = (
+            _COMP_RE.match(line)
+            if (not line.startswith(" ") and line.endswith("{"))
+            else None
+        )
+        if m:
+            cur = _Computation(m.group(2), is_entry=bool(m.group(1)))
+            comps[cur.name] = cur
+            continue
+        if cur is None or not s or s == "}":
+            if s == "}" and not line.startswith(" "):
+                cur = None
+            continue
+        if "=" in s:
+            _, _, rhs = s.partition("=")
+            wm = _WHILE_RE.search(rhs)
+            if wm:
+                cur.whiles.append((wm.group(1), wm.group(2)))
+            else:
+                for op in _COLLECTIVES:
+                    if re.search(rf"(^|\s){op}(-start)?\(", rhs):
+                        b = _shape_bytes(rhs.split(op)[0])
+                        cur.coll_bytes[op] = cur.coll_bytes.get(op, 0.0) + \
+                            b * _WIRE_FACTOR[op]
+                        cur.coll_counts[op] = cur.coll_counts.get(op, 0) + 1
+                        break
+            for c in _CONST_RE.findall(s):
+                cur.max_const = max(cur.max_const, int(c))
+    return comps
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, float] = field(default_factory=dict)
+    count_by_op: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+    def summary(self) -> Dict[str, float]:
+        out = {f"{k}_GB": round(v / 1e9, 4) for k, v in
+               sorted(self.bytes_by_op.items())}
+        out["total_GB"] = round(self.total_bytes / 1e9, 4)
+        return out
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Per-device estimated wire bytes, with while-trip scaling."""
+    comps = _split_computations(hlo_text)
+
+    def trip_count(cond_name: str) -> int:
+        cond = comps.get(cond_name)
+        return max(1, cond.max_const) if cond else 1
+
+    memo: Dict[str, Tuple[Dict[str, float], Dict[str, int]]] = {}
+
+    def total(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None or depth > 32:
+            return {}, {}
+        by = dict(c.coll_bytes)
+        cnt = dict(c.coll_counts)
+        for cond, body in c.whiles:
+            t = trip_count(cond)
+            bby, bcnt = total(body, depth + 1)
+            for op, v in bby.items():
+                by[op] = by.get(op, 0.0) + v * t
+            for op, v in bcnt.items():
+                cnt[op] = cnt.get(op, 0) + v * t
+        memo[name] = (by, cnt)
+        return memo[name]
+
+    entry = next(
+        (c.name for c in comps.values() if c.is_entry),
+        None,
+    )
+    if entry is None:
+        # fall back: flat sum, no scaling
+        by, cnt = defaultdict(float), defaultdict(int)
+        for c in comps.values():
+            for op, v in c.coll_bytes.items():
+                by[op] += v
+            for op, v in c.coll_counts.items():
+                cnt[op] += v
+        return CollectiveStats(dict(by), dict(cnt))
+    by, cnt = total(entry)
+    return CollectiveStats(by, cnt)
+
+
+def collective_bytes_flat(hlo_text: str) -> CollectiveStats:
+    """Unscaled (body-once) traffic — what a naive pass would report."""
+    comps = _split_computations(hlo_text)
+    by: Dict[str, float] = defaultdict(float)
+    cnt: Dict[str, int] = defaultdict(int)
+    for c in comps.values():
+        for op, v in c.coll_bytes.items():
+            by[op] += v
+        for op, v in c.coll_counts.items():
+            cnt[op] += v
+    return CollectiveStats(dict(by), dict(cnt))

@@ -1,0 +1,343 @@
+"""Divisibility- and capacity-aware sharding rules (logical → PartitionSpec).
+
+Every (arch × shape × mesh) dry-run cell must compile, so the rules never
+assume a dimension divides the mesh: each parameter leaf has a *preferred*
+layout (which dim goes on "model", which may additionally go on the DP
+axes for FSDP-style 2D sharding), and any non-divisible dim falls back to
+replication. Capacity-awareness: leaves bigger than ``fsdp_threshold``
+bytes per model-shard also shard their second dim over the DP axes — this
+is what lets the 100B+ archs fit 16 GB/chip, at the cost of gather traffic
+the roofline table then exposes (a deliberate perf-iteration target).
+
+Batch/activation rules:
+* tokens/labels (B, S): batch over DP axes ("pod","data"), seq replicated.
+* decode KV cache (n, B, C, Hkv, Dh): batch over DP axes, cache length C
+  over "model" (sequence-parallel flash-decode — Hkv is often smaller than
+  the model axis, e.g. 8 kv heads on a 16-way axis, so head-sharding is a
+  non-starter; XLA inserts the softmax partial-reduce collectives).
+* long-context (batch=1): batch unshardable; C shards over ("data","model")
+  so the 524288-token cache spreads over all 256 chips.
+* SSM state (n, B, H, P, N): batch over DP, heads over "model".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _axsize(mesh_shape: dict, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh_shape.get(axes, 1)
+    n = 1
+    for a in axes:
+        n *= mesh_shape.get(a, 1)
+    return n
+
+
+def _fits(dim: int, mesh_shape: dict, axes) -> bool:
+    n = _axsize(mesh_shape, axes)
+    return n > 1 and dim % n == 0
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    """Tunable knobs of the rule engine (perf-iteration surface).
+
+    ``mode``:
+    * "tp" (baseline) — Megatron tensor parallelism on the model axis:
+      weights sharded on a compute dim, activations replicated across the
+      model axis, per-sublayer activation all-reduces.
+    * "fsdp_sp" (perf iteration) — sequence parallelism on the model axis
+      + fully-sharded weights: activations shard their token/seq dim over
+      "model"; weight shards are flat over (dp × model) and all-gathered
+      per layer (wire = params-bytes per pass instead of 3×-activations
+      per sublayer — a large win whenever tokens ≫ params/layer).
+      MoE experts stay on "model" (EP).
+    """
+
+    dp_axes: Tuple[str, ...] = ("data",)  # ("pod","data") multi-pod
+    model_axis: str = "model"
+    mode: str = "tp"
+    # leaves whose per-model-shard bytes exceed this also shard a second
+    # dim over dp_axes (FSDP / ZeRO-3 style weight sharding)
+    fsdp_threshold: int = 64 * 1024 * 1024
+    # shard decode cache length over "model" (sequence-parallel decode)
+    cache_seq_over_model: bool = True
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+# (model_dim, fsdp_dim): preferred dims (offset by +1 for stacked block
+# leaves) to place on the model axis / the DP axes when FSDP kicks in.
+_PARAM_RULES = {
+    # embed: vocab over model ONLY — 2D-sharding the table turns every
+    # token-gather into an SPMD "involuntary full rematerialization"
+    # (replicate-then-reshard), observed as a multi-GB temp blowup.
+    "embed": (0, None),
+    "lm_head": (1, 0),  # vocab on model
+    "wq": (1, 0),
+    "wk": (1, 0),
+    "wv": (1, 0),
+    "wo": (0, 1),
+    "w_gate": (1, 0),  # also matches MoE (E, d, ffe) via special-case below
+    "w_in": (1, 0),
+    "w_out": (0, 1),
+    "router": (None, None),
+    "in_proj": (1, 0),  # mamba
+    "conv_w": (0, None),
+    "out_proj": (0, 1),
+    "gnorm": (None, None),
+    "norm": (None, None),
+    "q_norm": (None, None),
+    "k_norm": (None, None),
+    "final_norm": (None, None),
+    "A_log": (None, None),
+    "dt_bias": (None, None),
+    "D": (None, None),
+}
+
+
+def _leaf_spec(
+    path: Tuple[str, ...],
+    shape: Tuple[int, ...],
+    dtype,
+    mesh_shape: dict,
+    pol: ShardingPolicy,
+) -> P:
+    name = path[-1]
+    if name == "sc":  # int8 weight scales: tiny, replicated
+        return P(*([None] * len(shape)))
+    if name == "q8":  # quantized weight: rules of the parent leaf
+        name = path[-2]
+        path = path[:-1]
+    stacked = "blocks" in path  # leading n_blocks axis from the scan stack
+    off = 1 if stacked else 0
+    ndim = len(shape)
+    spec: list = [None] * ndim
+
+    is_moe = name in ("w_gate", "w_in", "w_out") and ndim - off == 3
+    if is_moe:
+        # (E, d, ffe) / (E, ffe, d): experts on model; inner dim on dp if big
+        mdim, fdim = off + 0, off + 2
+    else:
+        rule = _PARAM_RULES.get(name)
+        if rule is None or rule[0] is None:
+            mdim = fdim = None
+        else:
+            mdim = off + rule[0] if rule[0] is not None else None
+            fdim = off + rule[1] if rule[1] is not None else None
+
+    if pol.mode == "fsdp_sp" and not (is_moe and name != "router"):
+        # flat weight sharding: the preferred dim takes (dp × model); the
+        # compute gathers weights per layer (SP activations are sharded on
+        # tokens instead). Fall back to progressively smaller axis sets.
+        if mdim is not None and mdim < ndim:
+            for axes in (
+                (*pol.dp_axes, pol.model_axis),
+                (pol.model_axis,),
+                pol.dp_axes,
+            ):
+                if _fits(shape[mdim], mesh_shape, axes):
+                    spec[mdim] = axes if len(axes) > 1 else axes[0]
+                    break
+        return P(*spec)
+
+    model_sharded = False
+    if mdim is not None and mdim < ndim and _fits(
+        shape[mdim], mesh_shape, pol.model_axis
+    ):
+        spec[mdim] = pol.model_axis
+        model_sharded = True
+    # capacity-aware second-dim sharding. Stacked block leaves are scanned
+    # one block at a time, so the live working set is a single slice.
+    itemsize = np.dtype(dtype).itemsize
+    n_elems = float(np.prod(shape)) / (shape[0] if stacked else 1)
+    per_model_shard = n_elems * itemsize / (
+        _axsize(mesh_shape, pol.model_axis) if model_sharded else 1
+    )
+    if (
+        fdim is not None
+        and fdim < ndim
+        and fdim != mdim
+        and spec[fdim] is None
+        and per_model_shard > pol.fsdp_threshold
+        and _fits(shape[fdim], mesh_shape, pol.dp_axes)
+    ):
+        spec[fdim] = pol.dp_axes
+    return P(*spec)
+
+
+def param_pspecs(
+    cfg: ModelConfig,
+    param_tree: PyTree,  # pytree of ShapeDtypeStruct (or arrays)
+    mesh: Mesh,
+    pol: Optional[ShardingPolicy] = None,
+) -> PyTree:
+    """PartitionSpec pytree mirroring ``param_tree``."""
+    pol = pol or default_policy(mesh)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def visit(path, leaf):
+        keys = tuple(
+            getattr(p, "key", getattr(p, "name", str(p))) for p in path
+        )
+        return _leaf_spec(keys, leaf.shape, leaf.dtype, mesh_shape, pol)
+
+    return jax.tree_util.tree_map_with_path(visit, param_tree)
+
+
+def default_policy(mesh: Mesh) -> ShardingPolicy:
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return ShardingPolicy(dp_axes=dp or ("data",))
+
+
+# ---------------------------------------------------------------------------
+# batch / activation / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_pspec(batch: int, mesh: Mesh, ndim: int = 2,
+                pol: Optional[ShardingPolicy] = None,
+                seq_len: int = 0) -> P:
+    """Tokens/labels (B, S, ...): B over DP axes when divisible. In
+    "fsdp_sp" mode the sequence dim additionally shards over "model"."""
+    pol = pol or default_policy(mesh)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rest = [None] * (ndim - 1)
+    if (
+        pol.mode == "fsdp_sp"
+        and ndim >= 2
+        and seq_len
+        and _fits(seq_len, mesh_shape, pol.model_axis)
+    ):
+        rest[0] = pol.model_axis
+    if _fits(batch, mesh_shape, pol.dp_axes):
+        return P(pol.dp_axes, *rest)
+    # try a prefix of the dp axes (e.g. batch 1-of-32: replicate)
+    for k in range(len(pol.dp_axes) - 1, 0, -1):
+        if _fits(batch, mesh_shape, pol.dp_axes[:k]):
+            return P(pol.dp_axes[:k], *rest)
+    return P(None, *rest)
+
+
+def cache_pspecs(
+    cfg: ModelConfig,
+    cache_tree: PyTree,  # pytree of ShapeDtypeStruct
+    mesh: Mesh,
+    pol: Optional[ShardingPolicy] = None,
+) -> PyTree:
+    """Decode-cache sharding: DP on batch; cache-seq (or SSM heads) on model.
+
+    When the batch axis cannot shard (long_500k's batch=1), the cache
+    length takes *both* the DP and model axes so the half-million-token
+    cache spreads across the full pod.
+    """
+    pol = pol or default_policy(mesh)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def visit(path, leaf):
+        keys = tuple(
+            getattr(p, "key", getattr(p, "name", str(p))) for p in path
+        )
+        name = keys[-1]
+        shape = leaf.shape
+        if name in ("k", "v"):  # (n, B, C, Hkv, Dh)
+            _, B, C, _, _ = shape
+            b_ax = pol.dp_axes if _fits(B, mesh_shape, pol.dp_axes) else None
+            if b_ax is None:
+                seq = tuple(
+                    a for a in (*pol.dp_axes, pol.model_axis)
+                    if _fits(C, mesh_shape, (a,))
+                )
+                # C over everything available (data+model)
+                if seq and _fits(C, mesh_shape, seq):
+                    return P(None, None, seq, None, None)
+                return P(None, None, None, None, None)
+            c_ax = (
+                pol.model_axis
+                if pol.cache_seq_over_model
+                and _fits(C, mesh_shape, pol.model_axis)
+                else None
+            )
+            return P(None, b_ax, c_ax, None, None)
+        if name in ("k_sc", "v_sc"):  # int8 cache scales (n, B, C, H)
+            _, B, C, _ = shape
+            b_ax = pol.dp_axes if _fits(B, mesh_shape, pol.dp_axes) else None
+            if b_ax is None:
+                seq = tuple(
+                    a for a in (*pol.dp_axes, pol.model_axis)
+                    if _fits(C, mesh_shape, (a,))
+                )
+                if seq and _fits(C, mesh_shape, seq):
+                    return P(None, None, seq, None)
+                return P(None, None, None, None)
+            c_ax = (
+                pol.model_axis
+                if pol.cache_seq_over_model
+                and _fits(C, mesh_shape, pol.model_axis)
+                else None
+            )
+            return P(None, b_ax, c_ax, None)
+        if name == "pos":  # (n, B, C)
+            _, B, C = shape
+            b_ax = pol.dp_axes if _fits(B, mesh_shape, pol.dp_axes) else None
+            if b_ax is None:
+                seq = tuple(
+                    a for a in (*pol.dp_axes, pol.model_axis)
+                    if _fits(C, mesh_shape, (a,))
+                )
+                if seq and _fits(C, mesh_shape, seq):
+                    return P(None, None, seq)
+                return P(None, None, None)
+            c_ax = (
+                pol.model_axis
+                if pol.cache_seq_over_model
+                and _fits(C, mesh_shape, pol.model_axis)
+                else None
+            )
+            return P(None, b_ax, c_ax)
+        if name == "ssm":  # (n, B, H, P, N)
+            _, B, H, _, _ = shape
+            b_ax = pol.dp_axes if _fits(B, mesh_shape, pol.dp_axes) else None
+            h_ax = (
+                pol.model_axis
+                if _fits(H, mesh_shape, pol.model_axis)
+                else None
+            )
+            return P(None, b_ax, h_ax, None, None)
+        if name == "conv":  # (n, B, K-1, conv_dim)
+            _, B, _, D = shape
+            b_ax = pol.dp_axes if _fits(B, mesh_shape, pol.dp_axes) else None
+            d_ax = (
+                pol.model_axis
+                if _fits(D, mesh_shape, pol.model_axis)
+                else None
+            )
+            return P(None, b_ax, None, d_ax)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(visit, cache_tree)
+
+
+def named(tree_of_pspecs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,148 @@
+"""Pallas TPU flash-decode kernel: one query token per sequence against a
+(ring-buffer) KV cache, GQA-aware.
+
+The decode phase is the paper's primary energy lever (memory-bound,
+``beta < 1``), and its GEMM M-dim is the *request batch* — the axis whose
+MXU tile quantization produces the Fig. 6 staircase. This kernel keeps the
+decode hot loop in one fused pass so the only HBM traffic is the cache
+read itself (the roofline's ``T_mem`` term).
+
+Grid: ``(batch, kv_head, cache_blocks)`` with the cache dimension
+innermost; online-softmax state for the G grouped query heads lives in
+VMEM scratch across cache blocks. Slot validity (ring buffer ⇒ arbitrary
+position-per-slot) is a masked compare against the per-slot position
+array; empty slots carry position -1.
+
+Block shape: ``(G, block_c)`` score tiles with ``block_c`` a multiple of
+128 (lane-aligned); ``Dh`` is the MXU K-dim (128 on every assigned arch).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    q_ref,  # (1, 1, G, Dh)
+    k_ref,  # (1, 1, block_c, Dh)
+    v_ref,  # (1, 1, block_c, Dh)
+    pos_ref,  # (1, block_c) int32 slot positions (-1 empty)
+    qpos_ref,  # (1, 1) int32 query position
+    o_ref,  # (1, 1, G, Dh)
+    m_scr,  # VMEM (G,) f32
+    l_scr,  # VMEM (G,) f32
+    acc_scr,  # VMEM (G, Dh) f32
+    *,
+    window: Optional[int],
+    softcap: Optional[float],
+    num_c_blocks: int,
+    scale: float,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, Dh)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bc, Dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+    slot_pos = pos_ref[0]  # (bc,) int32
+    q_pos = qpos_ref[0, 0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (G, bc)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    valid = (slot_pos >= 0) & (slot_pos <= q_pos)
+    if window is not None:
+        valid &= q_pos - slot_pos < window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(ci == num_c_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-37)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "block_c", "interpret"),
+)
+def decode_attention(
+    q: jax.Array,  # (B, Hq, Dh)
+    k_cache: jax.Array,  # (B, C, Hkv, Dh)
+    v_cache: jax.Array,  # (B, C, Hkv, Dh)
+    slot_pos: jax.Array,  # (B, C) int32
+    q_pos: jax.Array,  # (B,) int32
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_c: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, C, Hkv, Dh = k_cache.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    block_c = min(block_c, C)
+    assert C % block_c == 0, (C, block_c)
+    nc = C // block_c
+    scale = 1.0 / math.sqrt(Dh)
+
+    qg = q.reshape(B, Hkv, G, Dh)
+    kt = k_cache.transpose(0, 2, 1, 3)  # (B, Hkv, C, Dh)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    qp = q_pos.reshape(B, 1).astype(jnp.int32)
+
+    kernel = functools.partial(
+        _decode_kernel,
+        window=window,
+        softcap=softcap,
+        num_c_blocks=nc,
+        scale=scale,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, ci: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_c, Dh), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, block_c, Dh), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, block_c), lambda b, h, ci: (b, ci)),
+            pl.BlockSpec((1, 1), lambda b, h, ci: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, G, Dh), lambda b, h, ci: (b, h, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kt, vt, slot_pos.astype(jnp.int32), qp)
+    return out.reshape(B, Hq, Dh)

@@ -1,0 +1,29 @@
+"""Jit'd public wrapper for the flash-decode kernel (auto-interpret on CPU)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention as _kernel
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    slot_pos: jax.Array,
+    q_pos: jax.Array,
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_c: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _kernel(
+        q, k_cache, v_cache, slot_pos, q_pos,
+        window=window, softcap=softcap, block_c=block_c,
+        interpret=interpret,
+    )

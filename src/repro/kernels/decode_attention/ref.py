@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash-decode kernel."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, Hq, Dh)
+    k_cache: jax.Array,  # (B, C, Hkv, Dh)
+    v_cache: jax.Array,  # (B, C, Hkv, Dh)
+    slot_pos: jax.Array,  # (B, C) int32, -1 == empty slot
+    q_pos: jax.Array,  # (B,) int32
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Direct single-token attention over the cache (fully materialized)."""
+    B, C, Hkv, Dh = k_cache.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    qr = q.reshape(B, Hkv, G, Dh).astype(jnp.float32)
+    s = jnp.einsum(
+        "bhgd,bchd->bhgc", qr, k_cache.astype(jnp.float32)
+    ) / math.sqrt(Dh)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = (slot_pos >= 0) & (slot_pos <= q_pos[:, None])
+    if window is not None:
+        mask &= q_pos[:, None] - slot_pos < window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgc,bchd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, Dh).astype(q.dtype)

@@ -1,0 +1,152 @@
+"""Pallas TPU flash-attention (prefill) kernel.
+
+Grid layout: ``(batch, q_head, q_blocks, kv_blocks)`` with the kv dimension
+innermost — TPU executes the grid sequentially minor-to-major, so the online
+softmax state (m, l, acc) lives in VMEM scratch and is carried across kv
+steps. GQA is handled in the BlockSpec index maps (kv head = q head // G), so
+no materialized K/V expansion is needed. Block shapes keep the working set in
+VMEM and the matmul dims MXU-aligned (multiples of 128 in Skv/Dh; block_q
+rows map to MXU M-dim tiles).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, 1, block_q, Dh)
+    k_ref,  # (1, 1, block_k, Dh)
+    v_ref,  # (1, 1, block_k, Dh)
+    o_ref,  # (1, 1, block_q, Dh)
+    m_scr,  # VMEM (block_q,) f32
+    l_scr,  # VMEM (block_q,) f32
+    acc_scr,  # VMEM (block_q, Dh) f32
+    *,
+    causal: bool,
+    window: Optional[int],
+    softcap: Optional[float],
+    block_q: int,
+    block_k: int,
+    num_kv_blocks: int,
+    scale: float,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, Dh)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, Dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-37)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "block_q", "block_k", "interpret"
+    ),
+)
+def flash_attention(
+    q: jax.Array,  # (B, Sq, Hq, Dh)
+    k: jax.Array,  # (B, Skv, Hkv, Dh)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_q: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0
+    nq, nk = Sq // block_q, Skv // block_k
+    scale = 1.0 / math.sqrt(Dh)
+
+    # (B, H, S, Dh) layout for clean 2D blocks
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        block_q=block_q,
+        block_k=block_k,
+        num_kv_blocks=nk,
+        scale=scale,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, Dh), lambda b, h, qi, ki: (b, h // G, ki, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, Dh), lambda b, h, qi, ki: (b, h // G, ki, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, Dh), lambda b, h, qi, ki: (b, h, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,33 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+Selects interpret mode automatically off-TPU so tests validate the kernel
+body on CPU; on TPU the same call lowers to Mosaic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_q: int = 256,
+    block_k: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _kernel(
+        q, k, v,
+        causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )

@@ -1,0 +1,2 @@
+from repro.kernels.ssd.ops import ssd_scan  # noqa: F401
+from repro.kernels.ssd.ref import ssd_ref  # noqa: F401

@@ -1,0 +1,141 @@
+"""Pallas TPU kernel for the Mamba2 SSD (state-space duality) chunked scan.
+
+The SSD decomposition splits the linear recurrence into an intra-chunk
+quadratic part (MXU-friendly (L,L) matmuls) and an inter-chunk rank-1
+state carry. Grid: ``(batch, heads, chunks)`` with the chunk index
+innermost — TPU executes the grid minor-to-major sequentially, so the
+running state ``(P, N)`` lives in a VMEM scratch accumulator across chunk
+steps (the same carried-scratch idiom as flash attention's (m, l, acc)).
+
+Per (b, h, c) step with chunk length L:
+    a        = dt * A                       (L,)   decay log-rates
+    cum      = cumsum(a)                    (L,)
+    decay    = tril(exp(cum_i - cum_j))     (L, L)
+    y_intra  = ((C @ B^T) * decay * dt) @ x (L, P)
+    y_inter  = (C * exp(cum)) @ state^T     (L, P) carry-in contribution
+    state    = exp(cum_L) * state + x^T @ (exp(cum_L - cum) * dt * B)
+
+Block shapes: L is the SSD chunk (default 256 — lane/MXU aligned), P the
+head dim (64), N the state dim (128); the (L,L) score tile and (P,N)
+state both sit comfortably in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # (1, 1, L, P)
+    dt_ref,  # (1, 1, L)
+    a_ref,  # (1, 1) fp32 A (negative) for this head
+    b_ref,  # (1, L, N)
+    c_ref,  # (1, L, N)
+    y_ref,  # (1, 1, L, P) out
+    st_ref,  # (1, 1, P, N) out final state
+    state_scr,  # VMEM (P, N) f32
+    *,
+    num_chunks: int,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # (L, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (L,)
+    A = a_ref[0, 0]  # scalar
+    Bm = b_ref[0].astype(jnp.float32)  # (L, N)
+    Cm = c_ref[0].astype(jnp.float32)  # (L, N)
+
+    a = dt * A  # (L,) negative log-decay per step
+    cum = jnp.cumsum(a)  # (L,)
+
+    # ---- intra-chunk (quadratic within the chunk) ----
+    seg = cum[:, None] - cum[None, :]  # (L, L)
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = li >= lj
+    decay = jnp.where(tri, jnp.exp(jnp.where(tri, seg, 0.0)), 0.0)
+    cb = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, L)
+    att = cb * decay * dt[None, :]
+    y = jax.lax.dot_general(
+        att, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, P)
+
+    # ---- inter-chunk: carried-state contribution ----
+    state = state_scr[...]  # (P, N) state entering this chunk
+    y += jax.lax.dot_general(
+        Cm * jnp.exp(cum)[:, None], state,
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )  # (L, N) @ (P, N)^T -> (L, P)
+
+    # ---- state update ----
+    dec_last = jnp.exp(cum[-1] - cum) * dt  # (L,)
+    upd = jax.lax.dot_general(
+        x, Bm * dec_last[:, None],
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )  # (P, N)
+    state_scr[...] = state * jnp.exp(cum[-1]) + upd
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == num_chunks - 1)
+    def _finish():
+        st_ref[0, 0] = state_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) fp32 post-softplus
+    A: jax.Array,  # (H,) fp32 negative
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+):
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    xt = x.transpose(0, 2, 1, 3)  # (B, H, S, P)
+    dtt = dt.transpose(0, 2, 1)  # (B, H, S)
+    a2 = A.reshape(H, 1).astype(jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, num_chunks=nc, chunk=chunk)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, ci: (b, h, ci)),
+            pl.BlockSpec((1, 1), lambda b, h, ci: (h, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, ci: (b, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, a2, Bm, Cm)
+    return y.transpose(0, 2, 1, 3), st

@@ -1,0 +1,50 @@
+"""Token-level recurrence oracle for the SSD kernel (exact semantics).
+
+The SSD chunked algorithm is algebraically exact for the underlying linear
+recurrence, so this direct per-token scan is the ground truth:
+
+    state_t = exp(dt_t * A) * state_{t-1} + dt_t * B_t (outer) x_t
+    y_t     = C_t . state_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_ref(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) fp32 post-softplus
+    A: jax.Array,  # (H,) fp32 negative
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+):
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        dec = jnp.exp(dtt * A)  # (B,H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, bt)
+        state = state * dec[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    st0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    final, ys = lax.scan(
+        step,
+        st0,
+        (
+            jnp.moveaxis(xf, 1, 0),
+            jnp.moveaxis(dt, 1, 0),
+            jnp.moveaxis(Bf, 1, 0),
+            jnp.moveaxis(Cf, 1, 0),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B,S,H,P)
+    return y, final

@@ -1,0 +1,490 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder host devices build the production meshes, every
+cell's step function is ``.lower().compile()``'d with the full sharding
+specs, and the compiled artifact yields the roofline inputs
+(``memory_analysis`` → fits; ``cost_analysis`` → FLOPs/bytes; HLO text →
+collective bytes).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch phi4-mini-3.8b \
+        --shape train_4k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results.jsonl
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import ASSIGNED, REGISTRY
+from repro.configs.shapes import SHAPES, ShapeSuite, cell_skip_reason
+from repro.distributed.commmodel import CellModel, MeshView
+from repro.distributed.context import mesh_context
+from repro.distributed.hloanalysis import collective_bytes, collective_bytes_flat
+from repro.distributed.sharding import (
+    ShardingPolicy,
+    batch_pspec,
+    cache_pspecs,
+    default_policy,
+    param_pspecs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.training.optimizer import AdamWConfig, init_opt_state, opt_state_specs
+from repro.training.trainstep import TrainStepConfig, make_train_step
+from repro.training.optimizer import wsd_schedule
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSuite) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {"labels": sds((B, S), I32)}
+        if cfg.embed_inputs:
+            specs["tokens"] = sds((B, S), I32)
+        else:  # modality frontend stub: precomputed frame/patch embeddings
+            specs["inputs_embeds"] = sds((B, S, cfg.d_model), BF16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"lengths": sds((B,), I32)}
+        if cfg.embed_inputs:
+            specs["tokens"] = sds((B, S), I32)
+        else:
+            specs["inputs_embeds"] = sds((B, S, cfg.d_model), BF16)
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "tokens": sds((B,), I32),
+        "lengths": sds((B,), I32),
+        "cache": M.cache_specs(cfg, B, S),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def donate_for(kind: str):
+    """Donated arguments per step kind: decode donates the cache (in-place
+    ring update); train donates params+opt (in-place optimizer)."""
+    if kind == "train":
+        return (0, 1)
+    if kind == "decode":
+        return (2,)
+    return ()
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSuite, mesh,
+               pol: ShardingPolicy | None = None):
+    """Returns (fn, arg_specs, in_shardings, out_shardings)."""
+    pol = pol or default_policy(mesh)
+    pspec = param_pspecs(cfg, M.param_specs(cfg), mesh, pol)
+    ns = lambda spec_tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    params_s = ns(pspec)
+    p_specs = M.param_specs(cfg)
+    B = shape.global_batch
+
+    if shape.kind == "train":
+        # adaptive grad-accumulation: cap the per-microbatch residual
+        # stream at ~256 MB/device (the scan-over-blocks backward saves one
+        # (B_mb, S, d) carry per block — the dominant training live set)
+        mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dp = 1
+        for a in pol.dp_axes:
+            dp *= mesh_shape.get(a, 1)
+        b_loc = max(1, B // dp)
+        row_bytes = shape.seq_len * cfg.d_model * 2
+        mb = 1
+        for cand in range(1, b_loc + 1):
+            if b_loc % cand == 0 and (b_loc // cand) * row_bytes <= 128e6:
+                mb = cand
+                break
+        else:
+            mb = b_loc
+        tcfg = TrainStepConfig(
+            adamw=AdamWConfig(), remat=True, microbatches=mb
+        )
+        step = make_train_step(cfg, tcfg, wsd_schedule(100, 1000, 500, 3e-4))
+        opt_specs_tree = jax.eval_shape(lambda: init_opt_state(p_specs))
+        opt_s = ns(opt_state_specs(pspec))
+        bspec = batch_pspec(B, mesh, ndim=2, pol=pol,
+                            seq_len=shape.seq_len)
+        espec = batch_pspec(B, mesh, ndim=3, pol=pol,
+                            seq_len=shape.seq_len)
+        batch_specs = input_specs(cfg, shape)
+        batch_sh = {
+            k: NamedSharding(mesh, espec if k == "inputs_embeds" else bspec)
+            for k in batch_specs
+        }
+
+        def fn(params, opt_state, batch):
+            return step(params, opt_state, batch)
+
+        args = (p_specs, opt_specs_tree, batch_specs)
+        in_sh = (params_s, opt_s, batch_sh)
+        out_sh = (params_s, opt_s, None)
+        return fn, args, in_sh, out_sh
+
+    if shape.kind == "prefill":
+        bspec = batch_pspec(B, mesh, ndim=2, pol=pol,
+                            seq_len=shape.seq_len)
+        espec = batch_pspec(B, mesh, ndim=3, pol=pol,
+                            seq_len=shape.seq_len)
+        vspec = batch_pspec(B, mesh, ndim=1, pol=pol)
+        specs = input_specs(cfg, shape)
+        if cfg.is_encoder_only:
+            # encoder "prefill" = full encode + per-frame logits (no cache)
+            def fn(params, batch):
+                hidden, _ = M.forward(
+                    params, cfg,
+                    tokens=batch.get("tokens"),
+                    inputs_embeds=batch.get("inputs_embeds"),
+                )
+                return M.lm_logits(params, cfg, hidden)
+        else:
+            def fn(params, batch):
+                logits, cache = M.prefill(
+                    params, cfg,
+                    tokens=batch.get("tokens"),
+                    lengths=batch["lengths"],
+                    inputs_embeds=batch.get("inputs_embeds"),
+                )
+                return logits, cache
+
+        batch_sh = {}
+        for k in specs:
+            if k == "lengths":
+                batch_sh[k] = NamedSharding(mesh, vspec)
+            elif k == "inputs_embeds":
+                batch_sh[k] = NamedSharding(mesh, espec)
+            else:
+                batch_sh[k] = NamedSharding(mesh, bspec)
+        if cfg.is_encoder_only:
+            out_sh = None
+        else:
+            cache_tree = M.cache_specs(cfg, B, shape.seq_len)
+            out_sh = (None, ns(cache_pspecs(cfg, cache_tree, mesh, pol)))
+        return fn, (p_specs, specs), (params_s, batch_sh), out_sh
+
+    # decode / serve_step
+    specs = input_specs(cfg, shape)
+    vspec = batch_pspec(B, mesh, ndim=1, pol=pol)
+    cache_sh = ns(cache_pspecs(cfg, specs["cache"], mesh, pol))
+
+    def fn(params, tokens, cache, lengths):
+        return M.decode_step(params, cfg, tokens, cache, lengths)
+
+    args = (p_specs, specs["tokens"], specs["cache"], specs["lengths"])
+    in_sh = (
+        params_s,
+        NamedSharding(mesh, vspec),
+        cache_sh,
+        NamedSharding(mesh, vspec),
+    )
+    out_sh = (None, cache_sh)
+    return fn, args, in_sh, out_sh
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+
+def _lower_once(cfg, shape, mesh, pol):
+    fn, args, in_sh, out_sh = build_cell(cfg, shape, mesh, pol)
+    jitted = jax.jit(
+        fn, in_shardings=in_sh, out_shardings=out_sh,
+        donate_argnums=donate_for(shape.kind),
+    )
+    return jitted.lower(*args)
+
+
+def _depth_variant(cfg: ModelConfig, n_super_blocks: int) -> ModelConfig:
+    return dataclasses.replace(
+        cfg, n_layers=len(cfg.block_pattern) * n_super_blocks
+    )
+
+
+def _sharded_param_bytes(cfg: ModelConfig, mesh, pol) -> float:
+    """Exact per-device parameter bytes under the actual PartitionSpecs."""
+    import numpy as np
+
+    specs = M.param_specs(cfg)
+    pspecs = param_pspecs(cfg, specs, mesh, pol)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def leaf_bytes(s, p):
+        n = float(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+        for entry in p:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                n /= mesh_shape.get(a, 1)
+        return n
+
+    return sum(
+        leaf_bytes(s, p)
+        for s, p in zip(
+            jax.tree.leaves(specs),
+            jax.tree.leaves(
+                pspecs, is_leaf=lambda x: isinstance(x, P)
+            ),
+        )
+    )
+
+
+def scaled_cost(cfg, shape, mesh, pol):
+    """Exact whole-model (flops, bytes) from loop-free *lowered* modules.
+
+    XLA's cost analysis counts a ``while`` (scan) body once regardless of
+    trip count, so the full-depth production module under-reports. Under
+    ``analysis_mode()`` the lowering is loop-free (scans unrolled /
+    single-chunk attention with identical FLOPs), pre-optimization cost
+    analysis is deterministic, and totals are affine in the super-block
+    count: ``total(n) = outside + per_block * n`` — two shallow *lowers*
+    (no compile) pin both terms exactly. Cross-check: the full-depth
+    loop-free compile of phi4/train_4k matched the reconstruction to four
+    significant digits. Values are GLOBAL (pre-partitioning); divide by
+    device count for per-chip terms. Pre-fusion 'bytes accessed' is an
+    upper bound on HBM traffic (fusion elides intermediate materialization).
+    """
+    from repro.models.layers import analysis_mode
+
+    with analysis_mode():
+        c1 = _lower_once(
+            _depth_variant(cfg, 1), shape, mesh, pol
+        ).cost_analysis()
+        c2 = _lower_once(
+            _depth_variant(cfg, 2), shape, mesh, pol
+        ).cost_analysis()
+    f1, b1 = c1.get("flops", 0.0), c1.get("bytes accessed", 0.0)
+    f2, b2 = c2.get("flops", 0.0), c2.get("bytes accessed", 0.0)
+    n = cfg.n_blocks
+    fl = (f1 - (f2 - f1)) + (f2 - f1) * n
+    by = (b1 - (b2 - b1)) + (b2 - b1) * n
+    return fl, by
+
+
+def apply_variant(cfg: ModelConfig, variant: dict) -> ModelConfig:
+    """Perf-iteration config variants: kv/weight/dispatch quantization."""
+    kw = {}
+    for k in ("kv_dtype", "weight_dtype", "dtype"):
+        if k in variant:
+            kw[k] = variant[k]
+    if "dispatch_dtype" in variant and cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, dispatch_dtype=variant["dispatch_dtype"]
+        )
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             pol: ShardingPolicy | None = None, verbose: bool = True,
+             cost_scale: bool = True, variant: dict | None = None) -> dict:
+    cfg = REGISTRY[arch_id]
+    if variant:
+        cfg = apply_variant(cfg, variant)
+    rec_variant = dict(variant or {})
+    shape = SHAPES[shape_name]
+    rec = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": rec_variant,
+    }
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        rec["status"] = "skip"
+        rec["reason"] = skip
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = mesh.devices.size
+        base = pol or default_policy(mesh)
+        if pol is None and shape.kind == "train":
+            # Training wants aggressive ZeRO: fsdp-sharding params (and
+            # thus fp32 m/v, which mirror the specs) across dp is ~free —
+            # the gather is the all-gather half of the grad all-reduce.
+            # When even the model shard itself is too big (params/16 >
+            # 9 GB), switch to FSDP+SP entirely (flat weights + sequence-
+            # parallel activations) — also the lower-wire choice when
+            # tokens >> params (§Perf).
+            from repro.distributed.commmodel import _params_bytes
+
+            mdl = dict(zip(mesh.axis_names, mesh.devices.shape)).get(
+                "model", 1
+            )
+            if _params_bytes(cfg) / mdl > 9e9:
+                base = dataclasses.replace(base, mode="fsdp_sp")
+            else:
+                base = dataclasses.replace(
+                    base, fsdp_threshold=4 * 1024 * 1024
+                )
+        if pol is None and shape.kind != "train":
+            # serving reads weights every step: 2D (FSDP) sharding implies
+            # a per-step gather. Only capacity-constrained archs (model
+            # shard too big for HBM alongside the cache) opt in, and the
+            # gather traffic is then counted in the comm model. int8
+            # weights (perf variant) is the preferred fix.
+            from repro.distributed.commmodel import _params_bytes
+
+            mdl = dict(zip(mesh.axis_names, mesh.devices.shape)).get(
+                "model", 1
+            )
+            need = _params_bytes(cfg) / mdl
+            thr = (1 << 62) if need <= 9e9 else 32 * 1024 * 1024
+            base = dataclasses.replace(base, fsdp_threshold=thr)
+        if variant and "mode" in variant:
+            base = dataclasses.replace(base, mode=variant["mode"])
+        pol = base
+        with mesh_context(mesh):
+            # production module: memory analysis + while-scaled collectives
+            lowered = _lower_once(cfg, shape, mesh, pol)
+            compiled = lowered.compile()
+            t_full = time.time() - t0
+            hlo_txt = compiled.as_text()
+            coll = collective_bytes(hlo_txt)
+            coll_flat = collective_bytes_flat(hlo_txt)
+            if cost_scale:
+                # exact global flops/bytes from loop-free lowers
+                flops_g, bytes_g = scaled_cost(cfg, shape, mesh, pol)
+            else:
+                c = compiled.cost_analysis()
+                flops_g = c.get("flops", 0.0) * n_dev
+                bytes_g = c.get("bytes accessed", 0.0) * n_dev
+        mem = compiled.memory_analysis()
+        # analytic comm/memory from the sharding policy (primary roofline
+        # inputs; HLO-parsed values recorded as bounds/cross-checks)
+        pol_eff = pol or default_policy(mesh)
+        mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dp = 1
+        for a in pol_eff.dp_axes:
+            dp *= mesh_shape.get(a, 1)
+        mb = 1
+        if shape.kind == "train":
+            b_loc = max(1, shape.global_batch // dp)
+            row_bytes = shape.seq_len * cfg.d_model * 2
+            for cand in range(1, b_loc + 1):
+                if b_loc % cand == 0 and (b_loc // cand) * row_bytes <= 128e6:
+                    mb = cand
+                    break
+            else:
+                mb = b_loc
+        cell = CellModel(
+            cfg, shape,
+            MeshView(n_dev, mesh_shape.get("model", 1), dp,
+                     mode=pol_eff.mode),
+            microbatches=mb,
+            params_local_bytes=_sharded_param_bytes(cfg, mesh, pol_eff),
+        )
+        rec.update(
+            status="ok",
+            compile_s=round(t_full, 1),
+            total_s=round(time.time() - t0, 1),
+            n_devices=n_dev,
+            microbatches=mb,
+            flops_global=flops_g,
+            flops_per_device=flops_g / n_dev,
+            hlo_bytes_global=bytes_g,  # pre-fusion upper bound
+            comm_model_bytes=cell.comm_bytes(),
+            mem_model_gb=cell.memory_gb(),
+            collective_bytes_by_op=coll.bytes_by_op,
+            collective_total_bytes=coll.total_bytes,
+            collective_flat_bytes=coll_flat.total_bytes,
+            collective_counts=coll_flat.count_by_op,
+            argument_size_bytes=getattr(mem, "argument_size_in_bytes", 0),
+            output_size_bytes=getattr(mem, "output_size_in_bytes", 0),
+            temp_size_bytes=getattr(mem, "temp_size_in_bytes", 0),
+            alias_size_bytes=getattr(mem, "alias_size_in_bytes", 0),
+            peak_bytes=(
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+                - getattr(mem, "alias_size_in_bytes", 0)
+            ),
+        )
+        if verbose:
+            print(
+                f"[ok] {arch_id} x {shape_name} x {rec['mesh']}: "
+                f"{rec['total_s']:.0f}s mb={mb} "
+                f"flops/dev {rec['flops_per_device']:.3e} "
+                f"comm {rec['comm_model_bytes']['total']/1e9:.2f} GB/dev "
+                f"mem {rec['mem_model_gb']['total']:.2f} GB/dev "
+                f"(XLA arg+temp {rec['peak_bytes']/1e9:.1f})",
+                flush=True,
+            )
+    except Exception as e:  # a failure here is a sharding bug
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[FAIL] {arch_id} x {shape_name}: {rec['error'][:300]}",
+                  flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ASSIGNED) if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [
+        args.multi_pod
+    ]
+    out_f = open(args.out, "a") if args.out else None
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp)
+                cells.append(rec)
+                n_ok += rec["status"] == "ok"
+                n_fail += rec["status"] == "fail"
+                n_skip += rec["status"] == "skip"
+                if out_f:
+                    json.dump(
+                        {k: v for k, v in rec.items() if k != "traceback"},
+                        out_f,
+                    )
+                    out_f.write("\n")
+                    out_f.flush()
+    print(f"\n=== dry-run: {n_ok} ok / {n_fail} fail / {n_skip} skip ===")
+    if out_f:
+        out_f.close()
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,75 @@
+"""Serving driver: run the P/D disaggregated cluster on a workload.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama-3.1-8b \
+        --dataset sharegpt --rps 8 --duration 60 --policy voltana
+
+Policies: voltana (EcoFreq+EcoPred+EcoRoute) | ecofreq-only |
+static (--static-freq MHz) | powercap (--cap-w W).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs.registry import REGISTRY
+from repro.core.power import CHIPS
+from repro.serving import ClusterConfig, PDCluster, poisson_workload
+from repro.serving.workload import DATASETS, azure_like, synthetic_pd_ratio
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama-3.1-8b")
+    ap.add_argument("--chip", default="a100-80g-sxm", choices=sorted(CHIPS))
+    ap.add_argument("--dataset", default="sharegpt",
+                    choices=[*DATASETS, "azure", "pd-ratio"])
+    ap.add_argument("--rps", type=float, default=8.0)
+    ap.add_argument("--duration", type=float, default=60.0)
+    ap.add_argument("--policy", default="voltana",
+                    choices=["voltana", "ecofreq-only", "static", "powercap"])
+    ap.add_argument("--static-freq", type=float, default=None)
+    ap.add_argument("--cap-w", type=float, default=None)
+    ap.add_argument("--n-prefill", type=int, default=2)
+    ap.add_argument("--n-decode", type=int, default=2)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--slo-ttft-ms", type=float, default=600.0)
+    ap.add_argument("--slo-itl-ms", type=float, default=60.0)
+    ap.add_argument("--freq-levels", type=int, default=2, choices=[2, 5])
+    ap.add_argument("--delta", type=float, default=500.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    chip = CHIPS[args.chip]
+    model = REGISTRY[args.arch]
+    if args.dataset == "azure":
+        reqs = azure_like(args.rps, args.duration, seed=args.seed)
+    elif args.dataset == "pd-ratio":
+        reqs = synthetic_pd_ratio(args.rps, args.duration, seed=args.seed)
+    else:
+        reqs = poisson_workload(
+            DATASETS[args.dataset], args.rps, args.duration, seed=args.seed
+        )
+    cfg = ClusterConfig(
+        model=model,
+        chip=chip,
+        n_prefill=args.n_prefill,
+        n_decode=args.n_decode,
+        tp=args.tp,
+        slo_ttft_s=args.slo_ttft_ms / 1e3,
+        slo_itl_s=args.slo_itl_ms / 1e3,
+        policy=args.policy,
+        static_freq=args.static_freq,
+        power_cap_w=args.cap_w,
+        freq_options=(
+            chip.freq_levels_5 if args.freq_levels == 5 else
+            chip.freq_levels_2
+        ),
+        delta=args.delta,
+        seed=args.seed,
+    )
+    metrics = PDCluster(cfg).run(reqs)
+    print(json.dumps(metrics.summary(), indent=2))
+
+
+if __name__ == "__main__":
+    main()

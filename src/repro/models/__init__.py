@@ -1,0 +1,9 @@
+from repro.models.model import (  # noqa: F401
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    lm_logits,
+    param_specs,
+    prefill,
+)

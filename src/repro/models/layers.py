@@ -1,0 +1,617 @@
+"""Model building blocks: norms, RoPE, attention (chunked flash / sliding /
+decode), SwiGLU/GeGLU MLP, capacity-based MoE, Mamba2 SSD mixer.
+
+All weights are bf16 by default; normalization / softmax / SSD recurrences
+accumulate in fp32. Attention over long sequences is chunked (flash-style
+online softmax in pure jnp) so the lowered HLO has bounded live memory; the
+Pallas kernels in ``repro.kernels`` are the TPU fast path for the same math
+and are validated against these functions' oracles.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from contextvars import ContextVar
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+# ---------------------------------------------------------------------------
+# Analysis mode: loop-free lowering for exact XLA cost analysis.
+#
+# XLA's HLO cost analysis counts a ``while`` body once regardless of trip
+# count, so any ``lax.scan``/``lax.map`` in the lowering under-reports
+# FLOPs/bytes. Under ``analysis_mode()`` every sequence loop is removed
+# (single-chunk attention — same FLOPs, only worse live memory, which is
+# irrelevant because analysis compiles never execute) or unrolled
+# (``scan(unroll=True)``), so ``compiled.cost_analysis()`` is exact.
+# ---------------------------------------------------------------------------
+
+_ANALYSIS: ContextVar[bool] = ContextVar("repro_analysis_mode", default=False)
+
+
+@contextlib.contextmanager
+def analysis_mode():
+    token = _ANALYSIS.set(True)
+    try:
+        yield
+    finally:
+        _ANALYSIS.reset(token)
+
+
+def in_analysis_mode() -> bool:
+    return _ANALYSIS.get()
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_sincos(positions: jax.Array, head_dim: int, theta: float):
+    """positions: (...,) int32 -> sin/cos of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (..., Dh); sin/cos broadcastable to (..., Dh//2)."""
+    half = x.shape[-1] // 2
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    # broadcast sin/cos over the head axis: x is (B,S,H,Dh), sin is (B,S,half)
+    while sin.ndim < x1.ndim:
+        sin = sin[..., None, :]
+        cos = cos[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (prefill): chunked flash-style online softmax in jnp
+# ---------------------------------------------------------------------------
+
+
+def _softcap(scores: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, Hq, Dh)
+    k: jax.Array,  # (B, Skv, Hkv, Dh)
+    v: jax.Array,  # (B, Skv, Hkv, Dh)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_positions: Optional[jax.Array] = None,  # (B, Sq) int32
+    kv_positions: Optional[jax.Array] = None,  # (B, Skv) int32
+    kv_valid: Optional[jax.Array] = None,  # (B, Skv) bool
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+) -> jax.Array:
+    """Memory-bounded attention; returns (B, Sq, Hq, Dh) in q.dtype."""
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    if in_analysis_mode():  # loop-free: identical FLOPs, exact cost analysis
+        q_chunk, k_chunk = Sq, Skv
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Skv)
+    assert Sq % q_chunk == 0 and Skv % k_chunk == 0, (Sq, q_chunk, Skv, k_chunk)
+    nq, nk = Sq // q_chunk, Skv // k_chunk
+    scale = 1.0 / math.sqrt(Dh)
+
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(
+            jnp.arange(Skv, dtype=jnp.int32), (B, Skv)
+        )
+
+    # (B, nq, qc, Hkv, G, Dh)
+    qr = q.reshape(B, nq, q_chunk, Hkv, G, Dh)
+    qp = q_positions.reshape(B, nq, q_chunk)
+    kr = k.reshape(B, nk, k_chunk, Hkv, Dh)
+    vr = v.reshape(B, nk, k_chunk, Hkv, Dh)
+    kp = kv_positions.reshape(B, nk, k_chunk)
+    kvm = (
+        kv_valid.reshape(B, nk, k_chunk)
+        if kv_valid is not None
+        else jnp.ones((B, nk, k_chunk), jnp.bool_)
+    )
+
+    def q_block(args):
+        qc, qpos = args  # (B, qc, Hkv, G, Dh), (B, qc)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kc, vc, kpos, kval = inp
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qc, kc,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            s = _softcap(s, softcap)
+            mask = kval[:, None, None, None, :]
+            if causal:
+                mask = mask & (
+                    qpos[:, None, None, :, None] >= kpos[:, None, None, None, :]
+                )
+            if window is not None:
+                mask = mask & (
+                    qpos[:, None, None, :, None] - kpos[:, None, None, None, :]
+                    < window
+                )
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vc,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, Dh), jnp.float32)
+        (m, l, acc), _ = lax.scan(
+            kv_step,
+            (m0, l0, a0),
+            (
+                jnp.moveaxis(kr, 1, 0),
+                jnp.moveaxis(vr, 1, 0),
+                jnp.moveaxis(kp, 1, 0),
+                jnp.moveaxis(kvm, 1, 0),
+            ),
+            unroll=in_analysis_mode(),
+        )
+        out = acc / jnp.maximum(l, 1e-37)[..., None]
+        # (B, Hkv, G, qc, Dh) -> (B, qc, Hkv, G, Dh)
+        return jnp.moveaxis(out, 3, 1)
+
+    # checkpoint per q-block: without this, the kv scan's backward saves
+    # its per-step (s, p, alpha) residuals for every q-block at once,
+    # which is what blows the training peak memory (O(S^2) transients).
+    q_block = jax.checkpoint(q_block)
+    xs = (jnp.moveaxis(qr, 1, 0), jnp.moveaxis(qp, 1, 0))
+    if nq == 1:  # no loop (also the analysis-mode path)
+        outs = q_block(jax.tree.map(lambda x: x[0], xs))[None]
+    else:
+        _, outs = lax.scan(
+            lambda c, x: (c, q_block(x)), None, xs,
+        )
+    # (nq, B, qc, Hkv, G, Dh) -> (B, Sq, Hq, Dh)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hq, Dh)
+    return out.astype(q.dtype)
+
+
+def sliding_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int,
+    softcap: Optional[float] = None,
+    kv_valid: Optional[jax.Array] = None,
+    q_chunk: int = 512,
+) -> jax.Array:
+    """Banded local attention: each window-sized q band attends only to its
+    own and the previous kv band (covers a causal window exactly), so FLOPs
+    are O(S * 2W) instead of O(S^2)."""
+    B, S, Hq, Dh = q.shape
+    if S <= window:  # degenerates to plain causal attention
+        return chunked_attention(
+            q, k, v, causal=True, window=window, softcap=softcap,
+            kv_valid=kv_valid, q_chunk=q_chunk,
+        )
+    assert S % window == 0, (S, window)
+    n = S // window
+    Hkv = k.shape[2]
+
+    qb = jnp.moveaxis(q.reshape(B, n, window, Hq, Dh), 1, 0)
+    kb = k.reshape(B, n, window, Hkv, Dh)
+    vb = v.reshape(B, n, window, Hkv, Dh)
+    valid = (
+        kv_valid.reshape(B, n, window)
+        if kv_valid is not None
+        else jnp.ones((B, n, window), jnp.bool_)
+    )
+    # previous band (band -1 is invalid)
+    k_prev = jnp.roll(kb, 1, axis=1)
+    v_prev = jnp.roll(vb, 1, axis=1)
+    val_prev = jnp.roll(valid, 1, axis=1).at[:, 0].set(False)
+
+    kcat = jnp.moveaxis(jnp.concatenate([k_prev, kb], axis=2), 1, 0)
+    vcat = jnp.moveaxis(jnp.concatenate([v_prev, vb], axis=2), 1, 0)
+    valcat = jnp.moveaxis(jnp.concatenate([val_prev, valid], axis=2), 1, 0)
+    pos = jnp.arange(S, dtype=jnp.int32).reshape(n, window)
+    qpos = jnp.broadcast_to(pos[:, None, :], (n, B, window))
+    kpos_band = jnp.concatenate([pos - window, pos], axis=1)  # (n, 2w)
+    kpos = jnp.broadcast_to(kpos_band[:, None, :], (n, B, 2 * window))
+
+    def band(args):
+        qc, kc, vc, qp, kp, kval = args
+        return chunked_attention(
+            qc, kc, vc, causal=True, window=window, softcap=softcap,
+            q_positions=qp, kv_positions=kp, kv_valid=kval, q_chunk=q_chunk,
+            k_chunk=min(1024, 2 * window),
+        )
+
+    _, outs = lax.scan(
+        lambda c, x: (c, band(x)),
+        None,
+        (qb, kcat, vcat, qpos, kpos, valcat),
+        unroll=in_analysis_mode(),
+    )
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, Hq, Dh)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, Hq, Dh) -- single new token per sequence
+    k_cache: jax.Array,  # (B, C, Hkv, Dh)
+    v_cache: jax.Array,  # (B, C, Hkv, Dh)
+    slot_pos: jax.Array,  # (B, C) int32 absolute position per slot (-1 empty)
+    q_pos: jax.Array,  # (B,) int32 position of the new token
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Attention of one new token over a (ring-buffer) KV cache."""
+    B, C, Hkv, Dh = k_cache.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    qr = q.reshape(B, Hkv, G, Dh)
+    s = jnp.einsum(
+        "bhgd,bchd->bhgc", qr, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    s = _softcap(s, softcap)
+    mask = (slot_pos >= 0) & (slot_pos <= q_pos[:, None])
+    if window is not None:
+        mask = mask & (q_pos[:, None] - slot_pos < window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgc,bchd->bhgd", p, v_cache, preferred_element_type=jnp.float32
+    )
+    return out.reshape(B, Hq, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def glu_mlp(x, w_gate, w_in, w_out, act: str):
+    """SwiGLU/GeGLU: out = (act(x@w_gate) * (x@w_in)) @ w_out."""
+    g = _act(jnp.einsum("...d,df->...f", x, w_gate), act)
+    h = g * jnp.einsum("...d,df->...f", x, w_in)
+    return jnp.einsum("...f,fd->...d", h, w_out)
+
+
+# ---------------------------------------------------------------------------
+# MoE: capacity-based top-k dispatch (FLOPs-exact, SPMD-friendly)
+# ---------------------------------------------------------------------------
+
+
+def moe_ffn_sorted(
+    x: jax.Array,  # (T, d) flattened tokens
+    router: jax.Array,  # (d, E)
+    w_gate: jax.Array,  # (E, d, ffe)
+    w_in: jax.Array,  # (E, d, ffe)
+    w_out: jax.Array,  # (E, ffe, d)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+    expert_sharding=None,  # optional PartitionSpec for the (E, C, d) buffer
+    dispatch_dtype: Optional[str] = None,  # "int8" => quantized all-to-all
+):
+    """Sort-based capacity dispatch — O(T·k) memory (no (T·k, E) one-hot).
+
+    Token→expert assignments are sorted by expert id; each token's rank
+    within its expert comes from ``searchsorted`` over the sorted ids, and
+    ranks ≥ capacity are dropped (combine weight 0). The (E, C, d) dispatch
+    buffer is the expert-parallel axis: sharding its E dim over "model"
+    turns the scatter/gather into the MoE all-to-all under SPMD.
+
+    ``dispatch_dtype="int8"`` quantizes the dispatch and combine buffers
+    per token row (symmetric, fp32 scale), halving the all-to-all wire
+    bytes; experts compute in the working dtype after dequantization.
+    """
+    T, d = x.shape
+    E = router.shape[-1]
+    C = max(1, int(math.ceil(T * top_k / E * capacity_factor)))
+
+    logits = jnp.einsum(
+        "td,de->te", x, router, preferred_element_type=jnp.float32
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, tope = lax.top_k(probs, top_k)  # (T, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = tope.reshape(-1).astype(jnp.int32)  # (T*k,)
+    order = jnp.argsort(flat_e)  # stable => FIFO per expert
+    se = flat_e[order]
+    # rank of each sorted entry within its expert run
+    first = jnp.searchsorted(se, se, side="left")
+    rank = jnp.arange(se.shape[0], dtype=jnp.int32) - first.astype(jnp.int32)
+    keep_sorted = rank < C
+    slot_sorted = jnp.where(keep_sorted, se * C + rank, 0)  # clipped; masked
+
+    tok_sorted = order // top_k  # source token per sorted entry
+    xk = x[tok_sorted] * keep_sorted[:, None].astype(x.dtype)
+
+    def _q8(rows):
+        sc = jnp.max(jnp.abs(rows.astype(jnp.float32)), axis=-1) / 127.0 \
+            + 1e-9
+        q = jnp.clip(
+            jnp.round(rows.astype(jnp.float32) / sc[:, None]), -127, 127
+        ).astype(jnp.int8)
+        return q, sc
+
+    if dispatch_dtype == "int8":
+        xq, xsc = _q8(xk)
+        buf = jnp.zeros((E * C, d), jnp.int8).at[slot_sorted].add(xq)
+        sbuf = jnp.zeros((E * C,), jnp.float32).at[slot_sorted].add(
+            xsc * keep_sorted
+        )
+        xe = buf.reshape(E, C, d)
+        se = sbuf.reshape(E, C)
+        if expert_sharding is not None:  # the all-to-all moves int8
+            xe = lax.with_sharding_constraint(xe, expert_sharding)
+        xe = (xe.astype(jnp.float32) * se[..., None]).astype(x.dtype)
+    else:
+        buf = jnp.zeros((E * C, d), x.dtype).at[slot_sorted].add(xk)
+        xe = buf.reshape(E, C, d)
+        if expert_sharding is not None:
+            xe = lax.with_sharding_constraint(xe, expert_sharding)
+
+    g = _act(jnp.einsum("ecd,edf->ecf", xe, w_gate), act)
+    h = g * jnp.einsum("ecd,edf->ecf", xe, w_in)
+    ye = jnp.einsum("ecf,efd->ecd", h, w_out)  # (E, C, d)
+    if dispatch_dtype == "int8":
+        yq, ysc = _q8(ye.reshape(E * C, d))
+        yqe = yq.reshape(E, C, d)
+        if expert_sharding is not None:  # combine all-to-all moves int8
+            yqe = lax.with_sharding_constraint(yqe, expert_sharding)
+        ye = (
+            yqe.reshape(E * C, d).astype(jnp.float32)
+            * ysc[:, None]
+        ).astype(x.dtype).reshape(E, C, d)
+    elif expert_sharding is not None:
+        ye = lax.with_sharding_constraint(ye, expert_sharding)
+
+    # combine: gather each kept entry's expert output, weight, sum over k
+    yk = ye.reshape(E * C, d)[slot_sorted]  # (T*k, d) in sorted order
+    w_sorted = topw.reshape(-1)[order] * keep_sorted
+    contrib = yk * w_sorted[:, None].astype(yk.dtype)
+    out = jnp.zeros((T, d), yk.dtype).at[tok_sorted].add(contrib)
+
+    load = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    aux = {
+        "load": load,
+        "dropped": (~keep_sorted).sum(),
+        "me": probs.mean(axis=0),
+    }
+    return out.astype(x.dtype), aux
+
+
+def moe_ffn(
+    x: jax.Array,  # (T, d) flattened tokens
+    router: jax.Array,  # (d, E)
+    w_gate: jax.Array,  # (E, d, ffe)
+    w_in: jax.Array,  # (E, d, ffe)
+    w_out: jax.Array,  # (E, ffe, d)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+):
+    """Switch-style capacity dispatch: scatter tokens into (E, C, d) slots,
+    dense per-expert GEMMs, gather back with router weights. Dropped tokens
+    (over capacity) pass through with weight 0 for that expert.
+
+    Returns (out (T, d), aux) where aux has load-balancing stats.
+    """
+    T, d = x.shape
+    E = router.shape[-1]
+    C = max(1, int(math.ceil(T * top_k / E * capacity_factor)))
+
+    logits = jnp.einsum("td,de->te", x, router, preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, tope = lax.top_k(probs, top_k)  # (T, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # position of each (token, k) routing within its expert
+    flat_e = tope.reshape(-1)  # (T*k,) in token-major order => FIFO per expert
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot  # exclusive cumsum
+    pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]  # (T*k,)
+    keep = pos_in_e < C
+    slot = jnp.where(keep, flat_e * C + pos_in_e, E * C)  # E*C = dump slot
+
+    # dispatch: (E*C+1, d) scatter of token rows
+    xk = jnp.repeat(x, top_k, axis=0)  # (T*k, d) token-major
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].add(xk)
+    xe = buf[: E * C].reshape(E, C, d)
+
+    g = _act(
+        jnp.einsum("ecd,edf->ecf", xe, w_gate), act
+    )
+    h = g * jnp.einsum("ecd,edf->ecf", xe, w_in)
+    ye = jnp.einsum("ecf,efd->ecd", h, w_out)  # (E, C, d)
+
+    # combine: gather back each (token, k) slot, weight, sum over k
+    ybuf = jnp.concatenate([ye.reshape(E * C, d), jnp.zeros((1, d), ye.dtype)])
+    yk = ybuf[slot]  # (T*k, d)
+    w = (topw.reshape(-1) * keep).astype(yk.dtype)  # dropped => 0
+    out = (yk * w[:, None]).reshape(T, top_k, d).sum(axis=1)
+
+    aux = {
+        "load": onehot.sum(axis=0),  # tokens per expert (pre-capacity)
+        "dropped": (~keep).sum(),
+        "me": probs.mean(axis=0),
+    }
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) mixer
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) fp32, post-softplus
+    A: jax.Array,  # (H,) fp32 negative
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    *,
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B, H, P, N)
+):
+    """Chunked state-space-duality scan. Returns (y (B,S,H,P), state)."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+    Cc = Cm.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+
+    a = dtc * A  # (B, nc, L, H), negative
+    cum = jnp.cumsum(a, axis=2)  # inclusive cumsum over chunk
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    # decay(i, j) = exp(cum_i - cum_j) for i >= j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,L,L,H)
+    li = jnp.arange(chunk)
+    tri = (li[:, None] >= li[None, :])[None, None, :, :, None]
+    decay = jnp.where(tri, jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)  # (B,nc,L,L)
+    att = cb[..., None] * decay * dtc[:, :, None, :, :]  # weight dt_j at j=m
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", att, xf)
+
+    # ---- chunk states ----
+    # state_c = sum_j exp(cum_last - cum_j) * dt_j * B_j (outer) x_j
+    dec_last = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,L,H)
+    states = jnp.einsum(
+        "bclh,bcln,bclhp->bchpn", dec_last * dtc, Bc, xf
+    )  # (B,nc,H,P,N)
+
+    # ---- inter-chunk recurrence: st_c = dec_c * st_{c-1} + s_c ----
+    # Solved with an *associative* scan (log-depth combine tree) instead of
+    # a sequential lax.scan: parallel across chunks on TPU and loop-free in
+    # the HLO (exact cost analysis). The combine
+    #   (d1, s1) ∘ (d2, s2) = (d1*d2, s1*d2 + s2)
+    # is associative; the initial state folds into the first chunk.
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+    st0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((Bsz, H, P, N), jnp.float32)
+    )
+    states = states.at[:, 0].add(chunk_decay[:, 0, :, None, None] * st0)
+
+    def combine(a, b):
+        d1, s1 = a
+        d2, s2 = b
+        return d1 * d2, s1 * d2[:, :, :, None, None] + s2
+
+    _, incl = lax.associative_scan(
+        combine, (chunk_decay, states), axis=1
+    )  # inclusive: state *after* each chunk
+    final_state = incl[:, -1]
+    entry_states = jnp.concatenate(
+        [st0[:, None], incl[:, :-1]], axis=1
+    )  # state *entering* each chunk (B,nc,H,P,N)
+
+    # contribution of the carried state within each chunk:
+    # y_inter[l] = C_l . (exp(cum_l) * state_entry)
+    y_inter = jnp.einsum(
+        "bcln,bclh,bchpn->bclhp", Cc, jnp.exp(cum), entry_states
+    )
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(
+    x: jax.Array,  # (B, H, P)
+    dt: jax.Array,  # (B, H) fp32 post-softplus
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, N)
+    Cm: jax.Array,  # (B, N)
+    state: jax.Array,  # (B, H, P, N) fp32
+):
+    """Single-token SSD recurrence. Returns (y (B,H,P), new_state)."""
+    xf = x.astype(jnp.float32)
+    dec = jnp.exp(dt * A)  # (B, H)
+    upd = jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xf, Bm.astype(jnp.float32)
+    )
+    new_state = state * dec[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, D), w: (D, K). Returns (B, S, D)."""
+    K = w.shape[-1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        shift = K - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi.astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def conv_step(x: jax.Array, conv_state: jax.Array, w: jax.Array):
+    """One decode step of the depthwise causal conv.
+
+    x: (B, D); conv_state: (B, K-1, D) previous inputs; w: (D, K).
+    Returns (y (B, D), new_conv_state (B, K-1, D)).
+    """
+    K = w.shape[-1]
+    hist = jnp.concatenate([conv_state, x[:, None, :]], axis=1)  # (B,K,D)
+    y = jnp.einsum(
+        "bkd,dk->bd", hist.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(x.dtype)
+    return y, hist[:, 1:K, :] if K > 1 else conv_state

@@ -1,0 +1,15 @@
+from repro.serving.cluster import ClusterConfig, PDCluster, build_predictor  # noqa: F401
+from repro.serving.engine import DecodeEngine, PrefillEngine, SimBackend  # noqa: F401
+from repro.serving.metrics import InstanceEnergy, RunMetrics  # noqa: F401
+from repro.serving.request import Phase, Request  # noqa: F401
+from repro.serving.workload import (  # noqa: F401
+    DATASETS,
+    LMSYS,
+    SHAREGPT,
+    DatasetDist,
+    LengthDist,
+    attach_tokens,
+    azure_like,
+    poisson_workload,
+    synthetic_pd_ratio,
+)

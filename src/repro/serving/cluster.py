@@ -1,0 +1,378 @@
+"""The P/D disaggregated cluster: event-driven serving runtime (Fig. 8).
+
+New requests hit the prefill fleet via round-robin; completed prefills
+stream their first token and their KV state migrates to a decode instance
+chosen by the decode router (EcoRoute or round-robin); EcoFreq picks each
+instance's per-iteration frequency; EcoPred is the shared latency model
+that every instance feeds samples back into.
+
+The event loop is a min-heap of timestamped events, so any number of
+instances progress asynchronously on one virtual clock. The same loop
+drives fault injection (instance loss ⇒ KV gone ⇒ affected requests
+re-queue for prefill), elastic scale-out/in, and straggler detection
+(per-instance EWMA of EcoPred residuals biases both the local frequency
+choice and the router's what-if).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.ecofreq import EcoFreq, FreqController, StaticFreq
+from repro.core.ecopred import EcoPred, ProfileRanges
+from repro.core.ecoroute import (
+    EcoRoute,
+    InstanceView,
+    RoundRobinRouter,
+    RouteRequest,
+    Router,
+)
+from repro.core.hwmodel import HardwareModel
+from repro.core.power import ChipSpec
+from repro.serving.engine import DecodeEngine, PrefillEngine, SimBackend
+from repro.serving.metrics import RunMetrics
+from repro.serving.request import Phase, Request
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ClusterConfig:
+    model: ModelConfig
+    chip: ChipSpec
+    n_prefill: int = 2
+    n_decode: int = 2
+    tp: int = 1  # tensor-parallel degree per instance
+    # SLOs (paper §VI-B: 200/20, 600/60, 1200/120 ms by model size)
+    slo_ttft_s: float = 0.6
+    slo_itl_s: float = 0.06
+    # policies
+    policy: str = "voltana"  # voltana | ecofreq-only | static | powercap
+    static_freq: Optional[float] = None  # for policy == "static"
+    power_cap_w: Optional[float] = None  # for policy == "powercap"
+    freq_options: Optional[Sequence[float]] = None  # default: chip 2-level
+    freq_options_prefill: Optional[Sequence[float]] = None  # GH200 split
+    control_interval_s: Optional[float] = None  # Fig. 20 window ablation
+    delta: float = 500.0  # EcoRoute imbalance threshold (MHz)
+    # engine limits
+    prefill_batch_tokens: int = 8_192
+    decode_max_running: int = 512
+    kv_capacity_tokens: Optional[int] = None  # default: HBM-derived
+    # physics
+    noise_sigma: float = 0.02
+    transfer_bw: float = 200e9  # P->D KV migration bytes/s
+    transfer_const_s: float = 0.002
+    # predictor
+    predictor: Optional[EcoPred] = None  # share across runs to skip re-fit
+    adapt_every: int = 4_096
+    online_adapt: bool = True
+    # observability / chaos
+    record_traces: bool = False
+    straggler_factors: Optional[Dict[int, float]] = None  # decode idx -> x
+    seed: int = 0
+    # execution backend override: f(kind, idx, hw, seed) -> SimBackend
+    # (see repro.serving.realengine.make_real_backend_factory)
+    backend_factory: Optional[Callable] = None
+
+
+def build_predictor(
+    model: ModelConfig,
+    chip: ChipSpec,
+    freq_options: Sequence[float],
+    tp: int = 1,
+    kv_cap: Optional[int] = None,
+    max_running: int = 512,
+    prefill_tokens: int = 8_192,
+    seed: int = 0,
+) -> EcoPred:
+    """Offline-profile an EcoPred for (model, chip) — reusable across runs."""
+    hw = HardwareModel(model, chip, tp)
+    cap = kv_cap or max(50_000, hw.kv_capacity_tokens())
+    pred = EcoPred(freq_options, seed=seed)
+    pred.offline_profile(
+        hw,
+        ProfileRanges(
+            max_tokens=prefill_tokens,
+            max_requests=max_running,
+            max_kv_tokens=cap,
+        ),
+    )
+    return pred
+
+
+# ---------------------------------------------------------------------------
+# Cluster
+# ---------------------------------------------------------------------------
+
+_ARRIVAL, _P_DONE, _JOIN_D, _D_DONE, _CHAOS = range(5)
+
+
+class PDCluster:
+    def __init__(self, cfg: ClusterConfig):
+        self.cfg = cfg
+        self.hw = HardwareModel(cfg.model, cfg.chip, cfg.tp)
+        self.kv_cap = cfg.kv_capacity_tokens or max(
+            50_000, self.hw.kv_capacity_tokens()
+        )
+        fo = tuple(cfg.freq_options or cfg.chip.freq_levels_2)
+        fo_p = tuple(cfg.freq_options_prefill or fo)
+        self.freq_options = fo
+        self.predictor = cfg.predictor or build_predictor(
+            cfg.model, cfg.chip, sorted(set(fo) | set(fo_p)), cfg.tp,
+            self.kv_cap, cfg.decode_max_running, cfg.prefill_batch_tokens,
+            cfg.seed,
+        )
+        self.predictor.adapt_every = cfg.adapt_every
+        self.predictor.online_enabled = cfg.online_adapt
+
+        self.prefill: List[PrefillEngine] = []
+        self.decode: List[DecodeEngine] = []
+        for i in range(cfg.n_prefill):
+            self.prefill.append(self._make_prefill(i, fo_p))
+        for i in range(cfg.n_decode):
+            self.decode.append(self._make_decode(i, fo))
+
+        self.prefill_router: Router = RoundRobinRouter()
+        if cfg.policy == "voltana":
+            route_ef = EcoFreq(fo, self.predictor, cfg.slo_ttft_s,
+                               cfg.slo_itl_s)
+            self.decode_router: Router = EcoRoute(route_ef, cfg.delta)
+        else:
+            self.decode_router = RoundRobinRouter()
+
+        # event loop state
+        self._heap: List[tuple] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+        self.requests: List[Request] = []
+        self._bias_ewma: Dict[int, float] = {}
+
+    # -- construction -------------------------------------------------------
+    def _controller(self, freq_options: Sequence[float]) -> FreqController:
+        c = self.cfg
+        if c.policy == "static":
+            assert c.static_freq is not None
+            return StaticFreq(c.static_freq)
+        if c.policy == "powercap":
+            from repro.core.ecofreq import PowerCapFreq
+
+            assert c.power_cap_w is not None
+            return PowerCapFreq(c.chip, c.power_cap_w)
+        ef = EcoFreq(freq_options, self.predictor, c.slo_ttft_s, c.slo_itl_s)
+        if c.control_interval_s:
+            from repro.core.ecofreq import IntervalFreq
+
+            return IntervalFreq(ef, c.control_interval_s)
+        return ef
+
+    def _make_prefill(self, idx: int, fo) -> PrefillEngine:
+        c = self.cfg
+        if c.backend_factory is not None:
+            backend = c.backend_factory("prefill", idx, self.hw,
+                                        c.seed * 101 + idx)
+        else:
+            backend = SimBackend(self.hw, c.noise_sigma,
+                                 seed=c.seed * 101 + idx)
+        return PrefillEngine(
+            idx=idx,
+            backend=backend,
+            controller=self._controller(fo),
+            predictor=self.predictor,
+            max_batch_tokens=c.prefill_batch_tokens,
+            record_trace=c.record_traces,
+        )
+
+    def _make_decode(self, idx: int, fo) -> DecodeEngine:
+        c = self.cfg
+        slow = (c.straggler_factors or {}).get(idx, 1.0)
+        if c.backend_factory is not None:
+            backend = c.backend_factory("decode", idx, self.hw,
+                                        c.seed * 211 + idx)
+            backend.slow_factor = slow
+        else:
+            backend = SimBackend(
+                self.hw, c.noise_sigma, seed=c.seed * 211 + idx,
+                slow_factor=slow,
+            )
+        return DecodeEngine(
+            idx=idx,
+            backend=backend,
+            controller=self._controller(fo),
+            predictor=self.predictor,
+            max_running=c.decode_max_running,
+            kv_capacity_tokens=self.kv_cap,
+            record_trace=c.record_traces,
+        )
+
+    # -- event helpers --------------------------------------------------------
+    def _push(self, t: float, kind: int, data) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, data))
+
+    def schedule_failure(self, t: float, phase: str, idx: int) -> None:
+        self._push(t, _CHAOS, ("fail", phase, idx))
+
+    def schedule_scale_out(self, t: float, phase: str = "decode") -> None:
+        self._push(t, _CHAOS, ("scale_out", phase, None))
+
+    # -- instance kicks -------------------------------------------------------
+    def _kick_prefill(self, e: PrefillEngine) -> None:
+        started = e.start_iteration(self.now)
+        if started is not None:
+            dt, _ = started
+            self._push(self.now + dt, _P_DONE, e.idx)
+
+    def _kick_decode(self, e: DecodeEngine) -> None:
+        started = e.start_iteration(self.now)
+        if started is not None:
+            dt, _ = started
+            self._push(self.now + dt, _D_DONE, e.idx)
+
+    # -- routing --------------------------------------------------------------
+    def _route_prefill(self, req: Request) -> None:
+        views = [
+            InstanceView(
+                e.idx, len(e.queue), e.queued_tokens, alive=e.alive
+            )
+            for e in self.prefill
+        ]
+        idx = self.prefill_router.route(views, RouteRequest(req.prompt_len))
+        eng = self.prefill[idx]
+        eng.enqueue(req)
+        if not eng.busy:
+            self._kick_prefill(eng)
+
+    def _route_decode(self, req: Request) -> None:
+        views = [
+            InstanceView(
+                e.idx,
+                e.n_req,
+                e.n_kv,
+                has_waiting=len(e.waiting) > 0,
+                alive=e.alive,
+                kv_headroom=e.kv_headroom,
+                latency_bias_s=self._bias_ewma.get(e.idx, 0.0),
+            )
+            for e in self.decode
+        ]
+        idx = self.decode_router.route(views, RouteRequest(req.prompt_len))
+        # KV migration latency (prompt KV bytes over the transfer fabric)
+        bytes_ = req.prompt_len * self.hw.kv_bytes_per_token() + \
+            self.hw.state_bytes_per_request()
+        dt = self.cfg.transfer_const_s + bytes_ / self.cfg.transfer_bw
+        self._push(self.now + dt, _JOIN_D, (req, idx))
+
+    # -- straggler signal -------------------------------------------------------
+    def _update_bias(self, idx: int, measured: float, predicted: float):
+        prev = self._bias_ewma.get(idx, 0.0)
+        self._bias_ewma[idx] = 0.9 * prev + 0.1 * (measured - predicted)
+
+    # -- main loop ----------------------------------------------------------
+    def run(
+        self,
+        requests: List[Request],
+        max_time_s: float = 1e7,
+    ) -> RunMetrics:
+        self.requests = requests
+        for r in requests:
+            # defensive lifecycle reset: users legitimately re-run the same
+            # workload objects across policies
+            r.phase = Phase.QUEUED_PREFILL
+            r.tokens_out = 0
+            r.kv_len = 0
+            r.restarts = 0
+            r.t_first_token = r.t_finish = r.t_join_decode = -1.0
+            self._push(r.arrival_s, _ARRIVAL, r)
+        pending = len(requests)
+
+        while self._heap and pending > 0:
+            t, _, kind, data = heapq.heappop(self._heap)
+            if t > max_time_s:
+                break
+            self.now = t
+
+            if kind == _ARRIVAL:
+                self._route_prefill(data)
+
+            elif kind == _P_DONE:
+                eng = self.prefill[data]
+                if not eng.alive:
+                    continue
+                for r in eng.finish_iteration(self.now):
+                    self._route_decode(r)
+                self._kick_prefill(eng)
+
+            elif kind == _JOIN_D:
+                req, idx = data
+                eng = self.decode[idx]
+                if not eng.alive:  # died while KV was in flight
+                    req.restarts += 1
+                    req.tokens_out = 0
+                    req.kv_len = 0
+                    self._route_prefill(req)
+                    continue
+                eng.enqueue(req)
+                if not eng.busy:
+                    self._kick_decode(eng)
+
+            elif kind == _D_DONE:
+                eng = self.decode[data]
+                if not eng.alive:
+                    continue
+                measured = eng._iter_cost.time_s
+                pred = self.predictor.predict_decode(
+                    eng._iter_f, eng.n_req, eng.n_kv
+                )[0] if eng.running else measured
+                self._update_bias(eng.idx, measured, pred)
+                done = eng.finish_iteration(self.now)
+                pending -= len(done)
+                self._kick_decode(eng)
+
+            elif kind == _CHAOS:
+                action, phase, idx = data
+                if action == "fail":
+                    if phase == "decode":
+                        lost = self.decode[idx].fail()
+                    else:
+                        eng = self.prefill[idx]
+                        eng.alive = False
+                        lost = list(eng.current_batch) + list(eng.queue)
+                        eng.current_batch = []
+                        eng.queue.clear()
+                        for r in lost:
+                            r.restarts += 1
+                    for r in lost:  # KV lost: back through prefill
+                        r.tokens_out = 0
+                        r.kv_len = 0
+                        self._route_prefill(r)
+                elif action == "scale_out":
+                    if phase == "decode":
+                        e = self._make_decode(
+                            len(self.decode), self.freq_options
+                        )
+                        self.decode.append(e)
+                    else:
+                        e = self._make_prefill(
+                            len(self.prefill), self.freq_options
+                        )
+                        self.prefill.append(e)
+
+        end = self.now
+        energies = []
+        for e in self.prefill + self.decode:
+            e.energy.span_s = end
+            energies.append(e.energy)
+        return RunMetrics(
+            requests=requests,
+            instances=energies,
+            slo_ttft_s=self.cfg.slo_ttft_s,
+            slo_itl_s=self.cfg.slo_itl_s,
+            duration_s=end,
+        )

@@ -1,0 +1,273 @@
+"""P/D instance engines + execution backends.
+
+One engine class per phase; the *control plane* (continuous batching,
+EcoFreq query, EcoPred recording, energy integration) is identical across
+backends. Backends provide the iteration's latency/energy ground truth and
+— for the real-JAX backend — the actual tokens:
+
+* :class:`SimBackend` — the roofline-calibrated
+  :class:`~repro.core.hwmodel.HardwareModel` plus multiplicative lognormal
+  measurement noise. Used for the paper-scale benchmarks.
+* :class:`RealBackend` (``repro.serving.realengine``) — actual JAX
+  forwards of a reduced model; the virtual clock still advances by the
+  hardware model's time (CPU wall time is meaningless for TPU SLOs), so
+  controller behavior is identical while tokens are real.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.ecofreq import BatchInfo, FreqController, SystemState
+from repro.core.ecopred import EcoPred
+from repro.core.hwmodel import HardwareModel, IterCost
+from repro.serving.metrics import InstanceEnergy
+from repro.serving.request import Phase, Request
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+
+class SimBackend:
+    """Latency/energy from the hardware model with measurement noise."""
+
+    def __init__(self, hw: HardwareModel, noise_sigma: float = 0.02,
+                 seed: int = 0, slow_factor: float = 1.0):
+        self.hw = hw
+        self.noise_sigma = noise_sigma
+        self.slow_factor = slow_factor  # straggler injection (>1 == slow)
+        self._rng = np.random.default_rng(seed)
+
+    def _noise(self) -> float:
+        if self.noise_sigma <= 0:
+            return self.slow_factor
+        return self.slow_factor * float(
+            np.exp(self._rng.normal(0.0, self.noise_sigma))
+        )
+
+    def prefill_iter(self, reqs: List[Request], n_tok: int, f: float
+                     ) -> IterCost:
+        avg_ctx = n_tok / max(1, len(reqs))
+        c = self.hw.prefill_iter(n_tok, avg_ctx, f)
+        t = c.time_s * self._noise()
+        return IterCost(t, c.power_w, c.power_w * t, c.f_effective, c.theta)
+
+    def decode_iter(self, reqs: List[Request], n_req: int, n_kv: int,
+                    f: float) -> IterCost:
+        c = self.hw.decode_iter(n_req, n_kv, f)
+        t = c.time_s * self._noise()
+        return IterCost(t, c.power_w, c.power_w * t, c.f_effective, c.theta)
+
+    # real-compute hooks (no-ops in pure simulation)
+    def insert(self, req: Request) -> None:  # decode slot allocation
+        pass
+
+    def release(self, req: Request) -> None:  # decode slot free
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Prefill instance
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PrefillEngine:
+    idx: int
+    backend: SimBackend
+    controller: FreqController
+    predictor: Optional[EcoPred]
+    max_batch_tokens: int = 8_192
+    record_trace: bool = False
+
+    queue: Deque[Request] = field(default_factory=deque)
+    busy: bool = False
+    alive: bool = True
+    energy: InstanceEnergy = None  # set in __post_init__
+    current_batch: List[Request] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.energy = InstanceEnergy(
+            name=f"prefill-{self.idx}",
+            idle_power_w=self.backend.hw.idle_power(),
+        )
+
+    @property
+    def queued_tokens(self) -> int:
+        return sum(r.prompt_len for r in self.queue)
+
+    def enqueue(self, req: Request) -> None:
+        req.phase = Phase.QUEUED_PREFILL
+        req.prefill_instance = self.idx
+        self.queue.append(req)
+
+    def form_batch(self) -> Tuple[List[Request], int]:
+        """FCFS whole-prompt batching under the token budget (>=1 req)."""
+        batch: List[Request] = []
+        tokens = 0
+        while self.queue:
+            nxt = self.queue[0]
+            if batch and tokens + nxt.prompt_len > self.max_batch_tokens:
+                break
+            batch.append(self.queue.popleft())
+            tokens += nxt.prompt_len
+        return batch, tokens
+
+    def start_iteration(self, now: float) -> Optional[Tuple[float, IterCost]]:
+        """Begin one prefill iteration; returns (duration, cost) or None."""
+        if not self.queue or not self.alive:
+            self.busy = False
+            return None
+        batch, n_tok = self.form_batch()
+        self.current_batch = batch
+        for r in batch:
+            r.phase = Phase.RUNNING_PREFILL
+            r.t_prefill_start = now
+        max_wait = max(now - r.arrival_s for r in batch)
+        f = self.controller.select(
+            SystemState(has_waiting=len(self.queue) > 0, now_s=now),
+            BatchInfo("prefill", n_tok=n_tok, max_waiting_s=max_wait),
+        )
+        cost = self.backend.prefill_iter(batch, n_tok, f)
+        self.busy = True
+        self.energy.busy_s += cost.time_s
+        self.energy.busy_j += cost.energy_j
+        if self.record_trace:
+            self.energy.freq_trace.append((now, cost.f_effective, n_tok))
+        if self.predictor is not None:
+            self.predictor.record_prefill(f, n_tok, cost.time_s)
+        return cost.time_s, cost
+
+    def finish_iteration(self, now: float) -> List[Request]:
+        """Iteration done: emit first tokens; returns the finished batch."""
+        batch = self.current_batch
+        self.current_batch = []
+        for r in batch:
+            r.t_first_token = now
+            r.phase = Phase.TRANSFERRING
+        return batch
+
+
+# ---------------------------------------------------------------------------
+# Decode instance
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DecodeEngine:
+    idx: int
+    backend: SimBackend
+    controller: FreqController
+    predictor: Optional[EcoPred]
+    max_running: int = 512
+    kv_capacity_tokens: int = 2_000_000
+    record_trace: bool = False
+
+    waiting: Deque[Request] = field(default_factory=deque)
+    running: List[Request] = field(default_factory=list)
+    busy: bool = False
+    alive: bool = True
+    energy: InstanceEnergy = None
+    _iter_cost: Optional[IterCost] = None
+    _iter_f: float = 0.0
+
+    def __post_init__(self):
+        self.energy = InstanceEnergy(
+            name=f"decode-{self.idx}",
+            idle_power_w=self.backend.hw.idle_power(),
+        )
+
+    # -- state-space coordinates (what the router sees) --------------------
+    @property
+    def n_req(self) -> int:
+        return len(self.running)
+
+    @property
+    def n_kv(self) -> int:
+        return sum(r.kv_len for r in self.running)
+
+    @property
+    def kv_headroom(self) -> int:
+        return self.kv_capacity_tokens - self.n_kv - sum(
+            r.prompt_len for r in self.waiting
+        )
+
+    def enqueue(self, req: Request) -> None:
+        req.phase = Phase.QUEUED_DECODE
+        req.decode_instance = self.idx
+        req.kv_len = req.prompt_len
+        self.waiting.append(req)
+
+    def _admit(self, now: float) -> None:
+        while (
+            self.waiting
+            and len(self.running) < self.max_running
+            and self.n_kv + self.waiting[0].kv_len + len(self.running)
+            <= self.kv_capacity_tokens
+        ):
+            r = self.waiting.popleft()
+            r.phase = Phase.RUNNING_DECODE
+            r.t_join_decode = now
+            self.backend.insert(r)
+            self.running.append(r)
+
+    def start_iteration(self, now: float) -> Optional[Tuple[float, IterCost]]:
+        if not self.alive:
+            self.busy = False
+            return None
+        self._admit(now)
+        if not self.running:
+            self.busy = False
+            return None
+        n_req, n_kv = self.n_req, self.n_kv
+        f = self.controller.select(
+            SystemState(has_waiting=len(self.waiting) > 0, now_s=now),
+            BatchInfo("decode", n_req=n_req, n_kv=n_kv),
+        )
+        cost = self.backend.decode_iter(self.running, n_req, n_kv, f)
+        self._iter_cost, self._iter_f = cost, f
+        self.busy = True
+        self.energy.busy_s += cost.time_s
+        self.energy.busy_j += cost.energy_j
+        if self.record_trace:
+            self.energy.freq_trace.append((now, cost.f_effective, n_req))
+        if self.predictor is not None:
+            self.predictor.record_decode(f, n_req, n_kv, cost.time_s)
+        return cost.time_s, cost
+
+    def finish_iteration(self, now: float) -> List[Request]:
+        """One token per running request; returns newly finished requests."""
+        dt = self._iter_cost.time_s
+        done: List[Request] = []
+        still: List[Request] = []
+        for r in self.running:
+            r.tokens_out += 1
+            r.kv_len += 1
+            r.max_itl_s = max(r.max_itl_s, dt)
+            if r.tokens_out >= r.decode_len:
+                r.t_finish = now
+                r.phase = Phase.FINISHED
+                self.backend.release(r)
+                done.append(r)
+            else:
+                still.append(r)
+        self.running = still
+        return done
+
+    # -- fault tolerance ----------------------------------------------------
+    def fail(self) -> List[Request]:
+        """Instance dies: KV is lost; in-flight requests need re-prefill."""
+        self.alive = False
+        lost = list(self.running) + list(self.waiting)
+        self.running.clear()
+        self.waiting.clear()
+        for r in lost:
+            r.restarts += 1
+            r.tokens_out = 0
+            r.kv_len = 0
+        return lost

@@ -1,0 +1,113 @@
+"""Serving metrics: TTFT / ITL SLO attainment, energy, EPOT, throughput.
+
+SLO attainment follows DistServe (paper §VI-A): the percentage of finished
+requests with TTFT <= S_P and mean ITL <= S_D respectively. Energy is the
+paper's end-to-end Joules integrated over every instance (busy + idle).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+@dataclass
+class InstanceEnergy:
+    """Per-instance energy/time bookkeeping."""
+
+    name: str
+    busy_s: float = 0.0
+    busy_j: float = 0.0
+    span_s: float = 0.0  # wall-clock span the instance was alive
+    idle_power_w: float = 0.0
+    freq_trace: List[tuple] = field(default_factory=list)  # (t, f, n)
+
+    @property
+    def idle_j(self) -> float:
+        return max(0.0, self.span_s - self.busy_s) * self.idle_power_w
+
+    @property
+    def total_j(self) -> float:
+        return self.busy_j + self.idle_j
+
+
+@dataclass
+class RunMetrics:
+    requests: List[Request]
+    instances: List[InstanceEnergy]
+    slo_ttft_s: float
+    slo_itl_s: float
+    duration_s: float = 0.0
+
+    # -- per-phase ----------------------------------------------------------
+    def _done(self) -> List[Request]:
+        return [r for r in self.requests if r.finished]
+
+    def ttft_values(self) -> np.ndarray:
+        return np.array([r.ttft_s for r in self._done()])
+
+    def itl_values(self) -> np.ndarray:
+        return np.array([r.itl_mean_s for r in self._done() if r.decode_len > 0])
+
+    def ttft_attainment(self) -> float:
+        v = self.ttft_values()
+        return float((v <= self.slo_ttft_s).mean()) if v.size else 0.0
+
+    def itl_attainment(self) -> float:
+        v = self.itl_values()
+        return float((v <= self.slo_itl_s).mean()) if v.size else 1.0
+
+    def finished_frac(self) -> float:
+        return len(self._done()) / max(1, len(self.requests))
+
+    # -- energy -------------------------------------------------------------
+    def energy_j(self) -> float:
+        return sum(e.total_j for e in self.instances)
+
+    def energy_by_phase(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for e in self.instances:
+            key = e.name.split("-")[0]  # "prefill" / "decode"
+            out[key] = out.get(key, 0.0) + e.total_j
+        return out
+
+    def output_tokens(self) -> int:
+        return sum(r.decode_len for r in self._done())
+
+    def epot_j(self) -> float:
+        """Energy per output token."""
+        t = self.output_tokens()
+        return self.energy_j() / t if t else float("inf")
+
+    def throughput_tok_s(self) -> float:
+        return self.output_tokens() / self.duration_s if self.duration_s else 0.0
+
+    # -- presentation ---------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        return {
+            "n_requests": len(self.requests),
+            "finished_frac": round(self.finished_frac(), 4),
+            "ttft_attain": round(self.ttft_attainment(), 4),
+            "itl_attain": round(self.itl_attainment(), 4),
+            "ttft_p50_ms": round(float(np.median(self.ttft_values()) * 1e3), 2)
+            if len(self._done())
+            else 0.0,
+            "itl_p50_ms": round(float(np.median(self.itl_values()) * 1e3), 2)
+            if len(self.itl_values())
+            else 0.0,
+            "energy_j": round(self.energy_j(), 1),
+            "epot_mj": round(self.epot_j() * 1e3, 3),
+            "throughput_tok_s": round(self.throughput_tok_s(), 1),
+        }
+
+    def cdf(self, metric: str, points: int = 200):
+        v = np.sort(
+            self.ttft_values() if metric == "ttft" else self.itl_values()
+        )
+        if v.size == 0:
+            return np.zeros(0), np.zeros(0)
+        q = np.linspace(0, 1, points)
+        return np.quantile(v, q), q

@@ -1,0 +1,158 @@
+"""RealBackend — actual JAX model execution behind the serving control plane.
+
+Drop-in replacement for :class:`~repro.serving.engine.SimBackend`: the
+cluster's schedulers/controllers/routers are untouched; this backend
+additionally runs real forwards of a (reduced) model, so examples and
+integration tests exercise tokens end-to-end:
+
+* prefill: one ``model.prefill`` per request (B=1, prompt padded to a
+  power-of-two bucket to bound recompilation), emitting the real first
+  token and stashing the request's KV/SSM cache for migration.
+* decode: a slot-batched ``model.decode_step`` per engine iteration over
+  a fixed-capacity cache; requests are scattered into free slots on admit
+  and freed on completion (continuous batching over real state).
+
+The **virtual clock still advances by the hardware model's time** — CPU
+wall time is meaningless for TPU SLO semantics — so latency/energy results
+are identical between backends; only token content differs (real here).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.hwmodel import HardwareModel
+from repro.models import model as M
+from repro.serving.engine import SimBackend
+from repro.serving.request import Request
+
+
+def _bucket(n: int, lo: int = 16) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class RealBackend(SimBackend):
+    """Executes real JAX forwards; inherits Sim timing/energy accounting."""
+
+    def __init__(
+        self,
+        hw: HardwareModel,
+        cfg: ModelConfig,
+        params,
+        *,
+        slots: int = 8,
+        max_len: int = 256,
+        noise_sigma: float = 0.0,
+        seed: int = 0,
+    ):
+        super().__init__(hw, noise_sigma, seed)
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        # decode slot state
+        self.cache = M.init_cache(cfg, slots, max_len)
+        self.slot_of: Dict[int, int] = {}  # rid -> slot
+        self.free = list(range(slots))[::-1]
+        self.next_tok = np.zeros(slots, np.int32)
+        self.pos = np.zeros(slots, np.int32)
+
+        self._prefill_jit = jax.jit(
+            partial(M.prefill, cfg=cfg, max_len=max_len),
+            static_argnames=(),
+        )
+        self._decode_jit = jax.jit(partial(M.decode_step, cfg=cfg))
+
+    # ------------------------------------------------------------------
+    # Prefill: real first token + cache stash
+    # ------------------------------------------------------------------
+    def prefill_iter(self, reqs: List[Request], n_tok: int, f: float):
+        for r in reqs:
+            toks = np.asarray(r.prompt_tokens, np.int32)
+            pad = _bucket(len(toks))
+            if pad > self.max_len:
+                raise ValueError(
+                    f"prompt {len(toks)} exceeds cache capacity "
+                    f"{self.max_len}"
+                )
+            buf = np.zeros((1, pad), np.int32)
+            buf[0, : len(toks)] = toks
+            logits, cache = self._prefill_jit(
+                self.params,
+                tokens=jnp.asarray(buf),
+                lengths=jnp.asarray([len(toks)], jnp.int32),
+            )
+            first = int(jnp.argmax(logits[0]))
+            r.output_tokens.append(first)
+            r.kv_handoff = cache  # migrates with the request (P -> D)
+        return super().prefill_iter(reqs, n_tok, f)
+
+    # ------------------------------------------------------------------
+    # Decode: slot insert / batched step / release
+    # ------------------------------------------------------------------
+    def insert(self, req: Request) -> None:
+        assert self.free, "no free decode slots (max_running too high?)"
+        slot = self.free.pop()
+        self.slot_of[req.rid] = slot
+        cache, req.kv_handoff = req.kv_handoff, None
+
+        def put(dst, src):
+            # dst: (n_blocks, slots, ...); src: (n_blocks, 1, ...)
+            return dst.at[:, slot].set(src[:, 0])
+
+        self.cache = jax.tree.map(put, self.cache, cache)
+        self.next_tok[slot] = req.output_tokens[-1]
+        self.pos[slot] = req.prompt_len
+
+    def release(self, req: Request) -> None:
+        slot = self.slot_of.pop(req.rid)
+        self.free.append(slot)
+
+    def decode_iter(self, reqs: List[Request], n_req: int, n_kv: int,
+                    f: float):
+        if reqs:
+            logits, self.cache = self._decode_jit(
+                self.params,
+                tokens=jnp.asarray(self.next_tok),
+                cache=self.cache,
+                lengths=jnp.asarray(self.pos),
+            )
+            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            for r in reqs:
+                s = self.slot_of[r.rid]
+                r.output_tokens.append(int(nxt[s]))
+                self.next_tok[s] = nxt[s]
+                self.pos[s] += 1
+        return super().decode_iter(reqs, n_req, n_kv, f)
+
+
+def make_real_backend_factory(
+    cfg: ModelConfig,
+    params,
+    *,
+    slots: int = 8,
+    max_len: int = 256,
+):
+    """Factory for ClusterConfig.backend_factory: every instance gets its
+    own slot state but shares the (read-only) weights."""
+
+    def factory(kind: str, idx: int, hw: HardwareModel, seed: int):
+        if kind == "decode":
+            return RealBackend(
+                hw, cfg, params, slots=slots, max_len=max_len, seed=seed
+            )
+        # prefill instances stash per-request caches; slot state unused
+        return RealBackend(
+            hw, cfg, params, slots=1, max_len=max_len, seed=seed
+        )
+
+    return factory

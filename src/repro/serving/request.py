@@ -1,0 +1,74 @@
+"""Request lifecycle for the P/D disaggregated serving system.
+
+States:  QUEUED_PREFILL -> RUNNING_PREFILL -> TRANSFERRING -> QUEUED_DECODE
+         -> RUNNING_DECODE -> FINISHED  (or FAILED on instance loss, after
+         which the request is re-queued for prefill — KV state is gone).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+class Phase(enum.Enum):
+    QUEUED_PREFILL = "queued_prefill"
+    RUNNING_PREFILL = "running_prefill"
+    TRANSFERRING = "transferring"
+    QUEUED_DECODE = "queued_decode"
+    RUNNING_DECODE = "running_decode"
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival_s: float
+    prompt_len: int
+    decode_len: int  # decode iterations to run (inter-token intervals);
+    # total output tokens = decode_len + 1 (the first comes from prefill)
+    kind: str = "conversation"  # workload tag (Azure trace: conversation/code)
+
+    # lifecycle
+    phase: Phase = Phase.QUEUED_PREFILL
+    prefill_instance: int = -1
+    decode_instance: int = -1
+    restarts: int = 0  # instance-failure re-queues
+
+    # timestamps (simulation seconds)
+    t_prefill_start: float = -1.0
+    t_first_token: float = -1.0  # = prefill completion
+    t_join_decode: float = -1.0
+    t_finish: float = -1.0
+
+    # decode progress
+    tokens_out: int = 0  # decode tokens generated so far
+    kv_len: int = 0  # resident tokens in the decode instance's cache
+    max_itl_s: float = 0.0
+
+    # real-engine payloads (None in pure simulation)
+    prompt_tokens: Optional[list] = None
+    output_tokens: List[int] = field(default_factory=list)
+    kv_handoff: Optional[object] = None  # migrating KV cache (P -> D)
+
+    # -- metrics ------------------------------------------------------------
+    @property
+    def ttft_s(self) -> float:
+        return self.t_first_token - self.arrival_s
+
+    @property
+    def itl_mean_s(self) -> float:
+        """Mean inter-token latency over the decode phase (TPOT-style):
+        (finish - first_token) / decode tokens. DistServe-style attainment
+        compares this against the ITL SLO."""
+        if self.decode_len <= 0:
+            return 0.0
+        return (self.t_finish - self.t_first_token) / self.decode_len
+
+    @property
+    def finished(self) -> bool:
+        return self.phase == Phase.FINISHED
+
+    @property
+    def remaining(self) -> int:
+        return self.decode_len - self.tokens_out

@@ -1,0 +1,200 @@
+"""Workload generation: request arrival processes + length distributions.
+
+Length distributions are lognormals moment-matched to the paper's Appx. D
+Table I statistics (ShareGPT: prefill 280.3±375.6 / decode 190.9±209.2;
+LMSYS: 78.4±133.3 / 174.6±166.1). Arrivals are Poisson at a controlled RPS
+(§VI-A), with two structured generators on top:
+
+* ``azure_like`` — the Fig. 2 diurnal two-class (conversation / code) mix:
+  conversation prefill roughly flat, code peaking afternoon/evening with
+  short decodes.
+* ``synthetic_pd_ratio`` — the Appx. N trace whose prefill/decode demand
+  ratio oscillates on a minutes scale (alternating long-prompt/short-output
+  and short-prompt/long-output phases).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+# ---------------------------------------------------------------------------
+# Length distributions
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LengthDist:
+    """Lognormal moment-matched to (mean, std), clipped to [lo, hi]."""
+
+    mean: float
+    std: float
+    lo: int = 1
+    hi: int = 32_768
+
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        sigma2 = math.log(1.0 + (self.std / self.mean) ** 2)
+        mu = math.log(self.mean) - sigma2 / 2.0
+        x = rng.lognormal(mu, math.sqrt(sigma2), n)
+        return np.clip(np.round(x), self.lo, self.hi).astype(int)
+
+
+@dataclass(frozen=True)
+class DatasetDist:
+    name: str
+    prefill: LengthDist
+    decode: LengthDist
+
+
+# Paper Appx. D Table I
+SHAREGPT = DatasetDist(
+    "sharegpt",
+    prefill=LengthDist(280.27, 375.58),
+    decode=LengthDist(190.90, 209.15),
+)
+LMSYS = DatasetDist(
+    "lmsys",
+    prefill=LengthDist(78.40, 133.29),
+    decode=LengthDist(174.57, 166.13),
+)
+# Azure-trace-like per-class distributions (conversation ~ sharegpt-ish;
+# code: long prompts, short outputs — Fig. 2 discussion)
+AZURE_CONV = DatasetDist(
+    "azure-conv",
+    prefill=LengthDist(1020.0, 1330.0),
+    decode=LengthDist(211.0, 163.0),
+)
+AZURE_CODE = DatasetDist(
+    "azure-code",
+    prefill=LengthDist(2048.0, 1535.0),
+    decode=LengthDist(28.0, 60.0),
+)
+
+DATASETS = {"sharegpt": SHAREGPT, "lmsys": LMSYS}
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes
+# ---------------------------------------------------------------------------
+
+
+def poisson_workload(
+    dataset: DatasetDist,
+    rps: float,
+    duration_s: float,
+    seed: int = 0,
+    start_rid: int = 0,
+) -> List[Request]:
+    """Poisson arrivals at fixed RPS over ``duration_s`` (§VI-A)."""
+    rng = np.random.default_rng(seed)
+    n_est = int(rps * duration_s * 1.5) + 32
+    gaps = rng.exponential(1.0 / rps, n_est)
+    t = np.cumsum(gaps)
+    t = t[t < duration_s]
+    n = len(t)
+    p = dataset.prefill.sample(rng, n)
+    d = dataset.decode.sample(rng, n)
+    return [
+        Request(
+            rid=start_rid + i,
+            arrival_s=float(t[i]),
+            prompt_len=int(p[i]),
+            decode_len=int(d[i]),
+            kind=dataset.name,
+        )
+        for i in range(n)
+    ]
+
+
+def azure_like(
+    base_rps: float,
+    duration_s: float,
+    seed: int = 0,
+    day_s: float = 86_400.0,
+    t0_frac: float = 0.5,
+) -> List[Request]:
+    """Two-class diurnal mix (Fig. 2): conversation arrives ~flat; code RPS
+    follows a half-sine peaking in the afternoon/evening."""
+    rng = np.random.default_rng(seed)
+    reqs: List[Request] = []
+    rid = 0
+    # conversation: homogeneous Poisson
+    reqs += poisson_workload(AZURE_CONV, base_rps, duration_s, seed)
+    rid = len(reqs)
+    # code: inhomogeneous Poisson via thinning
+    lam_max = base_rps * 1.5
+    t, n_est = 0.0, int(lam_max * duration_s * 1.5) + 32
+    gaps = rng.exponential(1.0 / lam_max, n_est)
+    times = np.cumsum(gaps)
+    times = times[times < duration_s]
+    keep = []
+    for ti in times:
+        frac = ((ti / day_s) + t0_frac) % 1.0
+        lam = base_rps * 1.5 * max(0.0, math.sin(math.pi * frac)) ** 2
+        if rng.random() < lam / lam_max:
+            keep.append(ti)
+    n = len(keep)
+    p = AZURE_CODE.prefill.sample(rng, n)
+    d = AZURE_CODE.decode.sample(rng, n)
+    for i, ti in enumerate(keep):
+        reqs.append(
+            Request(rid + i, float(ti), int(p[i]), int(d[i]), kind="code")
+        )
+    reqs.sort(key=lambda r: r.arrival_s)
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
+
+
+def synthetic_pd_ratio(
+    rps: float,
+    duration_s: float,
+    period_s: float = 300.0,
+    seed: int = 0,
+) -> List[Request]:
+    """Appx. N: P/D demand ratio oscillating with ``period_s``. Alternates
+    prefill-heavy (long prompts, short outputs) and decode-heavy windows."""
+    rng = np.random.default_rng(seed)
+    heavy_p = DatasetDist(
+        "pd-prefill-heavy",
+        prefill=LengthDist(1600.0, 700.0),
+        decode=LengthDist(48.0, 32.0),
+    )
+    heavy_d = DatasetDist(
+        "pd-decode-heavy",
+        prefill=LengthDist(96.0, 64.0),
+        decode=LengthDist(420.0, 200.0),
+    )
+    gaps = rng.exponential(1.0 / rps, int(rps * duration_s * 1.5) + 32)
+    times = np.cumsum(gaps)
+    times = times[times < duration_s]
+    reqs = []
+    for i, ti in enumerate(times):
+        window = int(ti / period_s) % 2
+        ds = heavy_p if window == 0 else heavy_d
+        reqs.append(
+            Request(
+                i, float(ti),
+                int(ds.prefill.sample(rng, 1)[0]),
+                int(ds.decode.sample(rng, 1)[0]),
+                kind=ds.name,
+            )
+        )
+    return reqs
+
+
+def attach_tokens(
+    reqs: List[Request], vocab_size: int, seed: int = 0
+) -> List[Request]:
+    """Give each request concrete prompt token ids (RealEngine path)."""
+    rng = np.random.default_rng(seed)
+    for r in reqs:
+        r.prompt_tokens = rng.integers(
+            0, vocab_size, size=r.prompt_len
+        ).tolist()
+    return reqs

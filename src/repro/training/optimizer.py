@@ -1,0 +1,125 @@
+"""AdamW with fp32 moments + LR schedules (incl. MiniCPM's WSD).
+
+Optimizer state is a pytree mirroring the params (so the same sharding
+specs apply — sharded optimizer state is ZeRO-style for free under pjit).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_opt_state(params: PyTree) -> Dict[str, PyTree]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(param_specs: PyTree) -> Dict[str, PyTree]:
+    """Sharding specs for the optimizer state (mirrors the params)."""
+    from jax.sharding import PartitionSpec as P
+
+    return {
+        "m": param_specs,
+        "v": param_specs,
+        "step": P(),
+    }
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    sq = sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)
+    )
+    return jnp.sqrt(sq)
+
+
+def adamw_update(
+    params: PyTree,
+    grads: PyTree,
+    state: Dict[str, PyTree],
+    cfg: AdamWConfig,
+    lr: jax.Array,
+) -> Tuple[PyTree, Dict[str, PyTree]]:
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                        + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def wsd_schedule(
+    warmup: int, stable: int, decay: int,
+    peak_lr: float, min_lr_frac: float = 0.1,
+) -> Callable[[jax.Array], jax.Array]:
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, flat plateau,
+    exponential decay to ``min_lr_frac * peak`` over the decay span."""
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(s / max(warmup, 1), 1.0)
+        in_decay = jnp.maximum(s - (warmup + stable), 0.0)
+        frac = jnp.minimum(in_decay / max(decay, 1), 1.0)
+        dec = peak_lr * jnp.power(min_lr_frac, frac)
+        return jnp.where(s <= warmup + stable, warm, dec)
+
+    return f
+
+
+def cosine_schedule(
+    warmup: int, total: int, peak_lr: float, min_lr_frac: float = 0.1
+) -> Callable[[jax.Array], jax.Array]:
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(s / max(warmup, 1), 1.0)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (
+            min_lr_frac + (1 - min_lr_frac) * 0.5 * (1 + jnp.cos(math.pi * t))
+        )
+        return jnp.where(s <= warmup, warm, cos)
+
+    return f

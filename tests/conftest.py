@@ -1,0 +1,5 @@
+"""Test config. Tests see the default device set (1 CPU device) — the
+512-device override belongs ONLY to the dry-run launcher."""
+import warnings
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)

@@ -1,0 +1,100 @@
+"""EcoFreq (Alg. 1) semantics + baseline controllers."""
+import numpy as np
+import pytest
+
+from repro.configs.registry import REGISTRY
+from repro.core.ecofreq import (
+    BatchInfo,
+    EcoFreq,
+    IntervalFreq,
+    PowerCapFreq,
+    StaticFreq,
+    SystemState,
+)
+from repro.core.ecopred import EcoPred
+from repro.core.hwmodel import HardwareModel
+from repro.core.power import A100
+from repro.core import power as P
+
+
+@pytest.fixture(scope="module")
+def pred():
+    hw = HardwareModel(REGISTRY["llama-3.1-8b"], A100)
+    return EcoPred(A100.freq_levels_5).offline_profile(
+        hw, n_prefill=1200, n_decode=3000, noise_sigma=0.0
+    )
+
+
+@pytest.fixture(scope="module")
+def ef(pred):
+    return EcoFreq(A100.freq_levels_5, pred, slo_ttft_s=0.6, slo_itl_s=0.06)
+
+
+def test_queue_check_forces_max(ef):
+    """Alg. 1 step ①: any waiting request ⇒ max(F)."""
+    b = BatchInfo("decode", n_req=2, n_kv=2000)
+    assert ef.select(SystemState(has_waiting=True), b) == max(ef.freq_options)
+    assert ef.select(SystemState(has_waiting=False), b) == min(
+        ef.freq_options
+    )
+
+
+def test_selection_is_minimum_satisfying(ef, pred):
+    """Alg. 1 step ③: the chosen f is the LOWEST option meeting the SLO;
+    every lower option violates it."""
+    st = SystemState()
+    for n_req, n_kv in ((2, 2000), (64, 64000), (300, 450000), (500, 800000)):
+        b = BatchInfo("decode", n_req=n_req, n_kv=n_kv)
+        f = ef.select(st, b)
+        assert f in ef.freq_options
+        t = pred.predict_decode(f, n_req, n_kv)[0]
+        if f != max(ef.freq_options):
+            assert t <= ef.slo_itl_s
+        for lower in [x for x in ef.freq_options if x < f]:
+            assert pred.predict_decode(lower, n_req, n_kv)[0] > ef.slo_itl_s
+
+
+def test_prefill_budget_deducts_waiting_time(ef):
+    """Eq. 5: S = S_P − max(T_waiting)."""
+    st = SystemState()
+    relaxed = ef.select(st, BatchInfo("prefill", n_tok=2048,
+                                      max_waiting_s=0.0))
+    tight = ef.select(st, BatchInfo("prefill", n_tok=2048,
+                                    max_waiting_s=0.55))
+    assert tight >= relaxed
+    assert tight == max(ef.freq_options)
+
+
+def test_exhausted_budget_returns_max(ef):
+    st = SystemState()
+    b = BatchInfo("prefill", n_tok=64, max_waiting_s=10.0)
+    assert ef.select(st, b) == max(ef.freq_options)
+
+
+def test_static_and_powercap():
+    assert StaticFreq(1005.0).select(SystemState(), BatchInfo("decode")) \
+        == 1005.0
+    pc = PowerCapFreq(A100, 350.0)
+    f = pc.select(SystemState(), BatchInfo("decode"))
+    assert P.power(A100, f, 1.0) <= 350.0 + 1.0
+    assert f < A100.f_max  # the cap binds
+
+
+def test_interval_controller_holds_decision(ef):
+    ic = IntervalFreq(ef, interval_s=5.0)
+    b_small = BatchInfo("decode", n_req=2, n_kv=2000)
+    b_big = BatchInfo("decode", n_req=500, n_kv=800000)
+    f0 = ic.select(SystemState(now_s=0.0), b_small)
+    # load spikes but the window hasn't elapsed: decision held (stale)
+    f1 = ic.select(SystemState(now_s=2.0), b_big)
+    assert f1 == f0
+    f2 = ic.select(SystemState(now_s=6.0), b_big)
+    assert f2 == max(ef.freq_options)
+
+
+def test_straggler_bias_raises_frequency(pred):
+    fast = EcoFreq(A100.freq_levels_2, pred, 0.6, 0.06)
+    slow = EcoFreq(A100.freq_levels_2, pred, 0.6, 0.06,
+                   latency_bias_s=0.05)
+    b = BatchInfo("decode", n_req=64, n_kv=64000)
+    assert slow.select(SystemState(), b) >= fast.select(SystemState(), b)

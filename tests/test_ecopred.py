@@ -1,0 +1,79 @@
+"""EcoPred: offline accuracy, online adaptation, batched what-if."""
+import numpy as np
+import pytest
+
+from repro.configs.registry import REGISTRY
+from repro.core.ecopred import EcoPred, ProfileRanges
+from repro.core.hwmodel import HardwareModel
+from repro.core.power import A100
+
+
+@pytest.fixture(scope="module")
+def hw():
+    return HardwareModel(REGISTRY["llama-3.1-8b"], A100)
+
+
+@pytest.fixture(scope="module")
+def pred(hw):
+    return EcoPred(A100.freq_levels_2, seed=0).offline_profile(
+        hw, ProfileRanges(max_kv_tokens=600_000)
+    )
+
+
+def test_decode_mae_within_2pct(hw, pred):
+    rng = np.random.default_rng(5)
+    q = rng.integers(1, 512, 300)
+    k = (q * rng.integers(200, 2000, 300)).clip(1, 600_000)
+    f = rng.choice(A100.freq_levels_2, 300)
+    true = np.array([
+        hw.decode_time(int(a), int(b), float(c)) for a, b, c in zip(q, k, f)
+    ])
+    mae = np.abs(pred.predict_decode(f, q, k) - true).mean()
+    assert mae / true.mean() < 0.02
+
+
+def test_prefill_mae_within_5pct(hw, pred):
+    rng = np.random.default_rng(6)
+    t = rng.integers(16, 16384, 300)
+    f = rng.choice(A100.freq_levels_2, 300)
+    true = np.array([
+        hw.prefill_time(int(a), float(c)) for a, c in zip(t, f)
+    ])
+    mae = np.abs(pred.predict_prefill(f, t) - true).mean()
+    assert mae / true.mean() < 0.05
+
+
+def test_vectorized_matches_scalar(pred):
+    f = np.array([1005.0, 1410.0, 1005.0])
+    q = np.array([10, 200, 400])
+    k = np.array([8000, 160000, 320000])
+    batched = pred.predict_decode(f, q, k)
+    singles = [
+        pred.predict_decode(f[i], q[i], k[i])[0] for i in range(3)
+    ]
+    np.testing.assert_allclose(batched, singles, rtol=1e-12)
+
+
+def test_online_adaptation_fixes_shift(hw):
+    pred = EcoPred(A100.freq_levels_2, adapt_every=400, seed=1)
+    pred.offline_profile(hw, ProfileRanges(max_kv_tokens=600_000))
+    rng = np.random.default_rng(7)
+    # online world runs 10% slower than the offline profile
+    def sample(n):
+        q = rng.integers(16, 256, n)
+        k = q * 500
+        f = rng.choice(A100.freq_levels_2, n)
+        y = np.array([
+            hw.decode_time(int(a), int(b), float(c)) * 1.10
+            for a, b, c in zip(q, k, f)
+        ])
+        return f, q, k, y
+
+    f, q, k, y = sample(300)
+    before = np.abs(pred.predict_decode(f, q, k) - y).mean()
+    for ff, qq, kk, yy in zip(*sample(500)):
+        pred.record_decode(float(ff), int(qq), int(kk), float(yy))
+    pred.flush_adaptation()
+    after = np.abs(pred.predict_decode(f, q, k) - y).mean()
+    assert after < before * 0.6
+    assert pred.n_adaptations >= 1

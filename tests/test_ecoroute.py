@@ -1,0 +1,134 @@
+"""EcoRoute (Alg. 2): case semantics, Δ guardrail, the paper's
+520-request motivating example, fault tolerance."""
+import numpy as np
+import pytest
+
+from repro.configs.registry import REGISTRY
+from repro.core.ecofreq import EcoFreq
+from repro.core.ecopred import EcoPred
+from repro.core.ecoroute import (
+    EcoRoute,
+    FaultTolerantRouter,
+    InstanceView,
+    RoundRobinRouter,
+    RouteRequest,
+)
+from repro.core.hwmodel import HardwareModel
+from repro.core.power import A100
+
+
+@pytest.fixture(scope="module")
+def ef():
+    hw = HardwareModel(REGISTRY["llama-3.1-8b"], A100)
+    pred = EcoPred(A100.freq_levels_2).offline_profile(
+        hw, n_prefill=800, n_decode=4000, noise_sigma=0.0
+    )
+    return EcoFreq(A100.freq_levels_2, pred, slo_ttft_s=0.6, slo_itl_s=0.06)
+
+
+def _route_stream(router, n_reqs, n_inst, prompt_len=600):
+    """Sequentially route n_reqs requests that stay resident."""
+    counts = [0] * n_inst
+    kv = [0] * n_inst
+    for _ in range(n_reqs):
+        views = [
+            InstanceView(i, counts[i], kv[i]) for i in range(n_inst)
+        ]
+        i = router.route(views, RouteRequest(prompt_len))
+        counts[i] += 1
+        kv[i] += prompt_len
+    return counts
+
+
+def test_round_robin_splits_evenly(ef):
+    counts = _route_stream(RoundRobinRouter(), 520, 2)
+    assert counts == [260, 260]
+
+
+def test_motivating_example_asymmetric_split(ef):
+    """Paper §V-E: 520 requests on 2 instances with a cliff near 256 —
+    EcoRoute holds one instance below the boundary instead of pushing
+    both across (round-robin's 260/260)."""
+    er = EcoRoute(ef, delta=500.0)
+    counts = _route_stream(er, 520, 2)
+    assert sorted(counts) != [260, 260]
+    lo, hi = sorted(counts)
+    # the learned cliff sits within a few requests of 256 (tree binning)
+    cliff = _find_cliff(ef)
+    assert lo <= cliff < hi
+    assert lo + hi == 520
+
+
+def _find_cliff(ef, prompt_len=600):
+    from repro.core.ecofreq import BatchInfo, SystemState
+
+    prev = None
+    for q in range(1, 400):
+        f = ef.select(
+            SystemState(), BatchInfo("decode", n_req=q, n_kv=q * prompt_len)
+        )
+        if prev is not None and f > prev:
+            return q - 1
+        prev = f
+    return 399
+
+
+def test_case1_prefers_lowest_unchanged(ef):
+    """Some-but-not-all raise + spread ≤ Δ ⇒ pick the lowest unchanged."""
+    er = EcoRoute(ef, delta=500.0)
+    cliff = _find_cliff(ef)
+    views = [
+        InstanceView(0, cliff, cliff * 600),      # would cross the cliff
+        InstanceView(1, cliff - 40, (cliff - 40) * 600),  # stays below
+    ]
+    assert er.route(views, RouteRequest(600)) == 1
+
+
+def test_case2_delta_guardrail_falls_back_to_min_resulting(ef):
+    """Spread > Δ ⇒ round-robin among min(F') even if some unchanged."""
+    er = EcoRoute(ef, delta=100.0)  # tighter than the 405 MHz gap
+    cliff = _find_cliff(ef)
+    views = [
+        InstanceView(0, cliff, cliff * 600),
+        InstanceView(1, cliff - 40, (cliff - 40) * 600),
+    ]
+    # case ② path: chooses min resulting frequency — still instance 1 here,
+    # but via the round-robin rule (deterministic first pick)
+    idx = er.route(views, RouteRequest(600))
+    assert idx == 1
+
+
+def test_case2_all_equal_round_robins(ef):
+    er = EcoRoute(ef, delta=500.0)
+    views = [InstanceView(0, 8, 4800), InstanceView(1, 8, 4800)]
+    picks = {er.route(views, RouteRequest(600)) for _ in range(2)}
+    assert picks == {0, 1}  # alternates
+
+
+def test_kv_headroom_respected(ef):
+    er = EcoRoute(ef, delta=500.0)
+    views = [
+        InstanceView(0, 10, 6000, kv_headroom=10),  # can't fit the prompt
+        InstanceView(1, 200, 120000, kv_headroom=1 << 40),
+    ]
+    assert er.route(views, RouteRequest(600)) == 1
+
+
+def test_straggler_bias_steers_away(ef):
+    er = EcoRoute(ef, delta=500.0)
+    views = [
+        InstanceView(0, 64, 38400, latency_bias_s=0.05),  # slow instance
+        InstanceView(1, 64, 38400),
+    ]
+    picks = [er.route(views, RouteRequest(600)) for _ in range(4)]
+    assert all(p == 1 for p in picks)
+
+
+def test_fault_tolerant_router_skips_dead(ef):
+    ftr = FaultTolerantRouter(RoundRobinRouter())
+    views = [
+        InstanceView(0, 0, 0, alive=False),
+        InstanceView(1, 0, 0),
+    ]
+    for _ in range(4):
+        assert ftr.route(views, RouteRequest(100)) == 1

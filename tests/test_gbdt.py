@@ -1,0 +1,90 @@
+"""GBDT library: fit quality, online continuation, packed-predict
+equivalence (property), staircase capture."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gbdt import GBLinear, GBTree
+
+
+@pytest.fixture(scope="module")
+def staircase_data():
+    rng = np.random.default_rng(0)
+    n = 5000
+    X = np.stack([rng.uniform(1, 512, n), rng.uniform(0, 1e6, n)], 1)
+    y = 0.002 * np.ceil(X[:, 0] / 128) * 128 + 1e-8 * X[:, 1] + 0.005
+    return X, y
+
+
+def test_gblinear_fits_linear_target():
+    rng = np.random.default_rng(1)
+    X = rng.uniform(0, 1, (2000, 2))
+    y = 3.0 * X[:, 0] + 0.5 * X[:, 1] + 0.1
+    m = GBLinear().fit(X, y)
+    assert np.abs(m.predict(X) - y).mean() < 1e-3
+
+
+def test_gblinear_continue_fit_tracks_shift():
+    rng = np.random.default_rng(2)
+    X = rng.uniform(0, 1, (2000, 2))
+    y = 2.0 * X[:, 0] + 0.2
+    m = GBLinear().fit(X, y)
+    y2 = y + 0.5  # shifted online distribution
+    before = np.abs(m.predict(X) - y2).mean()
+    m.continue_fit(X, y2)
+    after = np.abs(m.predict(X) - y2).mean()
+    assert after < before * 0.2
+
+
+def test_gbtree_captures_staircase(staircase_data):
+    X, y = staircase_data
+    m = GBTree(n_estimators=150, learning_rate=0.15).fit(
+        X[:4000], y[:4000], eval_set=(X[4000:], y[4000:])
+    )
+    lo = m.predict(np.array([[250.0, 5e5]]))[0]
+    hi = m.predict(np.array([[260.0, 5e5]]))[0]
+    true_lo = 0.002 * 256 + 1e-8 * 5e5 + 0.005
+    true_hi = 0.002 * 384 + 1e-8 * 5e5 + 0.005
+    assert abs(lo - true_lo) < 0.02
+    assert abs(hi - true_hi) < 0.02
+    assert hi - lo > 0.15  # the cliff is captured
+
+
+def test_gbtree_packed_predict_matches_per_tree(staircase_data):
+    """The level-synchronous packed ensemble must equal tree-by-tree
+    evaluation exactly."""
+    X, y = staircase_data
+    m = GBTree(n_estimators=40, subsample=1.0, colsample=1.0).fit(
+        X[:2000], y[:2000]
+    )
+    B = m._bin(X[:200])
+    packed = m.predict_binned(B)
+    seq = np.full(200, m.base_)
+    for t in m.trees:
+        seq += m.learning_rate * t.predict_binned(B)
+    np.testing.assert_allclose(packed, seq, rtol=1e-12)
+
+
+def test_gbtree_continue_fit_improves_on_shift(staircase_data):
+    X, y = staircase_data
+    m = GBTree(n_estimators=80).fit(X[:4000], y[:4000])
+    y_shift = y * 1.15
+    before = np.abs(m.predict(X[4000:]) - y_shift[4000:]).mean()
+    m.continue_fit(X[:2000], y_shift[:2000], n_more=30)
+    after = np.abs(m.predict(X[4000:]) - y_shift[4000:]).mean()
+    assert after < before
+
+
+@given(
+    st.integers(10, 200),
+    st.integers(1, 4),
+    st.integers(0, 10_000),
+)
+@settings(max_examples=15, deadline=None)
+def test_gbtree_predict_finite_on_random_data(n, d, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d))
+    y = rng.normal(size=n)
+    m = GBTree(n_estimators=10, min_leaf=2).fit(X, y)
+    out = m.predict(rng.normal(size=(20, d)))
+    assert np.isfinite(out).all()

@@ -1,0 +1,91 @@
+"""Hardware latency model: staircase, phase asymmetry, scaling laws."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import REGISTRY
+from repro.core.hwmodel import HardwareModel, decode_work, prefill_work
+from repro.core.power import A100, TPU_V5E
+
+
+@pytest.fixture(scope="module")
+def hw():
+    return HardwareModel(REGISTRY["llama-3.1-8b"], A100)
+
+
+def test_staircase_at_tile_boundary(hw):
+    """Fig. 6: crossing the tile boundary jumps ITL discontinuously."""
+    t = A100.mxu_tile
+    below = hw.decode_time(t, t * 800, 1410.0)
+    above = hw.decode_time(t + 1, (t + 1) * 800, 1410.0)
+    inside = hw.decode_time(t - 8, (t - 8) * 800, 1410.0)
+    assert above > below * 1.1  # visible jump
+    assert abs(below - inside) / below < 0.05  # flat within the tile
+
+
+def test_tpu_staircase_period_is_128():
+    hw = HardwareModel(REGISTRY["llama-3.1-8b"], TPU_V5E, tp=4)
+    j1 = hw.decode_time(129, 129 * 500, TPU_V5E.f_max)
+    j0 = hw.decode_time(128, 128 * 500, TPU_V5E.f_max)
+    assert j1 > j0 * 1.05
+
+
+def test_prefill_staircase_washes_out(hw):
+    """Appx. A: the prefill staircase is negligible above ~2k tokens."""
+    small_jump = (hw.prefill_time(257, 1410.0) -
+                  hw.prefill_time(256, 1410.0)) / hw.prefill_time(256, 1410.0)
+    big_jump = (hw.prefill_time(4097, 1410.0) -
+                hw.prefill_time(4096, 1410.0)) / hw.prefill_time(4096, 1410.0)
+    assert small_jump > 5 * max(big_jump, 1e-9)
+
+
+def test_phase_asymmetry(hw):
+    """Prefill is compute-bound (theta≈1), small-batch decode is not."""
+    p = hw.prefill_iter(8192, 2048, 1410.0)
+    d = hw.decode_iter(8, 8 * 2000, 1410.0)
+    assert p.theta > 0.9
+    assert d.theta < 0.75
+
+
+def test_decode_becomes_compute_bound_with_batch(hw):
+    """Fig. 4: frequency sensitivity grows with batch size."""
+    gain = {}
+    for bs in (4, 256):
+        lo = hw.decode_time(bs, bs * 1000, 1005.0)
+        hi = hw.decode_time(bs, bs * 1000, 1410.0)
+        gain[bs] = 1 - hi / lo
+    assert gain[256] > gain[4]
+
+
+@given(st.integers(1, 2048), st.integers(1, 4096))
+@settings(max_examples=40, deadline=None)
+def test_prefill_time_monotone_in_tokens(n1, n2):
+    hw = HardwareModel(REGISTRY["llama-3.1-8b"], A100)
+    t1 = hw.prefill_time(n1, 1410.0)
+    t2 = hw.prefill_time(n2, 1410.0)
+    if n1 < n2:
+        assert t1 <= t2 + 1e-12
+
+
+@given(st.integers(1, 500), st.integers(0, 10**6))
+@settings(max_examples=40, deadline=None)
+def test_decode_work_nonnegative_and_monotone_in_kv(n_req, n_kv):
+    cfg = REGISTRY["llama-3.1-8b"]
+    w1 = decode_work(cfg, A100, n_req, n_kv)
+    w2 = decode_work(cfg, A100, n_req, n_kv + 1000)
+    assert w1.flops >= 0 and w1.hbm_bytes >= 0
+    assert w2.hbm_bytes >= w1.hbm_bytes
+
+
+def test_moe_decode_touches_fewer_experts_at_small_batch():
+    cfg = REGISTRY["qwen3-moe-30b-a3b"]
+    w_small = decode_work(cfg, A100, 2, 2000)
+    w_big = decode_work(cfg, A100, 256, 256000)
+    # weight-read bytes per request shrink as batches share experts
+    assert w_small.hbm_bytes / 2 > w_big.hbm_bytes / 256
+
+
+def test_tp_divides_work():
+    cfg = REGISTRY["qwen3-32b"]
+    w1 = prefill_work(cfg, A100, 4096, 1024, tp=1)
+    w2 = prefill_work(cfg, A100, 4096, 1024, tp=2)
+    assert abs(w1.flops / 2 - w2.flops) / w1.flops < 1e-9

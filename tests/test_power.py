@@ -1,0 +1,85 @@
+"""Power/energy model: U-curve, TDP wall, and the paper's anchors."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import REGISTRY
+from repro.core import power as P
+from repro.core.hwmodel import HardwareModel, energy_frequency_curve, sweet_spot
+from repro.core.power import A100, GH200, TPU_V5E
+
+
+@pytest.fixture(scope="module")
+def hw():
+    return HardwareModel(REGISTRY["llama-3.1-8b"], A100)
+
+
+def test_power_monotone_in_frequency():
+    for chip in (A100, GH200, TPU_V5E):
+        fs = chip.freq_grid(30)
+        ps = [P.power(chip, f, 0.8) for f in fs]
+        assert all(b >= a for a, b in zip(ps, ps[1:]))
+
+
+@given(st.floats(0.05, 1.0), st.floats(0.05, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_power_monotone_in_util(u1, u2):
+    f = 1200.0
+    p1, p2 = P.power(A100, f, u1), P.power(A100, f, u2)
+    assert (p1 <= p2) == (u1 <= u2) or abs(p1 - p2) < 1e-9
+
+
+def test_tdp_throttle_never_exceeds_cap():
+    for f in A100.freq_grid(20):
+        fe = P.throttled_frequency(A100, f, 1.0)
+        assert P.power(A100, fe, 1.0) <= A100.tdp + 1e-6
+        assert fe <= f
+
+
+def test_latency_monotone_decreasing_in_f(hw):
+    curve = energy_frequency_curve(hw, "decode", n_grid=30,
+                                   n_req=64, n_kv=64000)
+    ts = [t for _, t, _ in curve]
+    assert all(b <= a + 1e-12 for a, b in zip(ts, ts[1:]))
+
+
+def test_u_shape_interior_sweet_spot(hw):
+    for phase, st_ in (
+        ("prefill", dict(n_tok=4096, avg_ctx=1024)),
+        ("decode", dict(n_req=64, n_kv=64000)),
+    ):
+        f_star = sweet_spot(hw, phase, **st_)
+        assert A100.f_min < f_star < A100.f_max
+        assert abs(f_star - 1005.0) < 60.0  # paper: 1005 MHz
+
+
+def test_below_sweet_spot_strictly_worse(hw):
+    """Paper Fig. 5: frequencies below the knee raise BOTH energy and
+    latency."""
+    lo = hw.decode_iter(64, 64000, 700.0)
+    knee = hw.decode_iter(64, 64000, 1005.0)
+    assert lo.time_s > knee.time_s and lo.energy_j > knee.energy_j
+
+
+def test_paper_decode_anchor(hw):
+    """1005→1410 MHz: ITL ×~0.8, energy ×~1.5 (Fig. 5b)."""
+    lo = hw.decode_iter(64, 64000, 1005.0)
+    hi = hw.decode_iter(64, 64000, 1410.0)
+    assert 0.70 <= hi.time_s / lo.time_s <= 0.88
+    assert 1.3 <= hi.energy_j / lo.energy_j <= 1.75
+
+
+def test_prefill_tdp_wall(hw):
+    """Prefill at max frequency throttles to ~1305 MHz (Fig. 5a)."""
+    c = hw.prefill_iter(4096, 1024, 1410.0)
+    assert 1250.0 <= c.f_effective <= 1350.0
+
+
+def test_gh200_phase_specific_sweet_spots():
+    """Appx. M: prefill sweet ≈1095, decode sweet ≈1395 on GH200."""
+    hw = HardwareModel(REGISTRY["qwen3-32b"], GH200)
+    sp = sweet_spot(hw, "prefill", n_tok=4096, avg_ctx=1024)
+    sd = sweet_spot(hw, "decode", n_req=64, n_kv=64000)
+    assert abs(sp - 1095.0) < 120.0
+    assert abs(sd - 1395.0) < 120.0
+    assert sd > sp  # the decode sweet spot sits higher

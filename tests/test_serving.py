@@ -1,0 +1,147 @@
+"""Serving cluster end-to-end: SLO/energy behavior, fault tolerance,
+elastic scaling, straggler mitigation, workload generators, metrics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import REGISTRY
+from repro.core.power import A100
+from repro.serving import ClusterConfig, PDCluster, poisson_workload
+from repro.serving.cluster import build_predictor
+from repro.serving.workload import (
+    DatasetDist,
+    LengthDist,
+    SHAREGPT,
+    azure_like,
+    synthetic_pd_ratio,
+)
+
+MODEL = REGISTRY["llama-3.1-8b"]
+
+
+@pytest.fixture(scope="module")
+def pred():
+    return build_predictor(MODEL, A100, A100.freq_levels_2, kv_cap=400_000)
+
+
+def _cfg(pred, **kw):
+    base = dict(
+        model=MODEL, chip=A100, n_prefill=2, n_decode=2,
+        slo_ttft_s=0.6, slo_itl_s=0.06, predictor=pred,
+        kv_capacity_tokens=400_000, online_adapt=False, seed=3,
+    )
+    base.update(kw)
+    return ClusterConfig(**base)
+
+
+def _run(pred, rps=8.0, dur=40.0, seed=5, **kw):
+    reqs = poisson_workload(SHAREGPT, rps, dur, seed=seed)
+    return PDCluster(_cfg(pred, **kw)).run(reqs), reqs
+
+
+def test_all_requests_finish(pred):
+    m, reqs = _run(pred, policy="voltana")
+    assert m.finished_frac() == 1.0
+    for r in reqs:
+        assert r.t_finish >= r.t_first_token >= r.arrival_s
+        assert r.tokens_out == r.decode_len
+
+
+def test_voltana_saves_energy_at_matched_slo(pred):
+    mv, _ = _run(pred, policy="voltana")
+    mh, _ = _run(pred, policy="static", static_freq=1410.0)
+    assert mv.ttft_attainment() >= mh.ttft_attainment() - 0.03
+    assert mv.itl_attainment() >= mh.itl_attainment() - 0.03
+    assert mv.energy_j() < 0.8 * mh.energy_j()  # ≥20% saving at low RPS
+
+
+def test_static_sweet_collapses_at_high_rps(pred):
+    """Paper Fig. 16: SGLang-1005 loses SLO attainment under load while
+    VoltanaLLM boosts and holds it."""
+    mlo, _ = _run(pred, rps=55.0, policy="static", static_freq=1005.0)
+    mv, _ = _run(pred, rps=55.0, policy="voltana")
+    assert mv.itl_attainment() > mlo.itl_attainment() + 0.05
+    assert mv.ttft_attainment() > mlo.ttft_attainment() + 0.2
+
+
+def test_decode_instance_failure_recovers(pred):
+    reqs = poisson_workload(SHAREGPT, 6.0, 40.0, seed=9)
+    cl = PDCluster(_cfg(pred, policy="voltana"))
+    cl.schedule_failure(12.0, "decode", 0)
+    m = cl.run(reqs)
+    assert m.finished_frac() == 1.0
+    assert any(r.restarts > 0 for r in reqs)
+    assert not cl.decode[0].alive
+
+
+def test_prefill_instance_failure_recovers(pred):
+    reqs = poisson_workload(SHAREGPT, 6.0, 40.0, seed=10)
+    cl = PDCluster(_cfg(pred, policy="voltana"))
+    cl.schedule_failure(10.0, "prefill", 1)
+    m = cl.run(reqs)
+    assert m.finished_frac() == 1.0
+
+
+def test_elastic_scale_out_adds_capacity(pred):
+    reqs = poisson_workload(SHAREGPT, 10.0, 40.0, seed=11)
+    cl = PDCluster(_cfg(pred, policy="voltana"))
+    cl.schedule_scale_out(5.0, "decode")
+    m = cl.run(reqs)
+    assert len(cl.decode) == 3
+    assert m.finished_frac() == 1.0
+    assert any(r.decode_instance == 2 for r in reqs)
+
+
+def test_straggler_steering(pred):
+    """A 2× slow decode instance should receive far fewer requests under
+    EcoRoute + residual-bias feedback than its peer (the bias only tips
+    what-if decisions once predicted latencies approach the SLO, so the
+    test drives enough load for frequencies to differentiate)."""
+    reqs = poisson_workload(SHAREGPT, 20.0, 60.0, seed=12)
+    cl = PDCluster(_cfg(
+        pred, policy="voltana", straggler_factors={0: 2.0},
+    ))
+    cl.run(reqs)
+    n0 = sum(1 for r in reqs if r.decode_instance == 0)
+    n1 = sum(1 for r in reqs if r.decode_instance == 1)
+    assert n0 < 0.7 * n1
+
+
+def test_ecofreq_only_vs_full(pred):
+    """EcoRoute adds decode-side savings on top of EcoFreq (Fig. 17)."""
+    m1, _ = _run(pred, rps=30.0, dur=60.0, policy="ecofreq-only")
+    m2, _ = _run(pred, rps=30.0, dur=60.0, policy="voltana")
+    d1 = m1.energy_by_phase().get("decode", 0)
+    d2 = m2.energy_by_phase().get("decode", 0)
+    assert d2 <= d1 * 1.02  # never worse on decode
+
+
+# -- workload generators -----------------------------------------------------
+
+
+@given(st.floats(20, 2000), st.floats(0.2, 1.5))
+@settings(max_examples=20, deadline=None)
+def test_length_dist_moments(mean, cv):
+    std = mean * cv  # moment matching is only faithful at sane cv
+    d = LengthDist(mean, std, hi=1 << 20)
+    x = d.sample(np.random.default_rng(0), 4000)
+    assert x.min() >= 1
+    assert abs(x.mean() - mean) / mean < 0.25
+
+
+def test_poisson_rate():
+    reqs = poisson_workload(SHAREGPT, 20.0, 100.0, seed=1)
+    assert abs(len(reqs) / 100.0 - 20.0) < 3.0
+    ts = [r.arrival_s for r in reqs]
+    assert ts == sorted(ts)
+
+
+def test_azure_and_pd_ratio_generators():
+    az = azure_like(2.0, 300.0, seed=2)
+    assert {r.kind for r in az} >= {"azure-conv", "code"}
+    pd = synthetic_pd_ratio(4.0, 600.0, period_s=150.0, seed=3)
+    first = [r for r in pd if r.arrival_s < 150.0]
+    second = [r for r in pd if 150.0 <= r.arrival_s < 300.0]
+    p1 = np.mean([r.prompt_len for r in first])
+    p2 = np.mean([r.prompt_len for r in second])
+    assert p1 > 3 * p2  # prefill-heavy window then decode-heavy window

@@ -3,13 +3,16 @@
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run fig16 fig6 # subset
     PYTHONPATH=src python -m benchmarks.run --quick    # cheap subset
+    PYTHONPATH=src python -m benchmarks.run --smoke    # CI smoke (<10 min)
 
 Each module writes ``benchmarks/results/<name>.csv``; this driver prints
-a one-line summary per module and a final manifest.
+a one-line summary per module and a final manifest.  ``--smoke`` also
+sets ``BENCH_SMOKE=1`` so serving modules shrink their traces.
 """
 from __future__ import annotations
 
 import importlib
+import os
 import sys
 import time
 import traceback
@@ -33,6 +36,7 @@ MODULES = [
     ("fig29_30_levels_delta", "Fig.29/30 freq levels + delta sweep"),
     ("tab2_pd_ratio", "Tab.II   synthetic P/D-ratio workload"),
     ("fig34_cdfs", "Fig.34   TTFT/ITL CDFs at low/high RPS"),
+    ("fig_hetero_autoscale", "EcoScale hetero fleet + autoscale vs static"),
     ("roofline", "§Roofline table from dry-run records"),
     ("perf_iterations", "§Perf    hillclimb log from perf records"),
 ]
@@ -40,15 +44,24 @@ MODULES = [
 QUICK = {"fig1_5_ucurve", "fig4_itl_sensitivity", "fig6_staircase",
          "fig13_state_space", "fig20_control_interval", "roofline"}
 
+# CI smoke: fast analytic sanity + the EcoScale serving scenario (which
+# reads BENCH_SMOKE=1 and shrinks its trace)
+SMOKE = {"fig1_5_ucurve", "fig6_staircase", "fig_hetero_autoscale"}
+
 
 def main() -> int:
     args = [a for a in sys.argv[1:] if not a.startswith("-")]
     quick = "--quick" in sys.argv
+    smoke = "--smoke" in sys.argv
+    if smoke:
+        os.environ["BENCH_SMOKE"] = "1"
     failures = 0
     for name, desc in MODULES:
         if args and not any(a in name for a in args):
             continue
         if quick and name not in QUICK:
+            continue
+        if smoke and name not in SMOKE:
             continue
         t0 = time.time()
         try:

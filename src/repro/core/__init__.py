@@ -13,7 +13,10 @@ from repro.core.ecofreq import (  # noqa: F401
 from repro.core.ecopred import EcoPred, ProfileRanges  # noqa: F401
 from repro.core.ecoroute import (  # noqa: F401
     EcoRoute,
+    EnergyAwareEcoRoute,
+    EnergyAwarePrefillRouter,
     FaultTolerantRouter,
+    InstanceProfile,
     InstanceView,
     RoundRobinRouter,
     RouteRequest,

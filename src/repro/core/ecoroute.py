@@ -22,11 +22,15 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import List, Optional, Protocol, Sequence
+from typing import TYPE_CHECKING, Dict, List, Optional, Protocol, Sequence
 
 import numpy as np
 
 from repro.core.ecofreq import BatchInfo, EcoFreq, SystemState
+
+if TYPE_CHECKING:  # identity-only imports (avoid heavy deps at runtime)
+    from repro.core.hwmodel import HardwareModel
+    from repro.core.power import ChipSpec
 
 
 @dataclass
@@ -38,8 +42,10 @@ class InstanceView:
     n_kv: int
     has_waiting: bool = False
     alive: bool = True
+    accepting: bool = True  # False while draining/parked (EcoScale)
     kv_headroom: int = 1 << 62  # tokens of KV space left
     latency_bias_s: float = 0.0  # straggler signal from EcoPred residuals
+    busy_remaining_s: float = 0.0  # in-flight batch time left (prefill)
 
 
 @dataclass
@@ -53,6 +59,26 @@ class Router(Protocol):
     def route(self, views: List[InstanceView], req: RouteRequest) -> int: ...
 
 
+def _candidates(
+    views: List[InstanceView], req: RouteRequest
+) -> List[InstanceView]:
+    """Placeable instances, best pool first: accepting with KV headroom,
+    then *any* alive instance with headroom (a draining instance with
+    space beats queueing on a KV-full one), then accepting, then alive —
+    routing never fails while any instance is alive."""
+    accepting = [v for v in views if v.alive and v.accepting]
+    cands = [v for v in accepting if v.kv_headroom >= req.prompt_len]
+    if not cands:
+        alive = [v for v in views if v.alive]
+        cands = (
+            [v for v in alive if v.kv_headroom >= req.prompt_len]
+            or accepting
+            or alive
+        )
+    assert cands, "no alive instances"
+    return cands
+
+
 # ---------------------------------------------------------------------------
 # Round-robin (SGLang default; prefill router everywhere)
 # ---------------------------------------------------------------------------
@@ -63,11 +89,8 @@ class RoundRobinRouter:
         self._rr = itertools.count()
 
     def route(self, views: List[InstanceView], req: RouteRequest) -> int:
-        alive = [v for v in views if v.alive and v.kv_headroom >= req.prompt_len]
-        if not alive:
-            alive = [v for v in views if v.alive]
-        assert alive, "no alive instances"
-        return alive[next(self._rr) % len(alive)].idx
+        cands = _candidates(views, req)
+        return cands[next(self._rr) % len(cands)].idx
 
 
 # ---------------------------------------------------------------------------
@@ -109,12 +132,7 @@ class EcoRoute:
         return opts[first]
 
     def route(self, views: List[InstanceView], req: RouteRequest) -> int:
-        cands = [
-            v for v in views if v.alive and v.kv_headroom >= req.prompt_len
-        ]
-        if not cands:
-            cands = [v for v in views if v.alive]
-        assert cands, "no alive decode instances"
+        cands = _candidates(views, req)
         cur = np.array([[v.n_req, v.n_kv] for v in cands], float)
         hyp = cur + np.array([[1.0, float(req.prompt_len)]])
         bias = np.array([v.latency_bias_s for v in cands] * 2)
@@ -134,6 +152,157 @@ class EcoRoute:
         j = lo[self._rr % len(lo)]
         self._rr += 1
         return cands[int(j)].idx
+
+
+# ---------------------------------------------------------------------------
+# EcoScale: phase- and chip-aware placement for heterogeneous fleets
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class InstanceProfile:
+    """Chip identity of one instance for heterogeneous what-if routing.
+
+    ``ecofreq`` carries the instance's own frequency ladder and its chip's
+    EcoPred; ``hw`` is the chip's latency/energy model used to price the
+    marginal joules of a placement.
+    """
+
+    chip: "ChipSpec"
+    ecofreq: EcoFreq
+    hw: "HardwareModel"
+
+
+class EnergyAwareEcoRoute:
+    """EcoRoute generalized to heterogeneous fleets (EcoScale placement).
+
+    The homogeneous Alg. 2 compares frequencies across instances, which is
+    only meaningful when every instance shares one ladder.  Here each
+    candidate's what-if runs on *its own* ladder and predictor, and
+    candidates are scored in physical units instead:
+
+    * ``t_hyp`` — predicted ITL after hypothetically adding the request,
+      at the lowest SLO-meeting frequency of that instance's ladder;
+    * ``dE``   — marginal energy per decode iteration,
+      ``E_iter(state ⊕ r, f') − E_iter(state, f)``.  One iteration emits
+      one token for this request on *any* chip, so dE is directly the
+      marginal J/token of placing the request there — frequency cliffs
+      show up as a dE spike exactly like Alg. 2's case ①.
+
+    Selection: among SLO-meeting candidates, round-robin within ``tol`` of
+    the lowest marginal energy; if none meets the SLO, lowest ``t_hyp``.
+    """
+
+    def __init__(
+        self,
+        profiles: Dict[int, InstanceProfile],
+        slo_itl_s: float,
+        tol: float = 0.05,
+    ):
+        self.profiles = profiles
+        self.slo_itl_s = slo_itl_s
+        self.tol = tol
+        self._rr = 0
+
+    def _whatif(
+        self, p: InstanceProfile, n_req: int, n_kv: int, bias: float
+    ) -> tuple:
+        """Lowest SLO-meeting (f, predicted ITL) on p's own ladder."""
+        opts = np.asarray(p.ecofreq.freq_options)
+        t = p.ecofreq.predictor.predict_decode(
+            opts, np.full(len(opts), float(n_req)),
+            np.full(len(opts), float(n_kv)),
+        ) + bias
+        ok = t <= self.slo_itl_s
+        j = int(ok.argmax()) if ok.any() else len(opts) - 1
+        return float(opts[j]), float(t[j])
+
+    def route(self, views: List[InstanceView], req: RouteRequest) -> int:
+        cands = _candidates(views, req)
+        scored = []
+        for v in cands:
+            p = self.profiles[v.idx]
+            f_hyp, t_hyp = self._whatif(
+                p, v.n_req + 1, v.n_kv + req.prompt_len, v.latency_bias_s
+            )
+            e_hyp = p.hw.decode_iter(
+                v.n_req + 1, v.n_kv + req.prompt_len, f_hyp
+            ).energy_j
+            e_cur = 0.0
+            if v.n_req > 0:
+                f_cur, _ = self._whatif(p, v.n_req, v.n_kv, v.latency_bias_s)
+                e_cur = p.hw.decode_iter(v.n_req, v.n_kv, f_cur).energy_j
+            scored.append((t_hyp <= self.slo_itl_s, e_hyp - e_cur, t_hyp, v))
+        pick = _select(scored, self._rr, self.tol)
+        self._rr += 1
+        return pick.idx
+
+
+def _select(scored, rr: int, tol: float):
+    """Round-robin among candidates within ``tol`` of the best score:
+    marginal energy for SLO-meeting candidates, projected latency
+    otherwise.  The tie band is additive around the minimum so negative
+    marginal energies (tile-boundary effects) stay well-defined."""
+    ok = [s for s in scored if s[0]]
+    pool, col = (ok, 1) if ok else (scored, 2)
+    best = min(s[col] for s in pool)
+    band = abs(best) * tol + 1e-9
+    tied = [s for s in pool if s[col] <= best + band]
+    return tied[rr % len(tied)][3]
+
+
+class EnergyAwarePrefillRouter:
+    """Chip-aware prefill placement for heterogeneous fleets.
+
+    Views carry (queue depth, queued tokens) in ``(n_req, n_kv)``.  Per
+    candidate: project the queue-drain TTFT of ``queued + prompt`` tokens
+    on that chip's ladder, and price the prompt's own prefill joules at
+    the frequency the what-if picks.  Budget-meeting candidates compete
+    on marginal energy; otherwise on projected latency.
+
+    ``budget_frac`` discounts the TTFT SLO for the gate: the queue-drain
+    projection cannot see the in-flight batch or arrival bursts, so the
+    cheap chip only keeps winning while its projected drain stays well
+    inside the budget — past that, load spills to the next chip instead
+    of piling onto the efficient one until it actually misses.
+    """
+
+    def __init__(
+        self,
+        profiles: Dict[int, InstanceProfile],
+        slo_ttft_s: float,
+        tol: float = 0.05,
+        budget_frac: float = 0.5,
+    ):
+        self.profiles = profiles
+        self.slo_ttft_s = slo_ttft_s
+        self.tol = tol
+        self.budget = slo_ttft_s * budget_frac
+        self._rr = 0
+
+    def _whatif(self, p: InstanceProfile, n_tok: int) -> tuple:
+        opts = np.asarray(p.ecofreq.freq_options)
+        t = p.ecofreq.predictor.predict_prefill(
+            opts, np.full(len(opts), float(n_tok))
+        )
+        ok = t <= self.budget
+        j = int(ok.argmax()) if ok.any() else len(opts) - 1
+        return float(opts[j]), float(t[j])
+
+    def route(self, views: List[InstanceView], req: RouteRequest) -> int:
+        cands = _candidates(views, req)
+        scored = []
+        for v in cands:
+            p = self.profiles[v.idx]
+            f_hyp, t_hyp = self._whatif(p, v.n_kv + req.prompt_len)
+            t_hyp += v.busy_remaining_s  # head-of-line: in-flight batch
+            e_marg = p.hw.prefill_iter(
+                req.prompt_len, req.prompt_len, f_hyp
+            ).energy_j
+            scored.append((t_hyp <= self.budget, e_marg, t_hyp, v))
+        pick = _select(scored, self._rr, self.tol)
+        self._rr += 1
+        return pick.idx
 
 
 # ---------------------------------------------------------------------------

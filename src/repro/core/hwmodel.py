@@ -334,6 +334,39 @@ class HardwareModel:
     def idle_power(self) -> float:
         return self.chip.p_idle * self.tp
 
+    def sleep_power(self) -> float:
+        """Draw (W) of a parked instance (drained, HBM in self-refresh)."""
+        return self.chip.p_sleep * self.tp
+
+    # -- fleet-level efficiency/capacity ratings (EcoScale) -----------------
+    def decode_ept_j(
+        self, n_req: int = 64, n_kv: int = 32_768, f: Optional[float] = None
+    ) -> float:
+        """Energy per output token (J) at a reference decode operating
+        point.  The autoscaler ranks chips by this to park the most
+        expensive instance first and re-admit the cheapest first."""
+        f = f if f is not None else self.chip.f_mem_knee
+        c = self.decode_iter(n_req, n_kv, f)
+        return c.energy_j / max(1, n_req)
+
+    def prefill_ept_j(
+        self, n_tok: int = 4_096, f: Optional[float] = None
+    ) -> float:
+        """Energy per prefilled token (J) at a reference batch."""
+        f = f if f is not None else self.chip.f_volt_knee
+        c = self.prefill_iter(n_tok, None, f)
+        return c.energy_j / max(1, n_tok)
+
+    def prefill_capacity_tok_s(
+        self, n_tok: int = 8_192, f: Optional[float] = None
+    ) -> float:
+        """Sustainable prefill throughput (tokens/s) at frequency ``f``
+        (default: max clock) with full batches — the demand-vs-capacity
+        denominator of the autoscaler's prefill headroom projection."""
+        f = f if f is not None else self.chip.f_max
+        c = self.prefill_iter(n_tok, None, f)
+        return n_tok / c.time_s if c.time_s > 0 else float("inf")
+
     # -- capacity -----------------------------------------------------------
     def kv_bytes_per_token(self) -> float:
         return _body_params(self.cfg)[4]

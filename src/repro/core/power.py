@@ -72,6 +72,9 @@ class ChipSpec:
     # interconnect (for the TPU roofline)
     ici_bw: float = 0.0  # bytes/s per link
     ici_links: int = 0
+    # parked draw (W): drained instance, clocks floored, HBM in
+    # self-refresh — what an EcoScale-parked instance costs per second
+    p_sleep: float = 0.0
     # paper-style frequency option lists (MHz)
     freq_levels_2: Tuple[float, ...] = ()
     freq_levels_5: Tuple[float, ...] = ()
@@ -194,6 +197,7 @@ A100 = ChipSpec(
     u_k0=-0.541,
     u_k1=1.537,
     mxu_tile=256,  # paper Fig. 6: decode staircase period 256
+    p_sleep=25.0,
     freq_levels_2=(1005.0, 1410.0),
     freq_levels_5=(1005.0, 1095.0, 1200.0, 1305.0, 1410.0),
 )
@@ -226,6 +230,7 @@ GH200 = ChipSpec(
     u_k0=-0.541,
     u_k1=1.537,
     mxu_tile=256,
+    p_sleep=45.0,
     freq_levels_2=(1095.0, 1980.0),  # F_P; F_D uses (1395, 1980)
     freq_levels_5=(1095.0, 1395.0, 1605.0, 1800.0, 1980.0),
 )
@@ -257,6 +262,7 @@ TPU_V5E = ChipSpec(
     mxu_tile=128,
     ici_bw=50e9,
     ici_links=4,
+    p_sleep=12.0,
     freq_levels_2=(670.0, 940.0),
     freq_levels_5=(670.0, 730.0, 800.0, 870.0, 940.0),
 )

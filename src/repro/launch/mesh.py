@@ -8,7 +8,16 @@ init, and smoke tests must keep seeing 1 device.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType landed after jax 0.4.x; older jax defaults to Auto anyway
+    from jax.sharding import AxisType
+
+    def _axis_kwargs(n_axes: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+except ImportError:  # pragma: no cover - depends on installed jax
+
+    def _axis_kwargs(n_axes: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,14 +25,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     leading "pod" axis: (2, 16, 16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh helper for tests/examples (e.g. (1,1) on CPU)."""
     return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(AxisType.Auto,) * len(axes),
+        tuple(shape), tuple(axes), **_axis_kwargs(len(axes))
     )

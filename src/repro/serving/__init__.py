@@ -1,3 +1,10 @@
+from repro.serving.autoscale import (  # noqa: F401
+    AutoScaleConfig,
+    AutoScaler,
+    InstanceSpec,
+    ScaleEvent,
+    homogeneous_fleet,
+)
 from repro.serving.cluster import ClusterConfig, PDCluster, build_predictor  # noqa: F401
 from repro.serving.engine import DecodeEngine, PrefillEngine, SimBackend  # noqa: F401
 from repro.serving.metrics import InstanceEnergy, RunMetrics  # noqa: F401
@@ -11,5 +18,6 @@ from repro.serving.workload import (  # noqa: F401
     attach_tokens,
     azure_like,
     poisson_workload,
+    step_load,
     synthetic_pd_ratio,
 )

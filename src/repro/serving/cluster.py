@@ -27,6 +27,9 @@ from repro.core.ecofreq import EcoFreq, FreqController, StaticFreq
 from repro.core.ecopred import EcoPred, ProfileRanges
 from repro.core.ecoroute import (
     EcoRoute,
+    EnergyAwareEcoRoute,
+    EnergyAwarePrefillRouter,
+    InstanceProfile,
     InstanceView,
     RoundRobinRouter,
     RouteRequest,
@@ -34,6 +37,11 @@ from repro.core.ecoroute import (
 )
 from repro.core.hwmodel import HardwareModel
 from repro.core.power import ChipSpec
+from repro.serving.autoscale import (
+    AutoScaleConfig,
+    AutoScaler,
+    InstanceSpec,
+)
 from repro.serving.engine import DecodeEngine, PrefillEngine, SimBackend
 from repro.serving.metrics import RunMetrics
 from repro.serving.request import Phase, Request
@@ -51,6 +59,12 @@ class ClusterConfig:
     n_prefill: int = 2
     n_decode: int = 2
     tp: int = 1  # tensor-parallel degree per instance
+    # heterogeneous fleets (EcoScale): explicit per-slot specs override
+    # (chip, n_prefill/n_decode, tp, freq_options*) above
+    prefill_fleet: Optional[Sequence[InstanceSpec]] = None
+    decode_fleet: Optional[Sequence[InstanceSpec]] = None
+    # elastic scale-in/out controller; None = fixed fleet (pre-EcoScale)
+    autoscale: Optional[AutoScaleConfig] = None
     # SLOs (paper §VI-B: 200/20, 600/60, 1200/120 ms by model size)
     slo_ttft_s: float = 0.6
     slo_itl_s: float = 0.06
@@ -72,6 +86,9 @@ class ClusterConfig:
     transfer_const_s: float = 0.002
     # predictor
     predictor: Optional[EcoPred] = None  # share across runs to skip re-fit
+    # per-(chip, tp) predictor cache shared across cluster builds; the
+    # cluster reads hits and writes misses (keys: InstanceSpec.key)
+    predictor_bank: Optional[Dict[Tuple[str, int], EcoPred]] = None
     adapt_every: int = 4_096
     online_adapt: bool = True
     # observability / chaos
@@ -93,14 +110,20 @@ def build_predictor(
     prefill_tokens: int = 8_192,
     seed: int = 0,
 ) -> EcoPred:
-    """Offline-profile an EcoPred for (model, chip) — reusable across runs."""
+    """Offline-profile an EcoPred for (model, chip) — reusable across runs.
+
+    The prefill range covers single prompts *larger* than the batch
+    budget: FCFS batching admits an oversized prompt whole, so EcoFreq
+    consults the predictor there too — extrapolating instead under-
+    estimates long-prompt latency and picks clocks that miss TTFT.
+    """
     hw = HardwareModel(model, chip, tp)
     cap = kv_cap or max(50_000, hw.kv_capacity_tokens())
     pred = EcoPred(freq_options, seed=seed)
     pred.offline_profile(
         hw,
         ProfileRanges(
-            max_tokens=prefill_tokens,
+            max_tokens=max(prefill_tokens, 32_768),
             max_requests=max_running,
             max_kv_tokens=cap,
         ),
@@ -112,41 +135,102 @@ def build_predictor(
 # Cluster
 # ---------------------------------------------------------------------------
 
-_ARRIVAL, _P_DONE, _JOIN_D, _D_DONE, _CHAOS = range(5)
+_ARRIVAL, _P_DONE, _JOIN_D, _D_DONE, _CHAOS, _SCALE = range(6)
 
 
 class PDCluster:
     def __init__(self, cfg: ClusterConfig):
         self.cfg = cfg
+        fo = tuple(cfg.freq_options or cfg.chip.freq_levels_2)
+        fo_p = tuple(cfg.freq_options_prefill or fo)
+        self.freq_options = fo
+        self._default_spec_p = InstanceSpec(cfg.chip, cfg.tp, fo_p)
+        self._default_spec_d = InstanceSpec(cfg.chip, cfg.tp, fo)
+        self.prefill_specs: List[InstanceSpec] = list(
+            cfg.prefill_fleet
+            if cfg.prefill_fleet is not None
+            else [self._default_spec_p] * cfg.n_prefill
+        )
+        self.decode_specs: List[InstanceSpec] = list(
+            cfg.decode_fleet
+            if cfg.decode_fleet is not None
+            else [self._default_spec_d] * cfg.n_decode
+        )
+        all_specs = self.prefill_specs + self.decode_specs
+
+        def _varied(specs: Sequence[InstanceSpec]) -> bool:
+            return len({(s.chip.name, s.tp, s.freqs()) for s in specs}) > 1
+
+        # per-phase variation decides each router (EcoRoute's cross-instance
+        # frequency comparison needs one shared ladder *within* the phase);
+        # a cross-phase ladder split alone (GH200 F_P vs F_D) stays on the
+        # homogeneous paths
+        self._varied_prefill = _varied(self.prefill_specs)
+        self._varied_decode = _varied(self.decode_specs)
+        self.hetero = (
+            self._varied_prefill
+            or self._varied_decode
+            or len({s.key for s in all_specs}) > 1
+        )
+
+        # reference hardware model (KV-transfer sizing; model-dependent)
         self.hw = HardwareModel(cfg.model, cfg.chip, cfg.tp)
         self.kv_cap = cfg.kv_capacity_tokens or max(
             50_000, self.hw.kv_capacity_tokens()
         )
-        fo = tuple(cfg.freq_options or cfg.chip.freq_levels_2)
-        fo_p = tuple(cfg.freq_options_prefill or fo)
-        self.freq_options = fo
-        self.predictor = cfg.predictor or build_predictor(
-            cfg.model, cfg.chip, sorted(set(fo) | set(fo_p)), cfg.tp,
-            self.kv_cap, cfg.decode_max_running, cfg.prefill_batch_tokens,
-            cfg.seed,
-        )
-        self.predictor.adapt_every = cfg.adapt_every
-        self.predictor.online_enabled = cfg.online_adapt
+
+        # per-(chip, tp) predictor + hardware-model caches.  A predictor is
+        # profiled over the union of every ladder its chip appears with
+        # (plus the config-level ladders for the reference chip, so the
+        # back-compat `cfg.predictor` path stays exact).
+        self._freqs_by_key: Dict[Tuple[str, int], set] = {}
+        for s in all_specs:
+            self._freqs_by_key.setdefault(s.key, set()).update(s.freqs())
+        self._freqs_by_key.setdefault(
+            (cfg.chip.name, cfg.tp), set()
+        ).update(set(fo) | set(fo_p))
+        self._hws: Dict[Tuple[str, int], HardwareModel] = {}
+        self._preds: Dict[Tuple[str, int], EcoPred] = {}
+        self.predictor = self._pred_for(self.decode_specs[0])
 
         self.prefill: List[PrefillEngine] = []
         self.decode: List[DecodeEngine] = []
-        for i in range(cfg.n_prefill):
-            self.prefill.append(self._make_prefill(i, fo_p))
-        for i in range(cfg.n_decode):
-            self.decode.append(self._make_decode(i, fo))
+        for i, spec in enumerate(self.prefill_specs):
+            self.prefill.append(self._make_prefill(i, spec))
+        for i, spec in enumerate(self.decode_specs):
+            self.decode.append(self._make_decode(i, spec))
 
         self.prefill_router: Router = RoundRobinRouter()
+        self._profiles_p: Dict[int, InstanceProfile] = {}
+        self._profiles_d: Dict[int, InstanceProfile] = {}
         if cfg.policy == "voltana":
-            route_ef = EcoFreq(fo, self.predictor, cfg.slo_ttft_s,
-                               cfg.slo_itl_s)
-            self.decode_router: Router = EcoRoute(route_ef, cfg.delta)
+            if self._varied_decode:
+                for i, spec in enumerate(self.decode_specs):
+                    self._profiles_d[i] = self._profile(spec)
+                self.decode_router: Router = EnergyAwareEcoRoute(
+                    self._profiles_d, cfg.slo_itl_s
+                )
+            else:
+                route_ef = EcoFreq(
+                    self.decode_specs[0].freqs(),
+                    self._pred_for(self.decode_specs[0]),
+                    cfg.slo_ttft_s, cfg.slo_itl_s,
+                )
+                self.decode_router = EcoRoute(route_ef, cfg.delta)
+            if self.hetero:
+                # the per-instance what-if is also the better prefill
+                # balancer whenever any chip identity is in play
+                for i, spec in enumerate(self.prefill_specs):
+                    self._profiles_p[i] = self._profile(spec)
+                self.prefill_router = EnergyAwarePrefillRouter(
+                    self._profiles_p, cfg.slo_ttft_s
+                )
         else:
             self.decode_router = RoundRobinRouter()
+
+        self.autoscaler: Optional[AutoScaler] = (
+            AutoScaler(cfg.autoscale, self) if cfg.autoscale else None
+        )
 
         # event loop state
         self._heap: List[tuple] = []
@@ -154,9 +238,59 @@ class PDCluster:
         self.now = 0.0
         self.requests: List[Request] = []
         self._bias_ewma: Dict[int, float] = {}
+        self._arrived_tokens = 0
 
     # -- construction -------------------------------------------------------
-    def _controller(self, freq_options: Sequence[float]) -> FreqController:
+    def _hw_for(self, spec: InstanceSpec) -> HardwareModel:
+        if spec.key not in self._hws:
+            self._hws[spec.key] = HardwareModel(
+                self.cfg.model, spec.chip, spec.tp
+            )
+        return self._hws[spec.key]
+
+    def _pred_for(self, spec: InstanceSpec) -> EcoPred:
+        key = spec.key
+        if key in self._preds:
+            return self._preds[key]
+        c = self.cfg
+        bank = c.predictor_bank
+        if bank is not None and key in bank:
+            pred = bank[key]
+        elif c.predictor is not None and key == (c.chip.name, c.tp):
+            pred = c.predictor
+        else:
+            hw = self._hw_for(spec)
+            kv_cap = c.kv_capacity_tokens or max(
+                50_000, hw.kv_capacity_tokens()
+            )
+            pred = build_predictor(
+                c.model, spec.chip, sorted(self._freqs_by_key[key]),
+                spec.tp, kv_cap, c.decode_max_running,
+                c.prefill_batch_tokens, c.seed,
+            )
+            if bank is not None:
+                bank[key] = pred
+        pred.adapt_every = c.adapt_every
+        pred.online_enabled = c.online_adapt
+        self._preds[key] = pred
+        return pred
+
+    def _profile(self, spec: InstanceSpec) -> InstanceProfile:
+        c = self.cfg
+        ef = EcoFreq(
+            spec.freqs(), self._pred_for(spec), c.slo_ttft_s, c.slo_itl_s
+        )
+        return InstanceProfile(spec.chip, ef, self._hw_for(spec))
+
+    def _kv_cap_for(self, spec: InstanceSpec) -> int:
+        if self.cfg.kv_capacity_tokens:
+            return self.cfg.kv_capacity_tokens
+        return max(50_000, self._hw_for(spec).kv_capacity_tokens())
+
+    def _controller(
+        self, freq_options: Sequence[float], predictor: EcoPred,
+        chip: ChipSpec,
+    ) -> FreqController:
         c = self.cfg
         if c.policy == "static":
             assert c.static_freq is not None
@@ -165,50 +299,54 @@ class PDCluster:
             from repro.core.ecofreq import PowerCapFreq
 
             assert c.power_cap_w is not None
-            return PowerCapFreq(c.chip, c.power_cap_w)
-        ef = EcoFreq(freq_options, self.predictor, c.slo_ttft_s, c.slo_itl_s)
+            return PowerCapFreq(chip, c.power_cap_w)
+        ef = EcoFreq(freq_options, predictor, c.slo_ttft_s, c.slo_itl_s)
         if c.control_interval_s:
             from repro.core.ecofreq import IntervalFreq
 
             return IntervalFreq(ef, c.control_interval_s)
         return ef
 
-    def _make_prefill(self, idx: int, fo) -> PrefillEngine:
+    def _make_prefill(self, idx: int, spec: InstanceSpec) -> PrefillEngine:
         c = self.cfg
+        hw = self._hw_for(spec)
+        pred = self._pred_for(spec)
         if c.backend_factory is not None:
-            backend = c.backend_factory("prefill", idx, self.hw,
+            backend = c.backend_factory("prefill", idx, hw,
                                         c.seed * 101 + idx)
         else:
-            backend = SimBackend(self.hw, c.noise_sigma,
+            backend = SimBackend(hw, c.noise_sigma,
                                  seed=c.seed * 101 + idx)
         return PrefillEngine(
             idx=idx,
             backend=backend,
-            controller=self._controller(fo),
-            predictor=self.predictor,
+            controller=self._controller(spec.freqs(), pred, spec.chip),
+            predictor=pred,
             max_batch_tokens=c.prefill_batch_tokens,
             record_trace=c.record_traces,
         )
 
-    def _make_decode(self, idx: int, fo) -> DecodeEngine:
+    def _make_decode(self, idx: int, spec: InstanceSpec) -> DecodeEngine:
         c = self.cfg
+        hw = self._hw_for(spec)
+        pred = self._pred_for(spec)
         slow = (c.straggler_factors or {}).get(idx, 1.0)
         if c.backend_factory is not None:
-            backend = c.backend_factory("decode", idx, self.hw,
+            backend = c.backend_factory("decode", idx, hw,
                                         c.seed * 211 + idx)
             backend.slow_factor = slow
         else:
             backend = SimBackend(
-                self.hw, c.noise_sigma, seed=c.seed * 211 + idx,
+                hw, c.noise_sigma, seed=c.seed * 211 + idx,
                 slow_factor=slow,
             )
         return DecodeEngine(
             idx=idx,
             backend=backend,
-            controller=self._controller(fo),
-            predictor=self.predictor,
+            controller=self._controller(spec.freqs(), pred, spec.chip),
+            predictor=pred,
             max_running=c.decode_max_running,
-            kv_capacity_tokens=self.kv_cap,
+            kv_capacity_tokens=self._kv_cap_for(spec),
             record_trace=c.record_traces,
         )
 
@@ -221,6 +359,21 @@ class PDCluster:
 
     def schedule_scale_out(self, t: float, phase: str = "decode") -> None:
         self._push(t, _CHAOS, ("scale_out", phase, None))
+
+    # -- autoscaler hooks ----------------------------------------------------
+    def pop_arrived_tokens(self) -> int:
+        """Prompt tokens arrived since the last autoscale tick."""
+        n = self._arrived_tokens
+        self._arrived_tokens = 0
+        return n
+
+    def on_readmit(self, phase: str, eng) -> None:
+        """A parked instance came back: restart its iteration loop."""
+        if not eng.busy:
+            if phase == "prefill":
+                self._kick_prefill(eng)
+            else:
+                self._kick_decode(eng)
 
     # -- instance kicks -------------------------------------------------------
     def _kick_prefill(self, e: PrefillEngine) -> None:
@@ -237,9 +390,15 @@ class PDCluster:
 
     # -- routing --------------------------------------------------------------
     def _route_prefill(self, req: Request) -> None:
+        if self.autoscaler is not None:
+            self.autoscaler.maybe_wake_prefill(self.now, req.prompt_len)
         views = [
             InstanceView(
-                e.idx, len(e.queue), e.queued_tokens, alive=e.alive
+                e.idx, len(e.queue), e.queued_tokens, alive=e.alive,
+                accepting=e.accepting,
+                busy_remaining_s=(
+                    max(0.0, e.busy_until - self.now) if e.busy else 0.0
+                ),
             )
             for e in self.prefill
         ]
@@ -250,6 +409,8 @@ class PDCluster:
             self._kick_prefill(eng)
 
     def _route_decode(self, req: Request) -> None:
+        if self.autoscaler is not None:
+            self.autoscaler.maybe_wake_decode(self.now, req.prompt_len)
         views = [
             InstanceView(
                 e.idx,
@@ -257,6 +418,7 @@ class PDCluster:
                 e.n_kv,
                 has_waiting=len(e.waiting) > 0,
                 alive=e.alive,
+                accepting=e.accepting,
                 kv_headroom=e.kv_headroom,
                 latency_bias_s=self._bias_ewma.get(e.idx, 0.0),
             )
@@ -291,6 +453,9 @@ class PDCluster:
             r.t_first_token = r.t_finish = r.t_join_decode = -1.0
             self._push(r.arrival_s, _ARRIVAL, r)
         pending = len(requests)
+        self._arrived_tokens = 0
+        if self.autoscaler is not None:
+            self._push(self.cfg.autoscale.interval_s, _SCALE, None)
 
         while self._heap and pending > 0:
             t, _, kind, data = heapq.heappop(self._heap)
@@ -299,6 +464,7 @@ class PDCluster:
             self.now = t
 
             if kind == _ARRIVAL:
+                self._arrived_tokens += data.prompt_len
                 self._route_prefill(data)
 
             elif kind == _P_DONE:
@@ -318,6 +484,7 @@ class PDCluster:
                     req.kv_len = 0
                     self._route_prefill(req)
                     continue
+                eng.unpark(self.now)  # KV landed after the drain finished
                 eng.enqueue(req)
                 if not eng.busy:
                     self._kick_decode(eng)
@@ -327,7 +494,7 @@ class PDCluster:
                 if not eng.alive:
                     continue
                 measured = eng._iter_cost.time_s
-                pred = self.predictor.predict_decode(
+                pred = eng.predictor.predict_decode(
                     eng._iter_f, eng.n_req, eng.n_kv
                 )[0] if eng.running else measured
                 self._update_bias(eng.idx, measured, pred)
@@ -354,19 +521,32 @@ class PDCluster:
                         self._route_prefill(r)
                 elif action == "scale_out":
                     if phase == "decode":
-                        e = self._make_decode(
-                            len(self.decode), self.freq_options
-                        )
-                        self.decode.append(e)
+                        spec = self._default_spec_d
+                        idx = len(self.decode)
+                        self.decode_specs.append(spec)
+                        self.decode.append(self._make_decode(idx, spec))
+                        if self._profiles_d:
+                            self._profiles_d[idx] = self._profile(spec)
                     else:
-                        e = self._make_prefill(
-                            len(self.prefill), self.freq_options
-                        )
-                        self.prefill.append(e)
+                        spec = self._default_spec_p
+                        idx = len(self.prefill)
+                        self.prefill_specs.append(spec)
+                        self.prefill.append(self._make_prefill(idx, spec))
+                        if self._profiles_p:
+                            self._profiles_p[idx] = self._profile(spec)
+
+            elif kind == _SCALE:
+                self.autoscaler.step(self.now)
+                if pending > 0:
+                    self._push(
+                        self.now + self.cfg.autoscale.interval_s,
+                        _SCALE, None,
+                    )
 
         end = self.now
         energies = []
         for e in self.prefill + self.decode:
+            e.close_park(end)
             e.energy.span_s = end
             energies.append(e.energy)
         return RunMetrics(

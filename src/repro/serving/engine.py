@@ -72,12 +72,51 @@ class SimBackend:
 
 
 # ---------------------------------------------------------------------------
+# Drain / park lifecycle (EcoScale scale-in)
+# ---------------------------------------------------------------------------
+
+
+class ParkableEngine:
+    """Shared drain→park→re-admit lifecycle for P/D engines.
+
+    Draining stops new placements (routers skip non-``accepting``
+    instances) while in-flight work runs to completion; once empty the
+    instance parks and its energy integrates at the chip's sleep draw
+    instead of idle draw until it is re-admitted.
+    """
+
+    def drain(self) -> None:
+        self.accepting = False
+
+    def begin_park(self, now: float) -> None:
+        if self._parked_at is None and self.empty:
+            self._parked_at = now
+
+    def unpark(self, now: float) -> None:
+        if self._parked_at is not None:
+            self.energy.parked_s += now - self._parked_at
+            self._parked_at = None
+
+    def readmit(self, now: float) -> None:
+        self.accepting = True
+        self.unpark(now)
+
+    def close_park(self, end: float) -> None:
+        """End-of-run bookkeeping: close an open park interval."""
+        self.unpark(end)
+
+    @property
+    def parked(self) -> bool:
+        return self._parked_at is not None
+
+
+# ---------------------------------------------------------------------------
 # Prefill instance
 # ---------------------------------------------------------------------------
 
 
 @dataclass
-class PrefillEngine:
+class PrefillEngine(ParkableEngine):
     idx: int
     backend: SimBackend
     controller: FreqController
@@ -87,15 +126,23 @@ class PrefillEngine:
 
     queue: Deque[Request] = field(default_factory=deque)
     busy: bool = False
+    busy_until: float = 0.0  # current batch's completion time
     alive: bool = True
+    accepting: bool = True  # False while draining/parked (EcoScale)
     energy: InstanceEnergy = None  # set in __post_init__
     current_batch: List[Request] = field(default_factory=list)
+    _parked_at: Optional[float] = None
 
     def __post_init__(self):
         self.energy = InstanceEnergy(
             name=f"prefill-{self.idx}",
             idle_power_w=self.backend.hw.idle_power(),
+            sleep_power_w=self.backend.hw.sleep_power(),
         )
+
+    @property
+    def empty(self) -> bool:
+        return not self.queue and not self.current_batch
 
     @property
     def queued_tokens(self) -> int:
@@ -135,6 +182,7 @@ class PrefillEngine:
         )
         cost = self.backend.prefill_iter(batch, n_tok, f)
         self.busy = True
+        self.busy_until = now + cost.time_s
         self.energy.busy_s += cost.time_s
         self.energy.busy_j += cost.energy_j
         if self.record_trace:
@@ -159,7 +207,7 @@ class PrefillEngine:
 
 
 @dataclass
-class DecodeEngine:
+class DecodeEngine(ParkableEngine):
     idx: int
     backend: SimBackend
     controller: FreqController
@@ -172,15 +220,22 @@ class DecodeEngine:
     running: List[Request] = field(default_factory=list)
     busy: bool = False
     alive: bool = True
+    accepting: bool = True  # False while draining/parked (EcoScale)
     energy: InstanceEnergy = None
     _iter_cost: Optional[IterCost] = None
     _iter_f: float = 0.0
+    _parked_at: Optional[float] = None
 
     def __post_init__(self):
         self.energy = InstanceEnergy(
             name=f"decode-{self.idx}",
             idle_power_w=self.backend.hw.idle_power(),
+            sleep_power_w=self.backend.hw.sleep_power(),
         )
+
+    @property
+    def empty(self) -> bool:
+        return not self.running and not self.waiting
 
     # -- state-space coordinates (what the router sees) --------------------
     @property

@@ -23,11 +23,17 @@ class InstanceEnergy:
     busy_j: float = 0.0
     span_s: float = 0.0  # wall-clock span the instance was alive
     idle_power_w: float = 0.0
+    parked_s: float = 0.0  # time spent parked by the autoscaler
+    sleep_power_w: float = 0.0  # draw while parked
     freq_trace: List[tuple] = field(default_factory=list)  # (t, f, n)
 
     @property
     def idle_j(self) -> float:
-        return max(0.0, self.span_s - self.busy_s) * self.idle_power_w
+        awake_idle = max(0.0, self.span_s - self.busy_s - self.parked_s)
+        return (
+            awake_idle * self.idle_power_w
+            + self.parked_s * self.sleep_power_w
+        )
 
     @property
     def total_j(self) -> float:
@@ -74,6 +80,9 @@ class RunMetrics:
             out[key] = out.get(key, 0.0) + e.total_j
         return out
 
+    def parked_s_total(self) -> float:
+        return sum(e.parked_s for e in self.instances)
+
     def output_tokens(self) -> int:
         return sum(r.decode_len for r in self._done())
 
@@ -101,6 +110,7 @@ class RunMetrics:
             "energy_j": round(self.energy_j(), 1),
             "epot_mj": round(self.epot_j() * 1e3, 3),
             "throughput_tok_s": round(self.throughput_tok_s(), 1),
+            "parked_s": round(self.parked_s_total(), 1),
         }
 
     def cdf(self, metric: str, points: int = 200):

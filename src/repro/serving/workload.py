@@ -188,6 +188,29 @@ def synthetic_pd_ratio(
     return reqs
 
 
+def step_load(
+    dataset: DatasetDist,
+    segments: List[tuple],
+    seed: int = 0,
+) -> List[Request]:
+    """Piecewise-constant Poisson load: ``segments`` is a list of
+    ``(duration_s, rps)`` windows played back-to-back.  The canonical
+    autoscaler stimulus (trough → step up → trough)."""
+    reqs: List[Request] = []
+    t0 = 0.0
+    for i, (dur, rps) in enumerate(segments):
+        if rps > 0.0:
+            seg = poisson_workload(
+                dataset, rps, dur, seed=seed + 1_009 * i,
+                start_rid=len(reqs),
+            )
+            for r in seg:
+                r.arrival_s += t0
+            reqs.extend(seg)
+        t0 += dur
+    return reqs
+
+
 def attach_tokens(
     reqs: List[Request], vocab_size: int, seed: int = 0
 ) -> List[Request]:

@@ -2,7 +2,7 @@
 equivalence (property), staircase capture."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.gbdt import GBLinear, GBTree
 

@@ -1,6 +1,6 @@
 """Hardware latency model: staircase, phase asymmetry, scaling laws."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs.registry import REGISTRY
 from repro.core.hwmodel import HardwareModel, decode_work, prefill_work

@@ -1,7 +1,7 @@
 """Power/energy model: U-curve, TDP wall, and the paper's anchors."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs.registry import REGISTRY
 from repro.core import power as P

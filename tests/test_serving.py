@@ -2,7 +2,7 @@
 elastic scaling, straggler mitigation, workload generators, metrics."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs.registry import REGISTRY
 from repro.core.power import A100

@@ -37,6 +37,7 @@ MODULES = [
     ("tab2_pd_ratio", "Tab.II   synthetic P/D-ratio workload"),
     ("fig34_cdfs", "Fig.34   TTFT/ITL CDFs at low/high RPS"),
     ("fig_hetero_autoscale", "EcoScale hetero fleet + autoscale vs static"),
+    ("fig_prefix_cache", "Chunked prefill + radix prefix cache (multi-turn)"),
     ("roofline", "§Roofline table from dry-run records"),
     ("perf_iterations", "§Perf    hillclimb log from perf records"),
 ]
@@ -44,9 +45,10 @@ MODULES = [
 QUICK = {"fig1_5_ucurve", "fig4_itl_sensitivity", "fig6_staircase",
          "fig13_state_space", "fig20_control_interval", "roofline"}
 
-# CI smoke: fast analytic sanity + the EcoScale serving scenario (which
-# reads BENCH_SMOKE=1 and shrinks its trace)
-SMOKE = {"fig1_5_ucurve", "fig6_staircase", "fig_hetero_autoscale"}
+# CI smoke: fast analytic sanity + the EcoScale serving scenario + the
+# prefix-cache scenario (both read BENCH_SMOKE=1 and shrink their traces)
+SMOKE = {"fig1_5_ucurve", "fig6_staircase", "fig_hetero_autoscale",
+         "fig_prefix_cache"}
 
 
 def main() -> int:

@@ -12,6 +12,7 @@ from repro.core.ecofreq import (  # noqa: F401
 )
 from repro.core.ecopred import EcoPred, ProfileRanges  # noqa: F401
 from repro.core.ecoroute import (  # noqa: F401
+    CacheAffinityPrefillRouter,
     EcoRoute,
     EnergyAwareEcoRoute,
     EnergyAwarePrefillRouter,
@@ -28,6 +29,7 @@ from repro.core.hwmodel import (  # noqa: F401
     decode_work,
     energy_frequency_curve,
     iter_cost,
+    prefill_chunk_work,
     prefill_work,
     sweet_spot,
 )

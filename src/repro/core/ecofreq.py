@@ -34,10 +34,11 @@ class BatchInfo:
     """What the engine sends the controller when scheduling a batch (B)."""
 
     phase: str  # "prefill" | "decode"
-    n_tok: int = 0  # prefill: batched prompt tokens
+    n_tok: int = 0  # prefill: batched *new* prompt tokens this iteration
     n_req: int = 0  # decode: running requests
     n_kv: int = 0  # decode: resident KV tokens
     max_waiting_s: float = 0.0  # prefill: max queue wait within this batch
+    n_cached: int = 0  # prefill: resident prefix tokens (cache + chunks)
 
 
 @dataclass
@@ -87,7 +88,7 @@ class EcoFreq:
 
     def predict(self, f, batch: BatchInfo) -> np.ndarray:
         if batch.phase == "prefill":
-            t = self.predictor.predict_prefill(f, batch.n_tok)
+            t = self.predictor.predict_prefill(f, batch.n_tok, batch.n_cached)
         else:
             t = self.predictor.predict_decode(f, batch.n_req, batch.n_kv)
         return t + self.latency_bias_s

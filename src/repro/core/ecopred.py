@@ -38,6 +38,7 @@ class ProfileRanges:
     max_tokens: int = 16_384  # prefill batched-token budget
     max_requests: int = 512  # decode running-request cap
     max_kv_tokens: int = 1_000_000  # KV-cache token capacity
+    max_cached_tokens: int = 16_384  # resident-prefix range (chunk/cache)
 
 
 class EcoPred:
@@ -84,14 +85,25 @@ class EcoPred:
         rng = np.random.default_rng(seed)
         freqs = np.asarray(self.freq_options)
 
-        # prefill: uniform over N_tok, uniform over frequency options
+        # prefill: uniform over (N_new, N_cached), uniform over frequency
+        # options.  Half the samples keep N_cached == 0 so the legacy
+        # whole-prompt query stays exactly on-distribution; the rest cover
+        # chunked/partial prefill (a chunk of new tokens attending to a
+        # resident prefix of cache hits + earlier chunks).
         n_tok = rng.integers(1, r.max_tokens + 1, n_prefill)
+        n_cached = rng.integers(0, r.max_cached_tokens + 1, n_prefill)
+        n_cached[: n_prefill // 2] = 0
         f_p = freqs[rng.integers(0, len(freqs), n_prefill)]
         y_p = np.array(
-            [hw.prefill_time(int(t), float(f)) for t, f in zip(n_tok, f_p)]
+            [
+                hw.prefill_chunk_time(int(t), int(c), float(f))
+                if c > 0
+                else hw.prefill_time(int(t), float(f))
+                for t, c, f in zip(n_tok, n_cached, f_p)
+            ]
         )
         y_p *= np.exp(rng.normal(0.0, noise_sigma, n_prefill))
-        self.prefill_model.fit(self._pfeat(f_p, n_tok), y_p)
+        self.prefill_model.fit(self._pfeat(f_p, n_tok, n_cached), y_p)
 
         # decode: uniform over (N_req, N_kv) with N_kv >= N_req
         n_req = rng.integers(1, r.max_requests + 1, n_decode)
@@ -119,18 +131,31 @@ class EcoPred:
     # Prediction (vectorized; <0.5 ms per batched query in the paper)
     # ------------------------------------------------------------------
     @staticmethod
-    def _pfeat(f, n_tok) -> np.ndarray:
-        """Prefill features: the paper's Eq. 6 per-frequency affine form
-        T ≈ a_f·N_tok + b_f is captured exactly by adding the physical
-        interaction terms N_tok/f and 1/f (T_comp ∝ N_tok/f)."""
-        f, t = np.broadcast_arrays(
-            np.asarray(f, float).ravel(), np.asarray(n_tok, float).ravel()
-        )
-        return np.stack([f, t, t / f * 1e3, 1e3 / f], axis=-1)
+    def _pfeat(f, n_tok, n_cached=0) -> np.ndarray:
+        """Prefill features over (new tokens, cached/resident context).
 
-    def predict_prefill(self, f, n_tok) -> np.ndarray:
+        The paper's Eq. 6 per-frequency affine form T ≈ a_f·N_tok + b_f is
+        captured exactly by the physical interaction terms N_tok/f and 1/f
+        (T_comp ∝ N_tok/f).  Chunked prefill adds the resident prefix c:
+        attention FLOPs scale with N_tok·(c + N_tok/2)/f and the prefix KV
+        read with c alone, so the cross term, the quadratic term, and the
+        bare c all enter as explicit features (GBLinear is linear —
+        interactions must be spelled out; without N_tok²/f the fit clamps
+        small-chunk/large-prefix queries to zero)."""
+        f, t, c = np.broadcast_arrays(
+            np.asarray(f, float).ravel(),
+            np.asarray(n_tok, float).ravel(),
+            np.asarray(n_cached, float).ravel(),
+        )
+        return np.stack(
+            [f, t, t / f * 1e3, 1e3 / f, c, c / f * 1e3,
+             t * c / f * 1e-3, t * t / f * 1e-3],
+            axis=-1,
+        )
+
+    def predict_prefill(self, f, n_tok, n_cached=0) -> np.ndarray:
         return np.maximum(
-            self.prefill_model.predict(self._pfeat(f, n_tok)), 0.0
+            self.prefill_model.predict(self._pfeat(f, n_tok, n_cached)), 0.0
         )
 
     def predict_decode(self, f, n_req, n_kv) -> np.ndarray:
@@ -144,10 +169,12 @@ class EcoPred:
     # ------------------------------------------------------------------
     # Online adaptation
     # ------------------------------------------------------------------
-    def record_prefill(self, f: float, n_tok: int, t_s: float) -> None:
+    def record_prefill(
+        self, f: float, n_tok: int, t_s: float, n_cached: int = 0
+    ) -> None:
         if not self.online_enabled:
             return
-        self._buf_p.append(np.array([f, n_tok, t_s]))
+        self._buf_p.append(np.array([f, n_tok, n_cached, t_s]))
         self._since_p += 1
         if self._since_p >= self.adapt_every:
             self._adapt_prefill()
@@ -166,7 +193,7 @@ class EcoPred:
         self._since_p = 0
         buf = np.stack(self._buf_p[-self.replay_window:])
         self.prefill_model.continue_fit(
-            self._pfeat(buf[:, 0], buf[:, 1]), buf[:, 2]
+            self._pfeat(buf[:, 0], buf[:, 1], buf[:, 2]), buf[:, 3]
         )
         self.n_adaptations += 1
 

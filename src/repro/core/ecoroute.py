@@ -46,6 +46,7 @@ class InstanceView:
     kv_headroom: int = 1 << 62  # tokens of KV space left
     latency_bias_s: float = 0.0  # straggler signal from EcoPred residuals
     busy_remaining_s: float = 0.0  # in-flight batch time left (prefill)
+    cached_len: int = 0  # radix-cache prefix match for the request (prefill)
 
 
 @dataclass
@@ -301,6 +302,81 @@ class EnergyAwarePrefillRouter:
             ).energy_j
             scored.append((t_hyp <= self.budget, e_marg, t_hyp, v))
         pick = _select(scored, self._rr, self.tol)
+        self._rr += 1
+        return pick.idx
+
+
+class CacheAffinityPrefillRouter:
+    """Prefix-cache-aware prefill placement (hit-rate-weighted what-if).
+
+    Each candidate view carries ``cached_len`` — the longest prefix of the
+    arriving prompt resident in that instance's radix tree.  Placement
+    runs the same queue-drain what-if as
+    :class:`EnergyAwarePrefillRouter`, but on the *effective* new tokens
+    ``prompt_len − cached_len``, and prices the marginal joules with the
+    partial-prefill cost model (a hit skips both compute and energy).
+
+    Selection among candidates whose projected TTFT meets the discounted
+    budget: longest prefix match first (cache affinity keeps a
+    conversation's turns landing where its tree lives), tie-broken by
+    predicted marginal energy.  If nobody meets the budget, lowest
+    projected latency wins — affinity never beats an SLO miss.  Falling
+    back through ``tol``-banded round-robin keeps cold prompts spread.
+    """
+
+    def __init__(
+        self,
+        profiles: Dict[int, InstanceProfile],
+        slo_ttft_s: float,
+        tol: float = 0.05,
+        budget_frac: float = 0.5,
+    ):
+        self.profiles = profiles
+        self.slo_ttft_s = slo_ttft_s
+        self.tol = tol
+        self.budget = slo_ttft_s * budget_frac
+        self._rr = 0
+
+    def _whatif(self, p: InstanceProfile, n_new: int, n_cached: int) -> tuple:
+        """Lowest budget-meeting (f, projected drain) on p's ladder for a
+        queue of ``n_new`` fresh tokens over ``n_cached`` resident ones."""
+        opts = np.asarray(p.ecofreq.freq_options)
+        t = p.ecofreq.predictor.predict_prefill(
+            opts, np.full(len(opts), float(n_new)),
+            np.full(len(opts), float(n_cached)),
+        )
+        ok = t <= self.budget
+        j = int(ok.argmax()) if ok.any() else len(opts) - 1
+        return float(opts[j]), float(t[j])
+
+    def route(self, views: List[InstanceView], req: RouteRequest) -> int:
+        cands = _candidates(views, req)
+        scored = []
+        for v in cands:
+            p = self.profiles[v.idx]
+            n_new = max(1, req.prompt_len - v.cached_len)
+            # v.n_kv carries the instance's queued (pending) tokens
+            f_hyp, t_hyp = self._whatif(p, v.n_kv + n_new, v.cached_len)
+            t_hyp += v.busy_remaining_s  # head-of-line: in-flight batch
+            e_marg = p.hw.prefill_chunk_iter(
+                n_new, v.cached_len, 1, f_hyp
+            ).energy_j
+            scored.append((t_hyp <= self.budget, v.cached_len, e_marg,
+                           t_hyp, v))
+        ok = [s for s in scored if s[0]]
+        if ok:
+            best_match = max(s[1] for s in ok)
+            if best_match > 0:
+                # cache affinity: longest prefix wins; ties on energy
+                tied = [s for s in ok if s[1] == best_match]
+                return min(tied, key=lambda s: s[2])[4].idx
+            pool, col = ok, 2  # all cold: compete on marginal energy
+        else:
+            pool, col = scored, 3  # nobody meets budget: fastest drain
+        best = min(s[col] for s in pool)
+        band = abs(best) * self.tol + 1e-9
+        tied = [s for s in pool if s[col] <= best + band]
+        pick = tied[self._rr % len(tied)][4]
         self._rr += 1
         return pick.idx
 

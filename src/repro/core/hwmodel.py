@@ -188,6 +188,79 @@ def prefill_work(
     )
 
 
+def prefill_chunk_work(
+    cfg: ModelConfig,
+    chip: ChipSpec,
+    n_new: int,
+    n_ctx: int = 0,
+    n_reqs: int = 1,
+    tp: int = 1,
+) -> IterWork:
+    """Work of one *partial* prefill iteration (chunked prefill).
+
+    ``n_new`` new prompt tokens are computed this iteration against
+    ``n_ctx`` prior context tokens total across the batch — radix-cache
+    hits plus earlier chunks of the same prompts.  Differences from a
+    whole-prompt iteration of the same size:
+
+    * attention spans the prior context too: each new token attends to its
+      request's full resident prefix (quadratic term split across chunks);
+    * the prior context's KV is **read** from HBM (the chunk's attention
+      streams it), while only the new tokens' KV is written;
+    * weights stream once per chunk, so splitting a prompt into k chunks
+      pays the weight traffic k times — the classic chunked-prefill
+      overhead that the cost model must price for EcoFreq to pick honest
+      clocks.
+
+    With ``n_ctx == 0`` and ``n_reqs == 1`` this reduces exactly to
+    :func:`prefill_work` (modulo the identical stream terms).
+    """
+    if n_new <= 0:
+        return IterWork(0.0, 0.0, 0.0, 0)
+    total, active, expert_p, n_moe, kv_b, st_b, non_moe = _body_params(cfg)
+    n_reqs = max(1, n_reqs)
+    ctx_per_req = n_ctx / n_reqs
+    new_per_req = n_new / n_reqs
+
+    m_pad = _pad_up(n_new, chip.mxu_tile)
+    gemm_useful = 2.0 * active * n_new
+    gemm_pad = 2.0 * active * (m_pad - n_new)
+    # attention: each new token attends to (prior ctx + causal half of its
+    # own chunk); sliding windows clip the span exactly as in prefill_work
+    attn = 0.0
+    for s in cfg.block_pattern:
+        if s.mixer != "attn":
+            continue
+        span = ctx_per_req + new_per_req / 2.0
+        if s.window is not None:
+            span = min(span, float(s.window))
+        attn += 4.0 * cfg.q_dim * span * n_new * cfg.n_blocks
+    ssd = 0.0
+    if cfg.has_mamba:
+        m = cfg.mamba
+        n_mamba = (
+            sum(1 for s in cfg.block_pattern if s.mixer == "mamba")
+            * cfg.n_blocks
+        )
+        ssd = 10.0 * m.d_inner(cfg.d_model) * m.d_state * n_new * n_mamba
+
+    touched = _experts_touched(cfg, n_new)
+    w_itemsize = 1.02 if cfg.weight_dtype == "int8" else BF16
+    w_bytes = (non_moe + n_moe * touched * expert_p) * w_itemsize
+    act_bytes = 12.0 * cfg.d_model * n_new * BF16
+    kv_write = kv_b * n_new
+    kv_read = kv_b * n_ctx  # resident prefix streamed by the chunk's attn
+    st_rw = 2 * st_b * n_reqs  # recurrent state resumes per chunk
+    flops = (gemm_useful + attn + ssd) / tp
+    return IterWork(
+        flops=flops,
+        useful_flops=flops,
+        hbm_bytes=(w_bytes + act_bytes + kv_write + kv_read + st_rw) / tp,
+        gemm_m=n_new,
+        pad_flops=gemm_pad / tp,
+    )
+
+
 def decode_work(
     cfg: ModelConfig,
     chip: ChipSpec,
@@ -316,9 +389,57 @@ class HardwareModel:
         return IterCost(c.time_s, c.power_w * self.tp,
                         c.energy_j * self.tp, c.f_effective, c.theta)
 
+    def prefill_chunk_iter(
+        self, n_new: int, n_ctx: int = 0, n_reqs: int = 1, f: float = None
+    ) -> IterCost:
+        """Cost of a partial-prefill iteration: ``n_new`` fresh tokens
+        against ``n_ctx`` resident prefix tokens (cache + prior chunks)."""
+        f = f if f is not None else self.chip.f_max
+        w = prefill_chunk_work(
+            self.cfg, self.chip, n_new, n_ctx, n_reqs, self.tp
+        )
+        c = iter_cost(self.chip, w, f)
+        return IterCost(c.time_s, c.power_w * self.tp,
+                        c.energy_j * self.tp, c.f_effective, c.theta)
+
     def decode_iter(self, n_req: int, n_kv: int, f: float = None) -> IterCost:
         f = f if f is not None else self.chip.f_max
         w = decode_work(self.cfg, self.chip, n_req, n_kv, self.tp)
+        c = iter_cost(self.chip, w, f)
+        return IterCost(c.time_s, c.power_w * self.tp,
+                        c.energy_j * self.tp, c.f_effective, c.theta)
+
+    def hybrid_iter(
+        self,
+        n_req: int,
+        n_kv: int,
+        n_new: int,
+        n_ctx: int = 0,
+        n_pre_reqs: int = 1,
+        f: float = None,
+    ) -> IterCost:
+        """One mixed iteration on a hybrid instance: a decode step for
+        ``n_req`` running requests piggybacking a prefill chunk of
+        ``n_new`` tokens (Sarathi-style coalescing). Work composes
+        additively; the weight stream is shared (counted once by
+        subtracting the duplicated weight bytes)."""
+        f = f if f is not None else self.chip.f_max
+        wd = decode_work(self.cfg, self.chip, n_req, n_kv, self.tp)
+        wp = prefill_chunk_work(
+            self.cfg, self.chip, n_new, n_ctx, n_pre_reqs, self.tp
+        )
+        w = wd + wp
+        if n_req > 0 and n_new > 0:
+            # both phases streamed the weights; one pass serves both
+            total, active, expert_p, n_moe, kv_b, st_b, non_moe = \
+                _body_params(self.cfg)
+            touched = _experts_touched(self.cfg, min(n_req, n_new))
+            w_itemsize = 1.02 if self.cfg.weight_dtype == "int8" else BF16
+            dup = (non_moe + n_moe * touched * expert_p) * w_itemsize / self.tp
+            w = IterWork(
+                w.flops, w.useful_flops,
+                max(w.hbm_bytes - dup, 0.0), w.gemm_m, w.pad_flops,
+            )
         c = iter_cost(self.chip, w, f)
         return IterCost(c.time_s, c.power_w * self.tp,
                         c.energy_j * self.tp, c.f_effective, c.theta)
@@ -327,6 +448,11 @@ class HardwareModel:
     def prefill_time(self, n_tok: int, f: float,
                      avg_ctx: Optional[float] = None) -> float:
         return self.prefill_iter(n_tok, avg_ctx, f).time_s
+
+    def prefill_chunk_time(
+        self, n_new: int, n_ctx: int, f: float, n_reqs: int = 1
+    ) -> float:
+        return self.prefill_chunk_iter(n_new, n_ctx, n_reqs, f).time_s
 
     def decode_time(self, n_req: int, n_kv: int, f: float) -> float:
         return self.decode_iter(n_req, n_kv, f).time_s

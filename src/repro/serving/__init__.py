@@ -6,8 +6,14 @@ from repro.serving.autoscale import (  # noqa: F401
     homogeneous_fleet,
 )
 from repro.serving.cluster import ClusterConfig, PDCluster, build_predictor  # noqa: F401
-from repro.serving.engine import DecodeEngine, PrefillEngine, SimBackend  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    DecodeEngine,
+    HybridEngine,
+    PrefillEngine,
+    SimBackend,
+)
 from repro.serving.metrics import InstanceEnergy, RunMetrics  # noqa: F401
+from repro.serving.radixcache import RadixCache  # noqa: F401
 from repro.serving.request import Phase, Request  # noqa: F401
 from repro.serving.workload import (  # noqa: F401
     DATASETS,
@@ -17,6 +23,7 @@ from repro.serving.workload import (  # noqa: F401
     LengthDist,
     attach_tokens,
     azure_like,
+    multiturn_workload,
     poisson_workload,
     step_load,
     synthetic_pd_ratio,

@@ -26,6 +26,7 @@ from repro.configs.base import ModelConfig
 from repro.core.ecofreq import EcoFreq, FreqController, StaticFreq
 from repro.core.ecopred import EcoPred, ProfileRanges
 from repro.core.ecoroute import (
+    CacheAffinityPrefillRouter,
     EcoRoute,
     EnergyAwareEcoRoute,
     EnergyAwarePrefillRouter,
@@ -42,8 +43,14 @@ from repro.serving.autoscale import (
     AutoScaler,
     InstanceSpec,
 )
-from repro.serving.engine import DecodeEngine, PrefillEngine, SimBackend
+from repro.serving.engine import (
+    DecodeEngine,
+    HybridEngine,
+    PrefillEngine,
+    SimBackend,
+)
 from repro.serving.metrics import RunMetrics
+from repro.serving.radixcache import RadixCache
 from repro.serving.request import Phase, Request
 
 
@@ -80,6 +87,19 @@ class ClusterConfig:
     prefill_batch_tokens: int = 8_192
     decode_max_running: int = 512
     kv_capacity_tokens: Optional[int] = None  # default: HBM-derived
+    # chunked prefill: prompts are scheduled as chunk iterations under a
+    # strict per-iteration token budget (oversized prompts no longer
+    # bypass it); False restores legacy whole-prompt FCFS batching
+    chunked_prefill: bool = True
+    prefill_chunk_tokens: Optional[int] = None  # default: batch budget
+    # radix prefix cache (multi-turn / shared-system-prompt reuse) +
+    # cache-affinity prefill routing; needs requests with prompt_tokens
+    prefix_cache: bool = False
+    prefix_cache_capacity: Optional[int] = None  # tokens; default: KV cap
+    # hybrid instances: decode engines that admit prefill chunks between
+    # decode steps (local decode join, no KV migration)
+    n_hybrid: int = 0
+    hybrid_chunk_tokens: int = 2_048
     # physics
     noise_sigma: float = 0.02
     transfer_bw: float = 200e9  # P->D KV migration bytes/s
@@ -126,6 +146,9 @@ def build_predictor(
             max_tokens=max(prefill_tokens, 32_768),
             max_requests=max_running,
             max_kv_tokens=cap,
+            # chunked prefill queries (n_new, n_cached): the resident
+            # prefix can be as long as the longest prompt
+            max_cached_tokens=max(prefill_tokens, 32_768),
         ),
     )
     return pred
@@ -135,7 +158,12 @@ def build_predictor(
 # Cluster
 # ---------------------------------------------------------------------------
 
-_ARRIVAL, _P_DONE, _JOIN_D, _D_DONE, _CHAOS, _SCALE = range(6)
+_ARRIVAL, _P_DONE, _JOIN_D, _D_DONE, _CHAOS, _SCALE, _H_DONE = range(7)
+
+# hybrid instances live in their own list; their router-view indices are
+# offset so they never collide with prefill/decode indices (which can
+# grow via scale-out)
+HYBRID_OFF = 1 << 20
 
 
 class PDCluster:
@@ -199,6 +227,10 @@ class PDCluster:
             self.prefill.append(self._make_prefill(i, spec))
         for i, spec in enumerate(self.decode_specs):
             self.decode.append(self._make_decode(i, spec))
+        self.hybrid: List[HybridEngine] = [
+            self._make_hybrid(j, self._default_spec_d)
+            for j in range(cfg.n_hybrid)
+        ]
 
         self.prefill_router: Router = RoundRobinRouter()
         self._profiles_p: Dict[int, InstanceProfile] = {}
@@ -217,14 +249,35 @@ class PDCluster:
                     cfg.slo_ttft_s, cfg.slo_itl_s,
                 )
                 self.decode_router = EcoRoute(route_ef, cfg.delta)
-            if self.hetero:
+            if cfg.prefix_cache:
+                # cache-affinity placement: hit-rate-weighted what-if over
+                # every instance that owns a radix tree
+                for i, spec in enumerate(self.prefill_specs):
+                    self._profiles_p[i] = self._profile(spec)
+                for j in range(len(self.hybrid)):
+                    self._profiles_p[HYBRID_OFF + j] = self._profile(
+                        self._default_spec_d
+                    )
+                self.prefill_router = CacheAffinityPrefillRouter(
+                    self._profiles_p, cfg.slo_ttft_s
+                )
+            elif self.hetero:
                 # the per-instance what-if is also the better prefill
                 # balancer whenever any chip identity is in play
                 for i, spec in enumerate(self.prefill_specs):
                     self._profiles_p[i] = self._profile(spec)
+                for j in range(len(self.hybrid)):
+                    self._profiles_p[HYBRID_OFF + j] = self._profile(
+                        self._default_spec_d
+                    )
                 self.prefill_router = EnergyAwarePrefillRouter(
                     self._profiles_p, cfg.slo_ttft_s
                 )
+            if self._varied_decode:
+                for j in range(len(self.hybrid)):
+                    self._profiles_d[HYBRID_OFF + j] = self._profile(
+                        self._default_spec_d
+                    )
         else:
             self.decode_router = RoundRobinRouter()
 
@@ -307,16 +360,31 @@ class PDCluster:
             return IntervalFreq(ef, c.control_interval_s)
         return ef
 
+    def _instance_seed(self, phase: str, idx: int) -> int:
+        """Decorrelated per-instance noise seed.  The old affine scheme
+        (``seed*101 + idx`` / ``seed*211 + idx``) collapsed at ``seed=0``:
+        prefill-i and decode-i shared one stream, so every instance pair
+        saw identical measurement noise.  SeedSequence mixing keys each
+        (run seed, phase, slot) to an independent stream."""
+        code = {"prefill": 1, "decode": 2, "hybrid": 3}[phase]
+        ss = np.random.SeedSequence([self.cfg.seed, code, idx])
+        return int(ss.generate_state(1, np.uint64)[0])
+
+    def _cache_for(self, spec: InstanceSpec) -> Optional[RadixCache]:
+        if not self.cfg.prefix_cache:
+            return None
+        cap = self.cfg.prefix_cache_capacity or self._kv_cap_for(spec)
+        return RadixCache(cap)
+
     def _make_prefill(self, idx: int, spec: InstanceSpec) -> PrefillEngine:
         c = self.cfg
         hw = self._hw_for(spec)
         pred = self._pred_for(spec)
+        seed = self._instance_seed("prefill", idx)
         if c.backend_factory is not None:
-            backend = c.backend_factory("prefill", idx, hw,
-                                        c.seed * 101 + idx)
+            backend = c.backend_factory("prefill", idx, hw, seed)
         else:
-            backend = SimBackend(hw, c.noise_sigma,
-                                 seed=c.seed * 101 + idx)
+            backend = SimBackend(hw, c.noise_sigma, seed=seed)
         return PrefillEngine(
             idx=idx,
             backend=backend,
@@ -324,6 +392,11 @@ class PDCluster:
             predictor=pred,
             max_batch_tokens=c.prefill_batch_tokens,
             record_trace=c.record_traces,
+            chunk_tokens=(
+                (c.prefill_chunk_tokens or c.prefill_batch_tokens)
+                if c.chunked_prefill else None
+            ),
+            cache=self._cache_for(spec),
         )
 
     def _make_decode(self, idx: int, spec: InstanceSpec) -> DecodeEngine:
@@ -331,14 +404,13 @@ class PDCluster:
         hw = self._hw_for(spec)
         pred = self._pred_for(spec)
         slow = (c.straggler_factors or {}).get(idx, 1.0)
+        seed = self._instance_seed("decode", idx)
         if c.backend_factory is not None:
-            backend = c.backend_factory("decode", idx, hw,
-                                        c.seed * 211 + idx)
+            backend = c.backend_factory("decode", idx, hw, seed)
             backend.slow_factor = slow
         else:
             backend = SimBackend(
-                hw, c.noise_sigma, seed=c.seed * 211 + idx,
-                slow_factor=slow,
+                hw, c.noise_sigma, seed=seed, slow_factor=slow,
             )
         return DecodeEngine(
             idx=idx,
@@ -348,6 +420,27 @@ class PDCluster:
             max_running=c.decode_max_running,
             kv_capacity_tokens=self._kv_cap_for(spec),
             record_trace=c.record_traces,
+        )
+
+    def _make_hybrid(self, j: int, spec: InstanceSpec) -> HybridEngine:
+        c = self.cfg
+        hw = self._hw_for(spec)
+        pred = self._pred_for(spec)
+        seed = self._instance_seed("hybrid", j)
+        if c.backend_factory is not None:
+            backend = c.backend_factory("hybrid", j, hw, seed)
+        else:
+            backend = SimBackend(hw, c.noise_sigma, seed=seed)
+        return HybridEngine(
+            idx=HYBRID_OFF + j,
+            backend=backend,
+            controller=self._controller(spec.freqs(), pred, spec.chip),
+            predictor=pred,
+            max_running=c.decode_max_running,
+            kv_capacity_tokens=self._kv_cap_for(spec),
+            record_trace=c.record_traces,
+            chunk_tokens=c.hybrid_chunk_tokens,
+            cache=self._cache_for(spec),
         )
 
     # -- event helpers --------------------------------------------------------
@@ -388,8 +481,20 @@ class PDCluster:
             dt, _ = started
             self._push(self.now + dt, _D_DONE, e.idx)
 
+    def _kick_hybrid(self, e: HybridEngine) -> None:
+        started = e.start_iteration(self.now)
+        if started is not None:
+            dt, _ = started
+            self._push(self.now + dt, _H_DONE, e.idx - HYBRID_OFF)
+
     # -- routing --------------------------------------------------------------
+    def _match_len(self, eng, req: Request) -> int:
+        if eng.cache is None or not req.prompt_tokens:
+            return 0
+        return eng.cache.match_len(req.prompt_tokens)
+
     def _route_prefill(self, req: Request) -> None:
+        req.cached_len = req.computed_len = 0  # (re-)entering prefill
         if self.autoscaler is not None:
             self.autoscaler.maybe_wake_prefill(self.now, req.prompt_len)
         views = [
@@ -399,12 +504,27 @@ class PDCluster:
                 busy_remaining_s=(
                     max(0.0, e.busy_until - self.now) if e.busy else 0.0
                 ),
+                cached_len=self._match_len(e, req),
             )
             for e in self.prefill
         ]
+        views += [
+            InstanceView(
+                h.idx, len(h.pqueue), h.queued_tokens, alive=h.alive,
+                accepting=h.accepting,
+                cached_len=self._match_len(h, req),
+            )
+            for h in self.hybrid
+        ]
         idx = self.prefill_router.route(views, RouteRequest(req.prompt_len))
+        if idx >= HYBRID_OFF:
+            eng = self.hybrid[idx - HYBRID_OFF]
+            eng.enqueue_prefill(req, self.now)
+            if not eng.busy:
+                self._kick_hybrid(eng)
+            return
         eng = self.prefill[idx]
-        eng.enqueue(req)
+        eng.enqueue(req, self.now)
         if not eng.busy:
             self._kick_prefill(eng)
 
@@ -423,6 +543,15 @@ class PDCluster:
                 latency_bias_s=self._bias_ewma.get(e.idx, 0.0),
             )
             for e in self.decode
+        ]
+        views += [
+            InstanceView(
+                h.idx, h.n_req, h.n_kv,
+                has_waiting=len(h.waiting) > 0,
+                alive=h.alive, accepting=h.accepting,
+                kv_headroom=h.kv_headroom,
+            )
+            for h in self.hybrid
         ]
         idx = self.decode_router.route(views, RouteRequest(req.prompt_len))
         # KV migration latency (prompt KV bytes over the transfer fabric)
@@ -450,6 +579,11 @@ class PDCluster:
             r.tokens_out = 0
             r.kv_len = 0
             r.restarts = 0
+            r.cached_len = 0
+            r.computed_len = 0
+            r.max_itl_s = 0.0
+            r.output_tokens = []
+            r.t_prefill_start = -1.0
             r.t_first_token = r.t_finish = r.t_join_decode = -1.0
             self._push(r.arrival_s, _ARRIVAL, r)
         pending = len(requests)
@@ -477,7 +611,10 @@ class PDCluster:
 
             elif kind == _JOIN_D:
                 req, idx = data
-                eng = self.decode[idx]
+                eng = (
+                    self.hybrid[idx - HYBRID_OFF]
+                    if idx >= HYBRID_OFF else self.decode[idx]
+                )
                 if not eng.alive:  # died while KV was in flight
                     req.restarts += 1
                     req.tokens_out = 0
@@ -487,7 +624,18 @@ class PDCluster:
                 eng.unpark(self.now)  # KV landed after the drain finished
                 eng.enqueue(req)
                 if not eng.busy:
-                    self._kick_decode(eng)
+                    if idx >= HYBRID_OFF:
+                        self._kick_hybrid(eng)
+                    else:
+                        self._kick_decode(eng)
+
+            elif kind == _H_DONE:
+                eng = self.hybrid[data]
+                if not eng.alive:
+                    continue
+                done = eng.finish_iteration(self.now)
+                pending -= len(done)
+                self._kick_hybrid(eng)
 
             elif kind == _D_DONE:
                 eng = self.decode[data]
@@ -507,11 +655,15 @@ class PDCluster:
                 if action == "fail":
                     if phase == "decode":
                         lost = self.decode[idx].fail()
+                    elif phase == "hybrid":
+                        lost = self.hybrid[idx].fail()
                     else:
                         eng = self.prefill[idx]
                         eng.alive = False
+                        eng.release_locks()
                         lost = list(eng.current_batch) + list(eng.queue)
                         eng.current_batch = []
+                        eng._takes = []
                         eng.queue.clear()
                         for r in lost:
                             r.restarts += 1
@@ -545,14 +697,20 @@ class PDCluster:
 
         end = self.now
         energies = []
-        for e in self.prefill + self.decode:
+        for e in self.prefill + self.decode + self.hybrid:
             e.close_park(end)
             e.energy.span_s = end
             energies.append(e.energy)
+        hits = lookups = 0
+        for e in self.prefill + self.hybrid:
+            if e.cache is not None:
+                hits += e.cache.hit_tokens
+                lookups += e.cache.lookup_tokens
         return RunMetrics(
             requests=requests,
             instances=energies,
             slo_ttft_s=self.cfg.slo_ttft_s,
             slo_itl_s=self.cfg.slo_itl_s,
             duration_s=end,
+            prefix_hit_rate=(hits / lookups) if lookups else None,
         )

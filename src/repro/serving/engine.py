@@ -25,6 +25,7 @@ from repro.core.ecofreq import BatchInfo, FreqController, SystemState
 from repro.core.ecopred import EcoPred
 from repro.core.hwmodel import HardwareModel, IterCost
 from repro.serving.metrics import InstanceEnergy
+from repro.serving.radixcache import RadixCache
 from repro.serving.request import Phase, Request
 
 
@@ -57,9 +58,27 @@ class SimBackend:
         t = c.time_s * self._noise()
         return IterCost(t, c.power_w, c.power_w * t, c.f_effective, c.theta)
 
+    def prefill_chunk(self, reqs: List[Request], takes: List[int],
+                      n_new: int, n_ctx: int, f: float) -> IterCost:
+        """Partial-prefill iteration: ``n_new`` fresh tokens against
+        ``n_ctx`` resident prefix tokens (cache hits + earlier chunks)."""
+        c = self.hw.prefill_chunk_iter(n_new, n_ctx, max(1, len(reqs)), f)
+        t = c.time_s * self._noise()
+        return IterCost(t, c.power_w, c.power_w * t, c.f_effective, c.theta)
+
     def decode_iter(self, reqs: List[Request], n_req: int, n_kv: int,
                     f: float) -> IterCost:
         c = self.hw.decode_iter(n_req, n_kv, f)
+        t = c.time_s * self._noise()
+        return IterCost(t, c.power_w, c.power_w * t, c.f_effective, c.theta)
+
+    def hybrid_iter(self, dec_reqs: List[Request], n_req: int, n_kv: int,
+                    pre_reqs: List[Request], takes: List[int],
+                    n_new: int, n_ctx: int, f: float) -> IterCost:
+        """Mixed iteration: decode step + piggybacked prefill chunk."""
+        c = self.hw.hybrid_iter(
+            n_req, n_kv, n_new, n_ctx, max(1, len(pre_reqs)), f
+        )
         t = c.time_s * self._noise()
         return IterCost(t, c.power_w, c.power_w * t, c.f_effective, c.theta)
 
@@ -123,6 +142,11 @@ class PrefillEngine(ParkableEngine):
     predictor: Optional[EcoPred]
     max_batch_tokens: int = 8_192
     record_trace: bool = False
+    # chunked prefill: per-iteration *token* budget; None = legacy
+    # whole-prompt FCFS batching (oversized prompts bypass the budget)
+    chunk_tokens: Optional[int] = None
+    # radix prefix cache; None = no prompt reuse
+    cache: Optional[RadixCache] = None
 
     queue: Deque[Request] = field(default_factory=deque)
     busy: bool = False
@@ -131,6 +155,8 @@ class PrefillEngine(ParkableEngine):
     accepting: bool = True  # False while draining/parked (EcoScale)
     energy: InstanceEnergy = None  # set in __post_init__
     current_batch: List[Request] = field(default_factory=list)
+    _takes: List[int] = field(default_factory=list)
+    _locks: dict = field(default_factory=dict)  # rid -> radix lock handle
     _parked_at: Optional[float] = None
 
     def __post_init__(self):
@@ -146,59 +172,121 @@ class PrefillEngine(ParkableEngine):
 
     @property
     def queued_tokens(self) -> int:
-        return sum(r.prompt_len for r in self.queue)
+        """Prompt tokens still to *compute* across the queue (cache hits
+        and already-prefilled chunks don't count as pending work)."""
+        return sum(r.prefill_remaining for r in self.queue)
 
-    def enqueue(self, req: Request) -> None:
+    def enqueue(self, req: Request, now: float = 0.0) -> None:
         req.phase = Phase.QUEUED_PREFILL
         req.prefill_instance = self.idx
+        if self.cache is not None and req.prompt_tokens:
+            req.cached_len = self.cache.lookup(req.prompt_tokens, now)
+            self._locks[req.rid] = self.cache.lock(req.prompt_tokens)
         self.queue.append(req)
 
     def form_batch(self) -> Tuple[List[Request], int]:
-        """FCFS whole-prompt batching under the token budget (>=1 req)."""
+        """FCFS whole-prompt batching under the token budget (>=1 req).
+
+        Legacy (unchunked) path: an oversized prompt is admitted whole,
+        bypassing the budget — exactly the behavior chunked prefill fixes.
+        """
         batch: List[Request] = []
         tokens = 0
         while self.queue:
             nxt = self.queue[0]
-            if batch and tokens + nxt.prompt_len > self.max_batch_tokens:
+            if batch and tokens + nxt.prefill_remaining > self.max_batch_tokens:
                 break
             batch.append(self.queue.popleft())
-            tokens += nxt.prompt_len
+            tokens += nxt.prefill_remaining
         return batch, tokens
+
+    def form_chunk(self) -> Tuple[List[Request], List[int]]:
+        """FCFS *token-level* batching: fill the chunk budget exactly,
+        splitting the boundary prompt across iterations.  Only the last
+        admitted request can be partial, so batch order stays FCFS."""
+        budget = self.chunk_tokens or self.max_batch_tokens
+        batch: List[Request] = []
+        takes: List[int] = []
+        left = budget
+        while self.queue and left > 0:
+            nxt = self.queue[0]
+            take = min(nxt.prefill_remaining, left)
+            if take <= 0:
+                break
+            batch.append(self.queue.popleft())
+            takes.append(take)
+            left -= take
+        return batch, takes
 
     def start_iteration(self, now: float) -> Optional[Tuple[float, IterCost]]:
         """Begin one prefill iteration; returns (duration, cost) or None."""
         if not self.queue or not self.alive:
             self.busy = False
             return None
-        batch, n_tok = self.form_batch()
+        if self.chunk_tokens is not None:
+            batch, takes = self.form_chunk()
+        else:
+            batch, _ = self.form_batch()
+            takes = [r.prefill_remaining for r in batch]
+        n_new = sum(takes)
+        n_ctx = sum(r.cached_len + r.computed_len for r in batch)
         self.current_batch = batch
+        self._takes = takes
         for r in batch:
             r.phase = Phase.RUNNING_PREFILL
-            r.t_prefill_start = now
+            if r.t_prefill_start < 0:
+                r.t_prefill_start = now
         max_wait = max(now - r.arrival_s for r in batch)
         f = self.controller.select(
             SystemState(has_waiting=len(self.queue) > 0, now_s=now),
-            BatchInfo("prefill", n_tok=n_tok, max_waiting_s=max_wait),
+            BatchInfo("prefill", n_tok=n_new, max_waiting_s=max_wait,
+                      n_cached=n_ctx),
         )
-        cost = self.backend.prefill_iter(batch, n_tok, f)
+        if self.chunk_tokens is not None or n_ctx > 0:
+            cost = self.backend.prefill_chunk(batch, takes, n_new, n_ctx, f)
+        else:
+            # legacy whole-prompt path, bit-exact with pre-chunking costs
+            cost = self.backend.prefill_iter(batch, n_new, f)
         self.busy = True
         self.busy_until = now + cost.time_s
         self.energy.busy_s += cost.time_s
         self.energy.busy_j += cost.energy_j
         if self.record_trace:
-            self.energy.freq_trace.append((now, cost.f_effective, n_tok))
+            self.energy.freq_trace.append((now, cost.f_effective, n_new))
         if self.predictor is not None:
-            self.predictor.record_prefill(f, n_tok, cost.time_s)
+            self.predictor.record_prefill(f, n_new, cost.time_s, n_ctx)
         return cost.time_s, cost
 
     def finish_iteration(self, now: float) -> List[Request]:
-        """Iteration done: emit first tokens; returns the finished batch."""
-        batch = self.current_batch
-        self.current_batch = []
-        for r in batch:
-            r.t_first_token = now
-            r.phase = Phase.TRANSFERRING
-        return batch
+        """Iteration done: advance chunk progress; prompts that completed
+        emit their first token and return (partial prompts re-queue at the
+        front, preserving FCFS)."""
+        batch, takes = self.current_batch, self._takes
+        self.current_batch, self._takes = [], []
+        done: List[Request] = []
+        partial: List[Request] = []
+        for r, take in zip(batch, takes):
+            r.computed_len += take
+            if r.prefill_remaining <= 0:
+                r.t_first_token = now
+                r.phase = Phase.TRANSFERRING
+                if self.cache is not None and r.prompt_tokens:
+                    self.cache.unlock(self._locks.pop(r.rid, None))
+                    self.cache.insert(r.prompt_tokens, now)
+                done.append(r)
+            else:
+                r.phase = Phase.QUEUED_PREFILL
+                partial.append(r)
+        self.queue.extendleft(reversed(partial))
+        return done
+
+    def release_locks(self) -> None:
+        """Drop cache pins of all in-flight work (failure path)."""
+        if self.cache is None:
+            return
+        for handle in self._locks.values():
+            self.cache.unlock(handle)
+        self._locks.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -326,3 +414,157 @@ class DecodeEngine(ParkableEngine):
             r.tokens_out = 0
             r.kv_len = 0
         return lost
+
+
+# ---------------------------------------------------------------------------
+# Hybrid instance (chunked prefill + decode coalesced, Sarathi-style)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class HybridEngine(DecodeEngine):
+    """A decode instance that admits prefill *chunks* between decode steps.
+
+    Each iteration is mixed: one decode token for every running request
+    plus a prefill chunk of up to ``chunk_tokens`` new prompt tokens from
+    the local prefill queue (the weight stream is shared — see
+    :meth:`~repro.core.hwmodel.HardwareModel.hybrid_iter`).  Chunking
+    bounds the decode stall a long prompt can inject to one chunk's
+    latency instead of a whole prompt's, which is the point of admitting
+    decode work between chunks.  A prompt prefilled here joins decode
+    locally — no KV migration.
+    """
+
+    chunk_tokens: int = 2_048
+    cache: Optional[RadixCache] = None
+    pqueue: Deque[Request] = field(default_factory=deque)
+    p_current: List[Request] = field(default_factory=list)
+    _p_takes: List[int] = field(default_factory=list)
+    _locks: dict = field(default_factory=dict)  # rid -> radix lock handle
+
+    def __post_init__(self):
+        # idx may carry the cluster's hybrid view-offset; name by slot
+        self.energy = InstanceEnergy(
+            name=f"hybrid-{self.idx % (1 << 20)}",
+            idle_power_w=self.backend.hw.idle_power(),
+            sleep_power_w=self.backend.hw.sleep_power(),
+        )
+
+    @property
+    def empty(self) -> bool:
+        return (not self.running and not self.waiting
+                and not self.pqueue and not self.p_current)
+
+    @property
+    def queued_tokens(self) -> int:
+        return sum(r.prefill_remaining for r in self.pqueue)
+
+    def enqueue_prefill(self, req: Request, now: float = 0.0) -> None:
+        req.phase = Phase.QUEUED_PREFILL
+        req.prefill_instance = self.idx
+        if self.cache is not None and req.prompt_tokens:
+            req.cached_len = self.cache.lookup(req.prompt_tokens, now)
+            self._locks[req.rid] = self.cache.lock(req.prompt_tokens)
+        self.pqueue.append(req)
+
+    def _form_chunk(self) -> Tuple[List[Request], List[int]]:
+        batch: List[Request] = []
+        takes: List[int] = []
+        left = self.chunk_tokens
+        while self.pqueue and left > 0:
+            take = min(self.pqueue[0].prefill_remaining, left)
+            if take <= 0:
+                break
+            batch.append(self.pqueue.popleft())
+            takes.append(take)
+            left -= take
+        return batch, takes
+
+    def start_iteration(self, now: float) -> Optional[Tuple[float, IterCost]]:
+        if not self.alive:
+            self.busy = False
+            return None
+        self._admit(now)
+        batch, takes = self._form_chunk()
+        if not self.running and not batch:
+            self.busy = False
+            return None
+        self.p_current, self._p_takes = batch, takes
+        n_new = sum(takes)
+        n_ctx = sum(r.cached_len + r.computed_len for r in batch)
+        for r in batch:
+            r.phase = Phase.RUNNING_PREFILL
+            if r.t_prefill_start < 0:
+                r.t_prefill_start = now
+        # the clock must satisfy both phases' budgets: take the higher of
+        # the two per-phase selections (higher f never misses harder)
+        state = SystemState(
+            has_waiting=bool(self.waiting) or bool(self.pqueue), now_s=now
+        )
+        f = 0.0
+        if self.running:
+            f = self.controller.select(
+                state,
+                BatchInfo("decode", n_req=self.n_req, n_kv=self.n_kv),
+            )
+        if batch:
+            max_wait = max(now - r.arrival_s for r in batch)
+            f = max(f, self.controller.select(
+                state,
+                BatchInfo("prefill", n_tok=n_new, max_waiting_s=max_wait,
+                          n_cached=n_ctx),
+            ))
+        cost = self.backend.hybrid_iter(
+            self.running, self.n_req, self.n_kv, batch, takes,
+            n_new, n_ctx, f,
+        )
+        self._iter_cost, self._iter_f = cost, f
+        self.busy = True
+        self.energy.busy_s += cost.time_s
+        self.energy.busy_j += cost.energy_j
+        if self.record_trace:
+            self.energy.freq_trace.append(
+                (now, cost.f_effective, self.n_req + n_new)
+            )
+        if self.predictor is not None and self.running and not batch:
+            # pure-decode iterations are on-distribution for the decode
+            # model; mixed iterations are not recorded (their latency
+            # includes the piggybacked chunk)
+            self.predictor.record_decode(
+                f, self.n_req, self.n_kv, cost.time_s
+            )
+        return cost.time_s, cost
+
+    def finish_iteration(self, now: float) -> List[Request]:
+        """Advance both phases; returns finished *decode* requests.
+        Prompts completing prefill join this instance's decode queue
+        directly (no P->D transfer)."""
+        done = super().finish_iteration(now) if self.running else []
+        batch, takes = self.p_current, self._p_takes
+        self.p_current, self._p_takes = [], []
+        partial: List[Request] = []
+        for r, take in zip(batch, takes):
+            r.computed_len += take
+            if r.prefill_remaining <= 0:
+                r.t_first_token = now
+                if self.cache is not None and r.prompt_tokens:
+                    self.cache.unlock(self._locks.pop(r.rid, None))
+                    self.cache.insert(r.prompt_tokens, now)
+                self.enqueue(r)  # local decode join, no migration
+            else:
+                r.phase = Phase.QUEUED_PREFILL
+                partial.append(r)
+        self.pqueue.extendleft(reversed(partial))
+        return done
+
+    def fail(self) -> List[Request]:
+        p_lost = list(self.p_current) + list(self.pqueue)
+        if self.cache is not None:
+            for handle in self._locks.values():
+                self.cache.unlock(handle)
+            self._locks.clear()
+        self.p_current.clear()
+        self.pqueue.clear()
+        for r in p_lost:
+            r.restarts += 1
+        return super().fail() + p_lost

@@ -47,6 +47,9 @@ class RunMetrics:
     slo_ttft_s: float
     slo_itl_s: float
     duration_s: float = 0.0
+    # fraction of looked-up prompt tokens served by the radix prefix
+    # cache; None when no instance ran with a cache
+    prefix_hit_rate: Optional[float] = None
 
     # -- per-phase ----------------------------------------------------------
     def _done(self) -> List[Request]:
@@ -96,6 +99,9 @@ class RunMetrics:
 
     # -- presentation ---------------------------------------------------------
     def summary(self) -> Dict[str, float]:
+        extra = {}
+        if self.prefix_hit_rate is not None:
+            extra["prefix_hit_rate"] = round(self.prefix_hit_rate, 4)
         return {
             "n_requests": len(self.requests),
             "finished_frac": round(self.finished_frac(), 4),
@@ -111,6 +117,7 @@ class RunMetrics:
             "epot_mj": round(self.epot_j() * 1e3, 3),
             "throughput_tok_s": round(self.throughput_tok_s(), 1),
             "parked_s": round(self.parked_s_total(), 1),
+            **extra,
         }
 
     def cdf(self, metric: str, points: int = 200):

@@ -1,0 +1,210 @@
+"""Radix-tree prefix cache over prompt token ids (SGLang-style).
+
+Multi-turn and agentic traffic re-sends the conversation so far on every
+turn; the KV for that shared prefix is identical across turns (and across
+requests sharing a system prompt), so a prefill instance that kept it can
+skip recomputing it.  The cache is a radix tree: each edge holds a run of
+token ids, each node the virtual-clock time of its last use.  Lookups
+return the longest cached prefix; inserts splice new suffixes in,
+splitting edges at divergence points; eviction trims least-recently-used
+leaves until the token footprint fits the budget.
+
+The tree stores *token counts*, not real KV tensors — the serving
+simulator prices the skipped work through
+:meth:`~repro.core.hwmodel.HardwareModel.prefill_chunk_iter`'s
+``n_ctx`` argument, and :class:`~repro.serving.realengine.RealBackend`
+still runs the full real forward (token content must not depend on cache
+state).  A lookup never matches the *entire* query: the last prompt token
+must always be computed, because its logits produce the first output
+token.
+
+Locked tokens: a prefix a request is actively prefilling against cannot
+be evicted mid-flight; engines pin the path via :meth:`RadixCache.lock`
+at enqueue and release the returned handle when the request leaves
+prefill (completion or failure).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass
+class RadixNode:
+    """One edge+node: ``tokens`` is the edge label from the parent."""
+
+    tokens: Tuple[int, ...]
+    parent: Optional["RadixNode"] = None
+    children: Dict[int, "RadixNode"] = field(default_factory=dict)
+    last_access: float = 0.0
+    locks: int = 0  # in-flight prefills pinned on this path
+
+    @property
+    def is_leaf(self) -> bool:
+        return not self.children
+
+
+def _common_len(a: Sequence[int], b: Sequence[int]) -> int:
+    n = min(len(a), len(b))
+    i = 0
+    while i < n and a[i] == b[i]:
+        i += 1
+    return i
+
+
+class RadixCache:
+    """Prefix cache of one prefill instance, capacity in tokens."""
+
+    def __init__(self, capacity_tokens: int = 1 << 60):
+        self.capacity_tokens = int(capacity_tokens)
+        self.root = RadixNode(tokens=())
+        self.size_tokens = 0
+        # observability
+        self.hit_tokens = 0
+        self.lookup_tokens = 0
+        self.evicted_tokens = 0
+
+    # ------------------------------------------------------------------
+    # Queries
+    # ------------------------------------------------------------------
+    def _walk(self, tokens: Sequence[int]) -> Tuple[RadixNode, int]:
+        """Deepest node on ``tokens``' path and the matched length."""
+        node, matched = self.root, 0
+        while matched < len(tokens):
+            child = node.children.get(tokens[matched])
+            if child is None:
+                break
+            k = _common_len(child.tokens, tokens[matched:])
+            matched += k
+            if k < len(child.tokens):
+                break
+            node = child
+        return node, matched
+
+    def match_len(self, tokens: Optional[Sequence[int]]) -> int:
+        """Longest cached prefix of ``tokens`` — pure peek, no touch.
+
+        Capped at ``len(tokens) - 1``: a full match still computes the
+        final token (its logits are the first output).
+        """
+        if not tokens:
+            return 0
+        _, matched = self._walk(tokens)
+        return min(matched, len(tokens) - 1)
+
+    def lookup(self, tokens: Optional[Sequence[int]], now: float) -> int:
+        """Longest cached prefix; touches the path's recency."""
+        if not tokens:
+            return 0
+        node, matched = self._walk(tokens)
+        matched = min(matched, len(tokens) - 1)
+        self.lookup_tokens += len(tokens)
+        self.hit_tokens += matched
+        while node is not None:
+            node.last_access = now
+            node = node.parent
+        return matched
+
+    def lock(self, tokens: Optional[Sequence[int]]) -> Optional[RadixNode]:
+        """Pin the current match path of ``tokens``; returns the handle to
+        pass to :meth:`unlock`.  The handle pins the exact nodes matched
+        *now* — a later insert of the same tokens must not let another
+        request's unlock strip this pin (re-walking by tokens would)."""
+        if not tokens:
+            return None
+        node, _ = self._walk(tokens)
+        n = node
+        while n is not None:
+            n.locks += 1
+            n = n.parent
+        return node
+
+    def unlock(self, handle: Optional[RadixNode]) -> None:
+        """Release the pin taken by :meth:`lock`.  Edge splits preserve
+        the handle's ancestor chain (the split copies the lower node's
+        lock count to the inserted upper node), so decrementing from the
+        handle upward always releases exactly the pinned nodes."""
+        node = handle
+        while node is not None:
+            node.locks = max(0, node.locks - 1)
+            node = node.parent
+
+    # ------------------------------------------------------------------
+    # Insert / evict
+    # ------------------------------------------------------------------
+    def insert(self, tokens: Optional[Sequence[int]], now: float) -> int:
+        """Add ``tokens``' full path; returns newly cached token count."""
+        if not tokens:
+            return 0
+        node, pos = self.root, 0
+        added = 0
+        tokens = tuple(tokens)
+        while pos < len(tokens):
+            child = node.children.get(tokens[pos])
+            if child is None:
+                leaf = RadixNode(tokens[pos:], parent=node, last_access=now)
+                node.children[tokens[pos]] = leaf
+                added += len(leaf.tokens)
+                node = leaf
+                break
+            k = _common_len(child.tokens, tokens[pos:])
+            if k < len(child.tokens):
+                # split the edge at the divergence point
+                child = self._split(child, k)
+            node, pos = child, pos + k
+            node.last_access = now
+        self.size_tokens += added
+        self._evict_to_fit()
+        return added
+
+    def _split(self, node: RadixNode, k: int) -> RadixNode:
+        """Split ``node``'s edge after ``k`` tokens; returns the new
+        upper node (same subtree semantics, no size change)."""
+        parent = node.parent
+        upper = RadixNode(
+            node.tokens[:k], parent=parent,
+            last_access=node.last_access, locks=node.locks,
+        )
+        lower_tokens = node.tokens[k:]
+        node.tokens = lower_tokens
+        node.parent = upper
+        upper.children[lower_tokens[0]] = node
+        parent.children[upper.tokens[0]] = upper
+        return upper
+
+    def _evict_to_fit(self) -> None:
+        """Trim LRU leaves until the footprint fits.  One DFS collects
+        every evictable leaf into a heap; parents that *become* leaves
+        re-enter it — O(n log n) per over-capacity insert rather than a
+        whole-tree rescan per evicted leaf."""
+        if self.size_tokens <= self.capacity_tokens:
+            return
+        heap: List[Tuple[float, int, RadixNode]] = []
+        stack: List[RadixNode] = [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n is not self.root and n.is_leaf and n.locks == 0:
+                heapq.heappush(heap, (n.last_access, id(n), n))
+        while self.size_tokens > self.capacity_tokens and heap:
+            _, _, leaf = heapq.heappop(heap)
+            parent = leaf.parent
+            self._remove_leaf(leaf)
+            if parent is not self.root and parent.is_leaf \
+                    and parent.locks == 0:
+                heapq.heappush(heap, (parent.last_access, id(parent), parent))
+
+    def _remove_leaf(self, leaf: RadixNode) -> None:
+        self.size_tokens -= len(leaf.tokens)
+        self.evicted_tokens += len(leaf.tokens)
+        del leaf.parent.children[leaf.tokens[0]]
+
+    # ------------------------------------------------------------------
+    def hit_rate(self) -> float:
+        """Fraction of looked-up prompt tokens served from cache."""
+        return self.hit_tokens / self.lookup_tokens if self.lookup_tokens \
+            else 0.0
+
+    def reset_stats(self) -> None:
+        self.hit_tokens = self.lookup_tokens = self.evicted_tokens = 0

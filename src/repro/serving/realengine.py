@@ -75,26 +75,40 @@ class RealBackend(SimBackend):
     # ------------------------------------------------------------------
     # Prefill: real first token + cache stash
     # ------------------------------------------------------------------
+    def _real_prefill(self, r: Request) -> None:
+        toks = np.asarray(r.prompt_tokens, np.int32)
+        pad = _bucket(len(toks))
+        if pad > self.max_len:
+            raise ValueError(
+                f"prompt {len(toks)} exceeds cache capacity "
+                f"{self.max_len}"
+            )
+        buf = np.zeros((1, pad), np.int32)
+        buf[0, : len(toks)] = toks
+        logits, cache = self._prefill_jit(
+            self.params,
+            tokens=jnp.asarray(buf),
+            lengths=jnp.asarray([len(toks)], jnp.int32),
+        )
+        first = int(jnp.argmax(logits[0]))
+        r.output_tokens.append(first)
+        r.kv_handoff = cache  # migrates with the request (P -> D)
+
     def prefill_iter(self, reqs: List[Request], n_tok: int, f: float):
         for r in reqs:
-            toks = np.asarray(r.prompt_tokens, np.int32)
-            pad = _bucket(len(toks))
-            if pad > self.max_len:
-                raise ValueError(
-                    f"prompt {len(toks)} exceeds cache capacity "
-                    f"{self.max_len}"
-                )
-            buf = np.zeros((1, pad), np.int32)
-            buf[0, : len(toks)] = toks
-            logits, cache = self._prefill_jit(
-                self.params,
-                tokens=jnp.asarray(buf),
-                lengths=jnp.asarray([len(toks)], jnp.int32),
-            )
-            first = int(jnp.argmax(logits[0]))
-            r.output_tokens.append(first)
-            r.kv_handoff = cache  # migrates with the request (P -> D)
+            self._real_prefill(r)
         return super().prefill_iter(reqs, n_tok, f)
+
+    def prefill_chunk(self, reqs: List[Request], takes, n_new: int,
+                      n_ctx: int, f: float):
+        """Chunked scheduling over real compute: the virtual clock/energy
+        price each chunk, but the actual forward runs whole-prompt on the
+        *final* chunk (prefix-cache hits must not change token content —
+        the simulator's cache stores token counts, not real KV)."""
+        for r, take in zip(reqs, takes):
+            if take >= r.prefill_remaining:
+                self._real_prefill(r)
+        return super().prefill_chunk(reqs, takes, n_new, n_ctx, f)
 
     # ------------------------------------------------------------------
     # Decode: slot insert / batched step / release
@@ -117,22 +131,37 @@ class RealBackend(SimBackend):
         slot = self.slot_of.pop(req.rid)
         self.free.append(slot)
 
+    def _real_decode_step(self, reqs: List[Request]) -> None:
+        logits, self.cache = self._decode_jit(
+            self.params,
+            tokens=jnp.asarray(self.next_tok),
+            cache=self.cache,
+            lengths=jnp.asarray(self.pos),
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for r in reqs:
+            s = self.slot_of[r.rid]
+            r.output_tokens.append(int(nxt[s]))
+            self.next_tok[s] = nxt[s]
+            self.pos[s] += 1
+
     def decode_iter(self, reqs: List[Request], n_req: int, n_kv: int,
                     f: float):
         if reqs:
-            logits, self.cache = self._decode_jit(
-                self.params,
-                tokens=jnp.asarray(self.next_tok),
-                cache=self.cache,
-                lengths=jnp.asarray(self.pos),
-            )
-            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-            for r in reqs:
-                s = self.slot_of[r.rid]
-                r.output_tokens.append(int(nxt[s]))
-                self.next_tok[s] = nxt[s]
-                self.pos[s] += 1
+            self._real_decode_step(reqs)
         return super().decode_iter(reqs, n_req, n_kv, f)
+
+    def hybrid_iter(self, dec_reqs: List[Request], n_req: int, n_kv: int,
+                    pre_reqs: List[Request], takes, n_new: int,
+                    n_ctx: int, f: float):
+        if dec_reqs:
+            self._real_decode_step(dec_reqs)
+        for r, take in zip(pre_reqs, takes):
+            if take >= r.prefill_remaining:
+                self._real_prefill(r)
+        return super().hybrid_iter(
+            dec_reqs, n_req, n_kv, pre_reqs, takes, n_new, n_ctx, f
+        )
 
 
 def make_real_backend_factory(
@@ -146,7 +175,7 @@ def make_real_backend_factory(
     own slot state but shares the (read-only) weights."""
 
     def factory(kind: str, idx: int, hw: HardwareModel, seed: int):
-        if kind == "decode":
+        if kind in ("decode", "hybrid"):
             return RealBackend(
                 hw, cfg, params, slots=slots, max_len=max_len, seed=seed
             )

@@ -29,6 +29,10 @@ class Request:
     # total output tokens = decode_len + 1 (the first comes from prefill)
     kind: str = "conversation"  # workload tag (Azure trace: conversation/code)
 
+    # multi-turn trace identity (prefix caching); -1 == standalone request
+    conv_id: int = -1
+    turn: int = 0
+
     # lifecycle
     phase: Phase = Phase.QUEUED_PREFILL
     prefill_instance: int = -1
@@ -40,6 +44,10 @@ class Request:
     t_first_token: float = -1.0  # = prefill completion
     t_join_decode: float = -1.0
     t_finish: float = -1.0
+
+    # prefill progress (chunked prefill + prefix cache)
+    cached_len: int = 0  # prompt tokens served from the radix prefix cache
+    computed_len: int = 0  # prompt tokens prefilled so far (beyond cache)
 
     # decode progress
     tokens_out: int = 0  # decode tokens generated so far
@@ -72,3 +80,9 @@ class Request:
     @property
     def remaining(self) -> int:
         return self.decode_len - self.tokens_out
+
+    @property
+    def prefill_remaining(self) -> int:
+        """Prompt tokens still to compute (cache hits never cover the last
+        token — its logits produce the first output)."""
+        return self.prompt_len - self.cached_len - self.computed_len

@@ -211,6 +211,74 @@ def step_load(
     return reqs
 
 
+def multiturn_workload(
+    n_conversations: int,
+    duration_s: float,
+    seed: int = 0,
+    n_system_prompts: int = 4,
+    system_len: LengthDist = LengthDist(1200.0, 400.0, lo=64, hi=4_096),
+    user_len: LengthDist = LengthDist(120.0, 90.0, hi=2_048),
+    decode: LengthDist = LengthDist(160.0, 120.0, hi=1_024),
+    turns_mean: float = 6.0,
+    think_mean_s: float = 6.0,
+    vocab_size: int = 50_000,
+    max_prompt: int = 16_384,
+) -> List[Request]:
+    """Multi-turn conversations with shared system prompts (azure-like
+    agentic/chat traffic) — the prefix-cache stress workload.
+
+    Every conversation belongs to one of ``n_system_prompts`` "apps" whose
+    system prompt (a concrete token sequence) is shared across all of that
+    app's conversations; each turn re-sends the conversation so far
+    (system + alternating user/assistant history) plus a fresh user
+    message.  The assistant tokens appended to the history are synthetic
+    (the simulator's decode emits no ids) but *consistent*: turn ``k+1``'s
+    prompt is a strict extension of turn ``k``'s prompt + its output
+    length, so a radix cache sees exactly the reuse a real serving stack
+    would.  Turn arrivals are spaced by exponential think time; turn
+    counts are geometric with mean ``turns_mean``.
+    """
+    rng = np.random.default_rng(seed)
+    systems = [
+        rng.integers(0, vocab_size, size=int(n)).tolist()
+        for n in system_len.sample(rng, n_system_prompts)
+    ]
+    reqs: List[Request] = []
+    starts = np.sort(rng.uniform(0.0, duration_s, n_conversations))
+    for conv_id, t0 in enumerate(starts):
+        app = int(rng.integers(0, n_system_prompts))
+        history = list(systems[app])
+        n_turns = 1 + int(rng.geometric(1.0 / max(1.0, turns_mean)) - 1)
+        t = float(t0)
+        for turn in range(n_turns):
+            u = int(user_len.sample(rng, 1)[0])
+            history = history + rng.integers(0, vocab_size, size=u).tolist()
+            if len(history) > max_prompt or t >= duration_s:
+                break
+            d = int(decode.sample(rng, 1)[0])
+            reqs.append(
+                Request(
+                    rid=0,
+                    arrival_s=t,
+                    prompt_len=len(history),
+                    decode_len=d,
+                    kind=f"mt-app{app}",
+                    conv_id=conv_id,
+                    turn=turn,
+                    prompt_tokens=list(history),
+                )
+            )
+            # the next turn extends the history by this turn's output
+            history = history + rng.integers(
+                0, vocab_size, size=d + 1
+            ).tolist()
+            t += float(rng.exponential(think_mean_s))
+    reqs.sort(key=lambda r: r.arrival_s)
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
+
+
 def attach_tokens(
     reqs: List[Request], vocab_size: int, seed: int = 0
 ) -> List[Request]:

@@ -1,0 +1,82 @@
+"""Golden regression: pin the PR-1 EcoScale headline numbers.
+
+``benchmarks/fig_hetero_autoscale.py --smoke`` is the scenario CI runs;
+its headline results (energy saving vs the provision-for-peak static
+fleets, at no SLO-attainment loss) are the contract router/controller
+refactors must not silently regress.  Tolerances are wide enough for
+cross-platform float/BLAS drift but tight enough to catch a real
+regression (the saving collapsing toward zero, attainment dropping).
+"""
+import pytest
+
+
+@pytest.fixture(scope="module")
+def rows(monkeypatch_module, tmp_path_factory):
+    from benchmarks import fig_hetero_autoscale
+
+    out = tmp_path_factory.mktemp("golden")
+    return fig_hetero_autoscale.run(out_dir=str(out))
+
+
+@pytest.fixture(scope="module")
+def monkeypatch_module():
+    mp = pytest.MonkeyPatch()
+    mp.setenv("BENCH_SMOKE", "1")
+    yield mp
+    mp.undo()
+
+
+def _row(rows, policy):
+    return next(r for r in rows if r["policy"] == policy)
+
+
+def test_all_arms_finish_everything(rows):
+    for policy in ("ecoscale", "static-gh200-max", "static-a100-max"):
+        assert _row(rows, policy)["finished_frac"] == 1.0
+
+
+def test_energy_saving_vs_gh200_max(rows):
+    """Golden: −51% energy vs static GH200-max (captured 0.5075)."""
+    d = _row(rows, "delta_vs_static-gh200-max")
+    assert d["energy_saving_frac"] == pytest.approx(0.5075, abs=0.08)
+
+
+def test_energy_saving_vs_a100_max(rows):
+    """Golden: −32% energy vs static A100-max (captured 0.3159)."""
+    d = _row(rows, "delta_vs_static-a100-max")
+    assert d["energy_saving_frac"] == pytest.approx(0.3159, abs=0.08)
+
+
+def test_slo_attainment_not_sacrificed(rows):
+    """EcoScale's saving must come at equal-or-better attainment."""
+    eco = _row(rows, "ecoscale")
+    assert eco["ttft_attain"] >= 0.97
+    assert eco["itl_attain"] >= 0.97
+    for base in ("delta_vs_static-gh200-max", "delta_vs_static-a100-max"):
+        d = _row(rows, base)
+        assert d["ttft_attain_delta"] >= -0.03
+        assert d["itl_attain_delta"] >= -0.03
+
+
+def test_autoscaler_actually_scaled(rows):
+    """The saving is real parking, not a fluke: scale events happened
+    and instances spent meaningful time parked."""
+    eco = _row(rows, "ecoscale")
+    assert eco["scale_events"] > 0
+    assert eco["parked_s"] > 0.0
+
+
+def test_prefix_cache_acceptance(monkeypatch_module, tmp_path_factory):
+    """Acceptance bar for the chunked-prefill + radix-cache PR: ≥15%
+    lower energy/token on the multi-turn trace vs the no-cache
+    whole-prompt baseline, at equal-or-better TTFT/ITL attainment.
+    (Captured smoke run: 52.6% saving at +0.59 TTFT attainment.)"""
+    from benchmarks import fig_prefix_cache
+
+    out = tmp_path_factory.mktemp("prefix")
+    rows = fig_prefix_cache.run(out_dir=str(out))
+    d = _row(rows, "delta_vs_base[chunked+radix-cache]")
+    assert d["epot_saving_frac"] >= 0.15
+    assert d["ttft_attain_delta"] >= 0.0
+    assert d["itl_attain_delta"] >= 0.0
+    assert d["prefix_hit_rate"] >= 0.5

@@ -1,0 +1,251 @@
+"""Serving-invariant suite: properties every cluster run must satisfy.
+
+Three invariants, checked over randomized workloads / fleets / schedulers
+(property-based via hypothesis when installed; an explicit grid of the
+same scenarios otherwise, so the suite never silently thins out):
+
+* **Energy conservation** — the sum of per-iteration ``IterCost.energy_j``
+  values the backends actually returned equals each instance's
+  ``InstanceEnergy.busy_j`` total (no iteration's joules lost or double
+  counted by the control plane).
+* **Virtual-clock monotonicity** — no event is ever scheduled in the
+  past, and every request's lifecycle timestamps are ordered.
+* **No request lost or duplicated** — under fault injection and
+  autoscale park/wake, every request finishes exactly once with exactly
+  its decode-length tokens.
+"""
+import pytest
+from _hyp import given, settings, st
+
+from repro.configs.registry import REGISTRY
+from repro.core.power import A100
+from repro.serving import (
+    AutoScaleConfig,
+    ClusterConfig,
+    PDCluster,
+    SHAREGPT,
+    SimBackend,
+    multiturn_workload,
+    poisson_workload,
+)
+from repro.serving.cluster import build_predictor
+
+MODEL = REGISTRY["llama-3.1-8b"]
+
+_PRED = None
+
+
+def _pred():
+    global _PRED
+    if _PRED is None:
+        _PRED = build_predictor(
+            MODEL, A100, A100.freq_levels_2, kv_cap=400_000
+        )
+    return _PRED
+
+
+class TallyBackend(SimBackend):
+    """SimBackend that independently tallies every IterCost it hands out."""
+
+    def __init__(self, *a, **k):
+        super().__init__(*a, **k)
+        self.energy_sum = 0.0
+        self.time_sum = 0.0
+
+    def _tally(self, c):
+        self.energy_sum += c.energy_j
+        self.time_sum += c.time_s
+        return c
+
+    def prefill_iter(self, *a, **k):
+        return self._tally(super().prefill_iter(*a, **k))
+
+    def prefill_chunk(self, *a, **k):
+        return self._tally(super().prefill_chunk(*a, **k))
+
+    def decode_iter(self, *a, **k):
+        return self._tally(super().decode_iter(*a, **k))
+
+    def hybrid_iter(self, *a, **k):
+        return self._tally(super().hybrid_iter(*a, **k))
+
+
+class ProbeCluster(PDCluster):
+    """Asserts no event is scheduled before the current virtual clock."""
+
+    def _push(self, t, kind, data):
+        assert t >= self.now - 1e-9, (
+            f"event kind={kind} scheduled in the past: {t} < {self.now}"
+        )
+        super()._push(t, kind, data)
+
+
+def _check_invariants(
+    seed, n_p, n_d, chunked, cache, n_hybrid, inject_fault, autoscale
+):
+    backends = []
+
+    def factory(kind, idx, hw, bseed):
+        b = TallyBackend(hw, noise_sigma=0.02, seed=bseed)
+        backends.append(b)
+        return b
+
+    if cache:
+        reqs = multiturn_workload(
+            12, 20.0, seed=seed, think_mean_s=2.0, turns_mean=4.0,
+            max_prompt=6_000,
+        )
+    else:
+        reqs = poisson_workload(SHAREGPT, 5.0, 10.0, seed=seed)
+    cfg = ClusterConfig(
+        model=MODEL, chip=A100, n_prefill=n_p, n_decode=n_d,
+        slo_ttft_s=1.0, slo_itl_s=0.06,
+        policy="voltana", predictor=_pred(), kv_capacity_tokens=400_000,
+        online_adapt=False, seed=seed,
+        chunked_prefill=chunked,
+        prefill_chunk_tokens=2_048 if chunked else None,
+        prefix_cache=cache,
+        n_hybrid=n_hybrid,
+        autoscale=(
+            AutoScaleConfig(interval_s=1.0, cooldown_s=2.0,
+                            park_holdoff_s=4.0)
+            if autoscale else None
+        ),
+        backend_factory=factory,
+    )
+    cl = ProbeCluster(cfg)
+    if inject_fault and n_d >= 2:
+        cl.schedule_failure(3.0, "decode", 0)
+    if inject_fault and n_p >= 2:
+        cl.schedule_failure(4.0, "prefill", 0)
+    m = cl.run(reqs)
+
+    # -- no request lost or duplicated ----------------------------------
+    assert m.finished_frac() == 1.0
+    assert len({r.rid for r in reqs}) == len(reqs)
+    for r in reqs:
+        assert r.tokens_out == r.decode_len, r
+        assert r.prefill_remaining == 0
+
+    # -- virtual-clock monotonicity (lifecycle ordering) ----------------
+    for r in reqs:
+        assert r.arrival_s <= r.t_prefill_start <= r.t_first_token, r
+        assert r.t_first_token <= r.t_join_decode <= r.t_finish, r
+        assert r.t_finish <= m.duration_s + 1e-9
+    # (ProbeCluster additionally asserted every event push was >= now)
+
+    # -- energy conservation --------------------------------------------
+    engines = cl.prefill + cl.decode + cl.hybrid
+    assert len(backends) == len(engines)
+    for eng in engines:
+        tallied = eng.backend.energy_sum
+        assert eng.energy.busy_j == pytest.approx(tallied, rel=1e-9), (
+            f"{eng.energy.name}: busy_j {eng.energy.busy_j} != "
+            f"backend-tallied {tallied}"
+        )
+        assert eng.energy.busy_s == pytest.approx(
+            eng.backend.time_sum, rel=1e-9
+        )
+        # idle accounting can never go negative (parks included)
+        assert eng.energy.idle_j >= -1e-9
+    return m
+
+
+# explicit grid — always runs, hypothesis or not
+_GRID = [
+    # seed n_p n_d chunked cache hybrid fault autoscale
+    (0, 2, 2, True, False, 0, False, False),
+    (1, 1, 1, False, False, 0, False, False),
+    (2, 2, 2, True, True, 0, False, False),
+    (3, 2, 2, True, False, 0, True, False),
+    (4, 2, 2, True, False, 0, False, True),
+    (5, 2, 2, True, True, 1, True, False),
+    (6, 1, 2, True, True, 0, True, True),
+]
+
+
+@pytest.mark.parametrize(
+    "seed,n_p,n_d,chunked,cache,n_hybrid,fault,autoscale", _GRID
+)
+def test_invariants_grid(
+    seed, n_p, n_d, chunked, cache, n_hybrid, fault, autoscale
+):
+    _check_invariants(
+        seed, n_p, n_d, chunked, cache, n_hybrid, fault, autoscale
+    )
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    n_p=st.integers(1, 3),
+    n_d=st.integers(1, 3),
+    chunked=st.booleans(),
+    cache=st.booleans(),
+    n_hybrid=st.integers(0, 1),
+    fault=st.booleans(),
+    autoscale=st.booleans(),
+)
+@settings(max_examples=12, deadline=None)
+def test_invariants_property(
+    seed, n_p, n_d, chunked, cache, n_hybrid, fault, autoscale
+):
+    """Property-based sweep (CI: hypothesis installed via the [dev]
+    extra; shimmed to a skip without it — the grid above still runs)."""
+    _check_invariants(
+        seed, n_p, n_d, chunked, cache, n_hybrid, fault, autoscale
+    )
+
+
+def test_fault_plus_park_no_loss():
+    """The composition the autoscaler docstring promises: a parked
+    instance that is killed stays dead, never re-admits, and loses no
+    requests for good."""
+    m = _check_invariants(
+        seed=11, n_p=2, n_d=3, chunked=True, cache=False, n_hybrid=0,
+        inject_fault=True, autoscale=True,
+    )
+    assert m.finished_frac() == 1.0
+
+
+# -- per-instance RNG decorrelation (satellite fix) -------------------------
+
+
+def test_instance_noise_streams_differ():
+    """Every instance must draw its own measurement-noise stream: with
+    the old affine seeding (seed*101+idx vs seed*211+idx), seed=0 gave
+    prefill-i and decode-i identical streams."""
+    cfg = ClusterConfig(
+        model=MODEL, chip=A100, n_prefill=2, n_decode=2,
+        policy="voltana", predictor=_pred(), kv_capacity_tokens=400_000,
+        online_adapt=False, seed=0,
+    )
+    cl = PDCluster(cfg)
+    engines = cl.prefill + cl.decode
+    draws = {
+        e.energy.name: [e.backend._noise() for _ in range(8)]
+        for e in engines
+    }
+    names = list(draws)
+    for i in range(len(names)):
+        for j in range(i + 1, len(names)):
+            assert draws[names[i]] != draws[names[j]], (
+                f"{names[i]} and {names[j]} share a noise stream"
+            )
+
+
+def test_instance_seeds_reproducible():
+    """Same cluster seed -> same streams (determinism preserved)."""
+    def streams(run_seed):
+        cfg = ClusterConfig(
+            model=MODEL, chip=A100, n_prefill=1, n_decode=1,
+            policy="voltana", predictor=_pred(),
+            kv_capacity_tokens=400_000, online_adapt=False, seed=run_seed,
+        )
+        cl = PDCluster(cfg)
+        return [
+            [e.backend._noise() for _ in range(4)]
+            for e in cl.prefill + cl.decode
+        ]
+
+    assert streams(7) == streams(7)
+    assert streams(7) != streams(8)

@@ -1,0 +1,268 @@
+"""Chunked prefill + radix prefix cache + cache-affinity routing."""
+import numpy as np
+import pytest
+
+from repro.configs.registry import REGISTRY
+from repro.core.power import A100
+from repro.serving import (
+    ClusterConfig,
+    PDCluster,
+    RadixCache,
+    multiturn_workload,
+)
+from repro.serving.cluster import HYBRID_OFF, build_predictor
+from repro.serving.request import Request
+from repro.serving.workload import DatasetDist, LengthDist, poisson_workload
+
+MODEL = REGISTRY["llama-3.1-8b"]
+
+
+@pytest.fixture(scope="module")
+def pred():
+    return build_predictor(MODEL, A100, A100.freq_levels_2, kv_cap=400_000)
+
+
+def _cfg(pred, **kw):
+    base = dict(
+        model=MODEL, chip=A100, n_prefill=2, n_decode=2,
+        slo_ttft_s=1.0, slo_itl_s=0.06, policy="voltana",
+        predictor=pred, kv_capacity_tokens=400_000,
+        online_adapt=False, seed=3,
+    )
+    base.update(kw)
+    return ClusterConfig(**base)
+
+
+# -- radix tree unit behavior ------------------------------------------------
+
+
+def test_radix_match_insert_split():
+    c = RadixCache()
+    assert c.match_len([1, 2, 3]) == 0
+    c.insert([1, 2, 3, 4], now=0.0)
+    assert c.size_tokens == 4
+    # full-query match is capped at len-1 (last token must be computed)
+    assert c.match_len([1, 2, 3, 4]) == 3
+    assert c.match_len([1, 2, 3, 4, 5]) == 4
+    assert c.match_len([1, 2, 9]) == 2
+    # divergence splits the edge; shared prefix stored once
+    c.insert([1, 2, 9, 9], now=1.0)
+    assert c.size_tokens == 6
+    assert c.match_len([1, 2, 9, 9, 7]) == 4
+
+
+def test_radix_lru_eviction_and_locks():
+    c = RadixCache(capacity_tokens=6)
+    c.insert([1, 2, 3], now=0.0)
+    c.insert([7, 8, 9], now=1.0)
+    assert c.size_tokens == 6
+    c.lookup([1, 2, 3], now=2.0)  # refresh [1,2,3]
+    c.insert([4, 5, 6], now=3.0)  # evicts LRU leaf [7,8,9]
+    assert c.size_tokens <= 6
+    assert c.match_len([7, 8, 9]) == 0
+    assert c.match_len([1, 2, 3, 0]) == 3
+    # a locked path survives eviction pressure
+    c2 = RadixCache(capacity_tokens=3)
+    c2.insert([1, 2, 3], now=0.0)
+    h = c2.lock([1, 2, 3])
+    c2.insert([5, 6, 7], now=2.0)  # over capacity, but [1,2,3] is pinned
+    assert c2.match_len([1, 2, 3, 0]) == 3
+    c2.unlock(h)
+
+
+def test_radix_lock_handles_survive_interleaved_insert():
+    """Two cold requests with identical prompts: the first completes
+    (unlock + insert) before the second unlocks.  A token-re-walk unlock
+    would then strip a *third* request's pin on the freshly inserted
+    path; handle-based unlock releases only the nodes it pinned."""
+    c = RadixCache(capacity_tokens=8)
+    prompt = [1, 2, 3, 4, 5, 6, 7, 8]
+    ha = c.lock(prompt)  # A: cold, pins only the root
+    hb = c.lock(prompt)  # B: cold, pins only the root
+    c.unlock(ha)
+    c.insert(prompt, now=1.0)  # A completes
+    hc = c.lock(prompt)  # C: pins the now-inserted path
+    c.unlock(hb)  # B completes — must not touch C's pins
+    c.insert([9, 10, 11, 12, 13, 14, 15, 16], now=2.0)  # eviction pressure
+    assert c.match_len(prompt + [0]) == 8, "pinned prefix was evicted"
+    c.unlock(hc)
+
+
+# -- chunked prefill ---------------------------------------------------------
+
+
+def test_oversized_prompt_respects_chunk_budget(pred):
+    """The PR-1 bug class: a prompt larger than the batch budget used to
+    be admitted whole.  Chunked prefill must cap every iteration."""
+    big = DatasetDist(
+        "big",
+        prefill=LengthDist(20_000.0, 1.0, hi=20_000),
+        decode=LengthDist(8.0, 2.0, hi=16),
+    )
+    reqs = poisson_workload(big, 0.5, 6.0, seed=2)
+    chunk = 2_048
+    cfg = _cfg(pred, prefill_chunk_tokens=chunk, record_traces=True)
+    cl = PDCluster(cfg)
+    m = cl.run(reqs)
+    assert m.finished_frac() == 1.0
+    iters = [n for e in cl.prefill for (_, _, n) in e.energy.freq_trace]
+    assert iters and max(iters) <= chunk
+
+    # legacy mode: the same oversized prompt bypasses the budget
+    cfg2 = _cfg(pred, chunked_prefill=False, record_traces=True)
+    cl2 = PDCluster(cfg2)
+    cl2.run(reqs)
+    iters2 = [n for e in cl2.prefill for (_, _, n) in e.energy.freq_trace]
+    assert max(iters2) > cfg2.prefill_batch_tokens
+
+
+# -- multi-turn workload -----------------------------------------------------
+
+
+def test_multiturn_prompts_are_prefix_extensions():
+    reqs = multiturn_workload(20, 60.0, seed=5)
+    by_conv = {}
+    for r in reqs:
+        by_conv.setdefault(r.conv_id, []).append(r)
+    multi = [v for v in by_conv.values() if len(v) > 1]
+    assert multi, "workload produced no multi-turn conversations"
+    for turns in multi:
+        turns.sort(key=lambda r: r.turn)
+        for a, b in zip(turns, turns[1:]):
+            assert b.arrival_s > a.arrival_s
+            assert b.prompt_len > a.prompt_len
+            assert b.prompt_tokens[: a.prompt_len] == a.prompt_tokens
+    # conversations of the same app share the system prompt
+    by_app = {}
+    for r in reqs:
+        if r.turn == 0:
+            by_app.setdefault(r.kind, []).append(r)
+    shared = [v for v in by_app.values() if len(v) > 1]
+    assert shared
+    for group in shared:
+        a, b = group[0], group[1]
+        n = min(a.prompt_len, b.prompt_len)
+        common = 0
+        while common < n and a.prompt_tokens[common] == b.prompt_tokens[common]:
+            common += 1
+        assert common >= 64  # at least the system prompt's floor
+
+
+# -- prefix cache end-to-end -------------------------------------------------
+
+
+def test_cache_affinity_keeps_conversations_together(pred):
+    reqs = multiturn_workload(30, 90.0, seed=9, think_mean_s=3.0)
+    cfg = _cfg(pred, prefix_cache=True)
+    cl = PDCluster(cfg)
+    m = cl.run(reqs)
+    assert m.finished_frac() == 1.0
+    assert m.prefix_hit_rate is not None and m.prefix_hit_rate > 0.5
+    # follow-up turns should land where the conversation's tree lives
+    by_conv = {}
+    for r in reqs:
+        by_conv.setdefault(r.conv_id, []).append(r)
+    stay = moved = 0
+    for turns in by_conv.values():
+        turns.sort(key=lambda r: r.turn)
+        for a, b in zip(turns, turns[1:]):
+            if b.prefill_instance == a.prefill_instance:
+                stay += 1
+            else:
+                moved += 1
+    assert stay > 3 * max(1, moved)
+    # and cache hits must actually shorten prefill: non-first turns saw
+    # most of their prompt served from cache
+    later = [r for r in reqs if r.turn > 0]
+    assert later
+    frac = np.mean([r.cached_len / r.prompt_len for r in later])
+    assert frac > 0.6
+
+
+def test_cache_saves_energy_at_same_slo(pred):
+    reqs = multiturn_workload(30, 90.0, seed=10, think_mean_s=3.0)
+    m_cache = PDCluster(_cfg(pred, prefix_cache=True)).run(reqs)
+    m_plain = PDCluster(_cfg(pred)).run(reqs)
+    assert m_cache.finished_frac() == m_plain.finished_frac() == 1.0
+    assert m_cache.ttft_attainment() >= m_plain.ttft_attainment() - 1e-9
+    assert m_cache.itl_attainment() >= m_plain.itl_attainment() - 0.02
+    assert m_cache.energy_j() < m_plain.energy_j()
+
+
+# -- hybrid instances --------------------------------------------------------
+
+
+def test_hybrid_instance_serves_both_phases(pred):
+    reqs = multiturn_workload(16, 40.0, seed=12, think_mean_s=2.0,
+                              max_prompt=6_000)
+    cfg = _cfg(pred, n_prefill=1, n_decode=1, n_hybrid=1,
+               prefix_cache=True)
+    cl = PDCluster(cfg)
+    m = cl.run(reqs)
+    assert m.finished_frac() == 1.0
+    hybrid_prefills = [
+        r for r in reqs if r.prefill_instance >= HYBRID_OFF
+    ]
+    assert hybrid_prefills, "router never placed a prompt on the hybrid"
+    # locally prefilled prompts decode in place (no KV migration)
+    for r in hybrid_prefills:
+        assert r.decode_instance == r.prefill_instance
+    h = cl.hybrid[0]
+    assert h.energy.busy_j > 0.0
+
+
+def test_hybrid_with_hetero_prefill_fleet(pred):
+    """Regression: hybrids must be routable when the hetero prefill
+    router (not the cache-affinity one) owns placement."""
+    from repro.core.power import GH200
+    from repro.serving import InstanceSpec
+
+    reqs = multiturn_workload(8, 20.0, seed=14, max_prompt=6_000)
+    cfg = _cfg(
+        pred, n_hybrid=1, prefix_cache=False,
+        prefill_fleet=[InstanceSpec(A100), InstanceSpec(GH200)],
+        decode_fleet=[InstanceSpec(A100), InstanceSpec(A100)],
+    )
+    m = PDCluster(cfg).run(reqs)
+    assert m.finished_frac() == 1.0
+
+
+def test_hybrid_failure_recovers(pred):
+    """Regression: schedule_failure(phase='hybrid') must kill the hybrid
+    (not prefill) and re-queue its in-flight work losslessly."""
+    reqs = multiturn_workload(16, 30.0, seed=15, think_mean_s=2.0,
+                              max_prompt=6_000)
+    cfg = _cfg(pred, n_prefill=1, n_decode=1, n_hybrid=1,
+               prefix_cache=True)
+    cl = PDCluster(cfg)
+    cl.schedule_failure(6.0, "hybrid", 0)
+    m = cl.run(reqs)
+    assert m.finished_frac() == 1.0
+    assert not cl.hybrid[0].alive
+    assert all(e.alive for e in cl.prefill)
+
+
+# -- EcoPred (new-tokens, cached-tokens) features ----------------------------
+
+
+def test_ecopred_learns_cached_context_dimension(pred):
+    """Partial-prefill predictions must track the chunk cost model, and a
+    chunk against cached context must be predicted cheaper than cold
+    prefill of the whole (ctx + new) prompt."""
+    from repro.core.hwmodel import HardwareModel
+
+    hw = HardwareModel(MODEL, A100)
+    rng = np.random.default_rng(3)
+    n_new = rng.integers(64, 8_192, 200)
+    n_ctx = rng.integers(0, 16_384, 200)
+    f = rng.choice(A100.freq_levels_2, 200)
+    true = np.array([
+        hw.prefill_chunk_time(int(n), int(c), float(ff))
+        for n, c, ff in zip(n_new, n_ctx, f)
+    ])
+    mae = np.abs(pred.predict_prefill(f, n_new, n_ctx) - true).mean()
+    assert mae / true.mean() < 0.10
+
+    t_hit = float(pred.predict_prefill(1410.0, 512, 7_500)[0])
+    t_cold = float(pred.predict_prefill(1410.0, 8_012, 0)[0])
+    assert t_hit < 0.5 * t_cold

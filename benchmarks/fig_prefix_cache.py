@@ -65,6 +65,10 @@ def run(out_dir=None):
         policy="voltana", chunked_prefill=False, prefix_cache=False,
     )
     rows.append(base_row)
+    # snapshot base scalars NOW: RunMetrics aliases the Request objects,
+    # which the next arm resets and re-runs
+    b_epot, b_energy = base.epot_j(), base.energy_j()
+    b_ttft, b_itl = base.ttft_attainment(), base.itl_attainment()
     for label, kw in [
         ("chunked", dict(chunked_prefill=True, prefix_cache=False)),
         ("chunked+radix-cache", dict(chunked_prefill=True,
@@ -75,28 +79,19 @@ def run(out_dir=None):
         rows.append({
             "policy": f"delta_vs_base[{label}]",
             "model": MODEL_NAME,
-            "epot_saving_frac": round(
-                1.0 - m.epot_j() / base.epot_j(), 4
-            ),
-            "energy_saving_frac": round(
-                1.0 - m.energy_j() / base.energy_j(), 4
-            ),
-            "ttft_attain_delta": round(
-                m.ttft_attainment() - base.ttft_attainment(), 4
-            ),
-            "itl_attain_delta": round(
-                m.itl_attainment() - base.itl_attainment(), 4
-            ),
+            "epot_saving_frac": round(1.0 - m.epot_j() / b_epot, 4),
+            "energy_saving_frac": round(1.0 - m.energy_j() / b_energy, 4),
+            "ttft_attain_delta": round(m.ttft_attainment() - b_ttft, 4),
+            "itl_attain_delta": round(m.itl_attainment() - b_itl, 4),
             "prefix_hit_rate": row.get("prefix_hit_rate", 0.0),
         })
         print(
             f"  {label:22s} vs whole-prompt: "
             f"energy/tok {m.epot_j()*1e3:8.2f} mJ vs "
-            f"{base.epot_j()*1e3:8.2f} mJ "
-            f"({100 * (1 - m.epot_j() / base.epot_j()):+.1f}%)  "
-            f"ttft {m.ttft_attainment():.3f} vs "
-            f"{base.ttft_attainment():.3f}  "
-            f"itl {m.itl_attainment():.3f} vs {base.itl_attainment():.3f}  "
+            f"{b_epot*1e3:8.2f} mJ "
+            f"({100 * (1 - m.epot_j() / b_epot):+.1f}%)  "
+            f"ttft {m.ttft_attainment():.3f} vs {b_ttft:.3f}  "
+            f"itl {m.itl_attainment():.3f} vs {b_itl:.3f}  "
             f"hit {row.get('prefix_hit_rate', 0.0):.2f}"
         )
 

@@ -38,6 +38,7 @@ MODULES = [
     ("fig34_cdfs", "Fig.34   TTFT/ITL CDFs at low/high RPS"),
     ("fig_hetero_autoscale", "EcoScale hetero fleet + autoscale vs static"),
     ("fig_prefix_cache", "Chunked prefill + radix prefix cache (multi-turn)"),
+    ("fig_slo_tiers", "Multi-tenant SLO tiers vs single-tier baseline"),
     ("roofline", "§Roofline table from dry-run records"),
     ("perf_iterations", "§Perf    hillclimb log from perf records"),
 ]
@@ -46,9 +47,10 @@ QUICK = {"fig1_5_ucurve", "fig4_itl_sensitivity", "fig6_staircase",
          "fig13_state_space", "fig20_control_interval", "roofline"}
 
 # CI smoke: fast analytic sanity + the EcoScale serving scenario + the
-# prefix-cache scenario (both read BENCH_SMOKE=1 and shrink their traces)
+# prefix-cache + SLO-tier scenarios (all read BENCH_SMOKE=1 and shrink
+# their traces)
 SMOKE = {"fig1_5_ucurve", "fig6_staircase", "fig_hetero_autoscale",
-         "fig_prefix_cache"}
+         "fig_prefix_cache", "fig_slo_tiers"}
 
 
 def main() -> int:

@@ -39,6 +39,13 @@ class BatchInfo:
     n_kv: int = 0  # decode: resident KV tokens
     max_waiting_s: float = 0.0  # prefill: max queue wait within this batch
     n_cached: int = 0  # prefill: resident prefix tokens (cache + chunks)
+    # SLO-tier overrides (None = the controller's global SLOs, the exact
+    # pre-tier behavior).  When tiers are resolved the engine passes the
+    # *tightest binding deadline actually present in the batch*:
+    # prefill: min over the batch of (deadline − now); decode: min ITL
+    # target over the running requests.
+    budget_s: Optional[float] = None  # prefill: tightest remaining budget
+    itl_slo_s: Optional[float] = None  # decode: binding ITL target
 
 
 @dataclass
@@ -47,6 +54,11 @@ class SystemState:
 
     has_waiting: bool = False
     now_s: float = 0.0
+    # tier-aware refinement of the step-1 queue check: None = legacy
+    # (any waiting request boosts); with tiers resolved, only waiting
+    # work whose tier sets ``boosts_queue`` forces max(F) — a backlog of
+    # pure batch-tier prompts paces against its own lax deadlines instead.
+    has_urgent_waiting: Optional[bool] = None
 
 
 class FreqController(Protocol):
@@ -83,7 +95,11 @@ class EcoFreq:
 
     def budget(self, batch: BatchInfo) -> float:
         if batch.phase == "prefill":
+            if batch.budget_s is not None:  # tiered: tightest deadline
+                return batch.budget_s * self.slo_margin
             return (self.slo_ttft_s - batch.max_waiting_s) * self.slo_margin
+        if batch.itl_slo_s is not None:  # tiered: binding ITL in the batch
+            return batch.itl_slo_s * self.slo_margin
         return self.slo_itl_s * self.slo_margin
 
     def predict(self, f, batch: BatchInfo) -> np.ndarray:
@@ -94,8 +110,14 @@ class EcoFreq:
         return t + self.latency_bias_s
 
     def select(self, state: SystemState, batch: BatchInfo) -> float:
-        # step 1 — queue check: clear backlogged requests timely
-        if state.has_waiting:
+        # step 1 — queue check: clear backlogged requests timely (tiered:
+        # only urgent-tier backlog boosts; batch-tier backlog paces EDF)
+        boost = (
+            state.has_urgent_waiting
+            if state.has_urgent_waiting is not None
+            else state.has_waiting
+        )
+        if boost:
             return self.f_max
         # step 2 — phase-adjusted SLO budget
         s = self.budget(batch)

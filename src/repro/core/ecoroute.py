@@ -47,6 +47,9 @@ class InstanceView:
     latency_bias_s: float = 0.0  # straggler signal from EcoPred residuals
     busy_remaining_s: float = 0.0  # in-flight batch time left (prefill)
     cached_len: int = 0  # radix-cache prefix match for the request (prefill)
+    # SLO-tier coordinate: the binding (minimum) resolved ITL target of
+    # the instance's resident requests — None when empty or untiered
+    binding_itl_s: Optional[float] = None
 
 
 @dataclass
@@ -54,6 +57,9 @@ class RouteRequest:
     """What the router knows about the request being placed."""
 
     prompt_len: int  # tokens entering the instance's KV cache
+    # resolved ITL target of the request's SLO tier (None = untiered:
+    # cluster-default SLOs)
+    itl_slo_s: Optional[float] = None
 
 
 class Router(Protocol):
@@ -206,37 +212,88 @@ class EnergyAwareEcoRoute:
         self._rr = 0
 
     def _whatif(
-        self, p: InstanceProfile, n_req: int, n_kv: int, bias: float
+        self, p: InstanceProfile, n_req: int, n_kv: int, bias: float,
+        slo_s: Optional[float] = None,
     ) -> tuple:
         """Lowest SLO-meeting (f, predicted ITL) on p's own ladder."""
+        slo = self.slo_itl_s if slo_s is None else slo_s
         opts = np.asarray(p.ecofreq.freq_options)
         t = p.ecofreq.predictor.predict_decode(
             opts, np.full(len(opts), float(n_req)),
             np.full(len(opts), float(n_kv)),
         ) + bias
-        ok = t <= self.slo_itl_s
+        ok = t <= slo
         j = int(ok.argmax()) if ok.any() else len(opts) - 1
         return float(opts[j]), float(t[j])
+
+    def _slos(
+        self, v: InstanceView, req: RouteRequest
+    ) -> tuple:
+        """(current binding ITL, binding after placing req) — one global
+        SLO here; the tier-aware subclass substitutes per-tier bindings."""
+        return self.slo_itl_s, self.slo_itl_s
 
     def route(self, views: List[InstanceView], req: RouteRequest) -> int:
         cands = _candidates(views, req)
         scored = []
         for v in cands:
             p = self.profiles[v.idx]
+            cur_slo, hyp_slo = self._slos(v, req)
             f_hyp, t_hyp = self._whatif(
-                p, v.n_req + 1, v.n_kv + req.prompt_len, v.latency_bias_s
+                p, v.n_req + 1, v.n_kv + req.prompt_len,
+                v.latency_bias_s, hyp_slo,
             )
             e_hyp = p.hw.decode_iter(
                 v.n_req + 1, v.n_kv + req.prompt_len, f_hyp
             ).energy_j
             e_cur = 0.0
             if v.n_req > 0:
-                f_cur, _ = self._whatif(p, v.n_req, v.n_kv, v.latency_bias_s)
+                f_cur, _ = self._whatif(
+                    p, v.n_req, v.n_kv, v.latency_bias_s, cur_slo
+                )
                 e_cur = p.hw.decode_iter(v.n_req, v.n_kv, f_cur).energy_j
-            scored.append((t_hyp <= self.slo_itl_s, e_hyp - e_cur, t_hyp, v))
+            scored.append((t_hyp <= hyp_slo, e_hyp - e_cur, t_hyp, v))
         pick = _select(scored, self._rr, self.tol)
         self._rr += 1
         return pick.idx
+
+
+class TierAwareEcoRoute(EnergyAwareEcoRoute):
+    """State-space routing over tiered traffic (EcoRoute generalized to
+    per-instance binding SLOs).
+
+    With SLO tiers the decode state space gains a third coordinate: the
+    *binding* ITL target of the residents, ``min_i slo_itl(r_i)`` — the
+    deadline EcoFreq actually paces the whole instance against.  Placing
+    a request tightens that binding to ``min(binding, slo(r))``, so the
+    what-if prices exactly the cross-tier coupling Alg. 2 cannot see:
+
+    * an **interactive** request landing on an instance saturated with
+      batch work forces the *entire* resident batch up to the strict
+      clock — a huge marginal energy ``dE`` — so interactive traffic
+      naturally avoids batch-saturated instances;
+    * a **batch** request joining a strict (interactive-bound) instance
+      pays that instance's high clock for every future token, while on a
+      lax instance it decodes at the bottom of the ladder — so batch
+      work self-segregates onto lax instances.
+
+    Scoring is :class:`EnergyAwareEcoRoute`'s physical-units rule
+    (inherited) with the per-candidate binding SLO substituted via
+    :meth:`_slos`: among candidates whose hypothetical ITL meets the
+    *new* binding target, round-robin within ``tol`` of the lowest
+    marginal energy; otherwise lowest latency.  ``slo_itl_s`` is the
+    fallback for untiered requests/views.
+    """
+
+    def _slos(self, v: InstanceView, req: RouteRequest) -> tuple:
+        req_slo = req.itl_slo_s if req.itl_slo_s else self.slo_itl_s
+        if v.n_req == 0:
+            # empty instance: the request alone defines the binding —
+            # falling back to the strict base SLO here would misprice
+            # lax-tier placements and defeat batch self-segregation
+            return req_slo, req_slo
+        cur_slo = v.binding_itl_s if v.binding_itl_s else self.slo_itl_s
+        return cur_slo, min(cur_slo, req_slo)
 
 
 def _select(scored, rr: int, tol: float):

@@ -5,11 +5,16 @@ induce a frequency field over this plane whose discontinuities along
 ``N_req`` are the tile-quantization "cliffs". These helpers rasterize the
 field (for the Fig. 13 benchmark and EcoRoute analysis) and locate the
 cliff boundaries.
+
+SLO tiers add a third coordinate: the *binding* ITL target of the
+resident batch (``min_i slo_itl(r_i)``) — each tier mix induces its own
+frequency field, and the energy value of tier-aware routing is exactly
+the gap between these per-tier fields (``tier_frequency_fields``).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -27,9 +32,12 @@ def frequency_field(
     ecofreq: EcoFreq,
     n_req_grid: Sequence[int],
     n_kv_grid: Sequence[int],
+    itl_slo_s: Optional[float] = None,
 ) -> np.ndarray:
     """Chosen frequency at every (n_req, n_kv) grid point.
 
+    ``itl_slo_s`` overrides the controller's global ITL target with a
+    tier-binding one (None = the controller's own SLO, paper behavior).
     Returns (len(n_req_grid), len(n_kv_grid)) array of frequencies (MHz).
     """
     state = SystemState(has_waiting=False)
@@ -37,13 +45,36 @@ def frequency_field(
     for i, q in enumerate(n_req_grid):
         for j, k in enumerate(n_kv_grid):
             out[i, j] = ecofreq.select(
-                state, BatchInfo(phase="decode", n_req=int(q), n_kv=int(k))
+                state,
+                BatchInfo(phase="decode", n_req=int(q), n_kv=int(k),
+                          itl_slo_s=itl_slo_s),
             )
     return out
 
 
+def tier_frequency_fields(
+    ecofreq: EcoFreq,
+    tier_slo_itl_s: Dict[str, float],
+    n_req_grid: Sequence[int],
+    n_kv_grid: Sequence[int],
+) -> Dict[str, np.ndarray]:
+    """One frequency field per tier-binding ITL target.
+
+    An instance whose residents are all of tier ``t`` operates on field
+    ``fields[t]``; mixing a tighter tier in snaps it onto that tier's
+    field — the energy gap between fields at the operating point is the
+    cost of the mix (what :class:`~repro.core.ecoroute.TierAwareEcoRoute`
+    avoids paying).
+    """
+    return {
+        name: frequency_field(ecofreq, n_req_grid, n_kv_grid, slo)
+        for name, slo in tier_slo_itl_s.items()
+    }
+
+
 def frequency_cliffs(
-    ecofreq: EcoFreq, n_kv: int, max_req: int
+    ecofreq: EcoFreq, n_kv: int, max_req: int,
+    itl_slo_s: Optional[float] = None,
 ) -> List[Tuple[int, float, float]]:
     """(n_req, f_before, f_after) where the chosen frequency jumps as
     ``N_req`` crosses a boundary at fixed ``n_kv``."""
@@ -52,7 +83,9 @@ def frequency_cliffs(
     prev = None
     for q in range(1, max_req + 1):
         f = ecofreq.select(
-            state, BatchInfo(phase="decode", n_req=q, n_kv=n_kv)
+            state,
+            BatchInfo(phase="decode", n_req=q, n_kv=n_kv,
+                      itl_slo_s=itl_slo_s),
         )
         if prev is not None and f != prev:
             cliffs.append((q, prev, f))

@@ -11,10 +11,20 @@ from repro.serving.engine import (  # noqa: F401
     HybridEngine,
     PrefillEngine,
     SimBackend,
+    TierQueue,
 )
 from repro.serving.metrics import InstanceEnergy, RunMetrics  # noqa: F401
 from repro.serving.radixcache import RadixCache  # noqa: F401
-from repro.serving.request import Phase, Request  # noqa: F401
+from repro.serving.request import (  # noqa: F401
+    BATCH,
+    DEFAULT_TIERS,
+    INTERACTIVE,
+    Phase,
+    Request,
+    STANDARD,
+    TierSpec,
+    UNTIERED,
+)
 from repro.serving.workload import (  # noqa: F401
     DATASETS,
     LMSYS,
@@ -27,4 +37,5 @@ from repro.serving.workload import (  # noqa: F401
     poisson_workload,
     step_load,
     synthetic_pd_ratio,
+    tiered_workload,
 )

@@ -15,8 +15,10 @@ choice and the router's what-if).
 """
 from __future__ import annotations
 
+import copy
 import heapq
 import itertools
+import math
 from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -35,6 +37,7 @@ from repro.core.ecoroute import (
     RoundRobinRouter,
     RouteRequest,
     Router,
+    TierAwareEcoRoute,
 )
 from repro.core.hwmodel import HardwareModel
 from repro.core.power import ChipSpec
@@ -51,7 +54,7 @@ from repro.serving.engine import (
 )
 from repro.serving.metrics import RunMetrics
 from repro.serving.radixcache import RadixCache
-from repro.serving.request import Phase, Request
+from repro.serving.request import Phase, Request, TierSpec, UNTIERED
 
 
 # ---------------------------------------------------------------------------
@@ -75,6 +78,25 @@ class ClusterConfig:
     # SLOs (paper §VI-B: 200/20, 600/60, 1200/120 ms by model size)
     slo_ttft_s: float = 0.6
     slo_itl_s: float = 0.06
+    # SLO tiers (multi-tenant): name -> TierSpec table resolved onto each
+    # request at arrival (per-request targets = tier scales × the base
+    # SLOs above; strict priority + EDF queueing; tier-aware EcoFreq
+    # budgets and decode routing).  None = untiered legacy behavior,
+    # bit-exact with pre-tier runs.
+    slo_tiers: Optional[Dict[str, TierSpec]] = None
+    # tier-aware admission control: shed sheddable-tier arrivals when the
+    # projected prefill drain already blows admission_ttft_factor × the
+    # base (interactive) TTFT SLO, or decode KV free space falls under
+    # admission_kv_frac — best-effort work is rejected *before* it can
+    # degrade interactive SLOs (only active with slo_tiers)
+    admission_control: bool = True
+    admission_ttft_factor: float = 1.5
+    admission_kv_frac: float = 0.08
+    # decode preemption of preemptible-tier requests under KV/headroom
+    # pressure, recompute-on-resume; at most max_preemptions evictions
+    # per request (anti-starvation).  Only active with slo_tiers.
+    preemption: bool = True
+    max_preemptions: int = 3
     # policies
     policy: str = "voltana"  # voltana | ecofreq-only | static | powercap
     static_freq: Optional[float] = None  # for policy == "static"
@@ -169,6 +191,7 @@ HYBRID_OFF = 1 << 20
 class PDCluster:
     def __init__(self, cfg: ClusterConfig):
         self.cfg = cfg
+        self.tiered = cfg.slo_tiers is not None
         fo = tuple(cfg.freq_options or cfg.chip.freq_levels_2)
         fo_p = tuple(cfg.freq_options_prefill or fo)
         self.freq_options = fo
@@ -236,10 +259,24 @@ class PDCluster:
         self._profiles_p: Dict[int, InstanceProfile] = {}
         self._profiles_d: Dict[int, InstanceProfile] = {}
         if cfg.policy == "voltana":
-            if self._varied_decode:
+            if self.tiered:
+                # tier-aware state-space routing: what-ifs run against
+                # each candidate's *binding* ITL target, so interactive
+                # traffic prices (and avoids) the clock-up of landing on
+                # batch-saturated instances
                 for i, spec in enumerate(self.decode_specs):
                     self._profiles_d[i] = self._profile(spec)
-                self.decode_router: Router = EnergyAwareEcoRoute(
+                for j in range(len(self.hybrid)):
+                    self._profiles_d[HYBRID_OFF + j] = self._profile(
+                        self._default_spec_d
+                    )
+                self.decode_router: Router = TierAwareEcoRoute(
+                    self._profiles_d, cfg.slo_itl_s
+                )
+            elif self._varied_decode:
+                for i, spec in enumerate(self.decode_specs):
+                    self._profiles_d[i] = self._profile(spec)
+                self.decode_router = EnergyAwareEcoRoute(
                     self._profiles_d, cfg.slo_itl_s
                 )
             else:
@@ -273,7 +310,7 @@ class PDCluster:
                 self.prefill_router = EnergyAwarePrefillRouter(
                     self._profiles_p, cfg.slo_ttft_s
                 )
-            if self._varied_decode:
+            if self._varied_decode and not self.tiered:
                 for j in range(len(self.hybrid)):
                     self._profiles_d[HYBRID_OFF + j] = self._profile(
                         self._default_spec_d
@@ -420,7 +457,12 @@ class PDCluster:
             max_running=c.decode_max_running,
             kv_capacity_tokens=self._kv_cap_for(spec),
             record_trace=c.record_traces,
+            preempt_cap=self._preempt_cap(),
         )
+
+    def _preempt_cap(self) -> int:
+        c = self.cfg
+        return c.max_preemptions if (self.tiered and c.preemption) else 0
 
     def _make_hybrid(self, j: int, spec: InstanceSpec) -> HybridEngine:
         c = self.cfg
@@ -441,6 +483,7 @@ class PDCluster:
             record_trace=c.record_traces,
             chunk_tokens=c.hybrid_chunk_tokens,
             cache=self._cache_for(spec),
+            preempt_cap=self._preempt_cap(),
         )
 
     # -- event helpers --------------------------------------------------------
@@ -477,15 +520,81 @@ class PDCluster:
 
     def _kick_decode(self, e: DecodeEngine) -> None:
         started = e.start_iteration(self.now)
+        # KV-pressure evictions happen at the iteration boundary inside
+        # start_iteration's admit pass; recompute-on-resume via prefill
+        for r in e.take_preempted():
+            self._route_prefill(r)
         if started is not None:
             dt, _ = started
             self._push(self.now + dt, _D_DONE, e.idx)
 
     def _kick_hybrid(self, e: HybridEngine) -> None:
         started = e.start_iteration(self.now)
+        for r in e.take_preempted():
+            self._route_prefill(r)
         if started is not None:
             dt, _ = started
             self._push(self.now + dt, _H_DONE, e.idx - HYBRID_OFF)
+
+    # -- SLO tiers: resolution + admission control ---------------------------
+    def _resolve_tier(self, r: Request) -> None:
+        """Resolve the request's tier name into concrete per-request SLO
+        targets, priority, EDF deadline, and capabilities (no-op when
+        tiers are disabled — untiered legacy behavior)."""
+        if not self.tiered:
+            return
+        spec = self.cfg.slo_tiers.get(r.tier, UNTIERED)
+        r.priority = spec.priority
+        r.slo_ttft_s = spec.ttft_scale * self.cfg.slo_ttft_s
+        r.slo_itl_s = spec.itl_scale * self.cfg.slo_itl_s
+        r.deadline_s = r.arrival_s + r.slo_ttft_s
+        r.preemptible = spec.preemptible
+        r.sheddable = spec.sheddable
+        r.boosts_queue = spec.boosts_queue
+
+    def _should_shed(self, r: Request) -> bool:
+        """Tier-aware admission: reject a sheddable-tier arrival while
+        the cluster is under interactive pressure — best-effort work
+        sheds *before* it can queue ahead of strict-SLO traffic."""
+        if not (self.tiered and self.cfg.admission_control and r.sheddable):
+            return False
+        c = self.cfg
+        # decode KV pressure: free share across the alive decode fleet
+        cap = free = 0
+        for e in self.decode + self.hybrid:
+            if e.alive:
+                cap += e.kv_capacity_tokens
+                free += max(0, e.kv_headroom)
+        if cap and free < c.admission_kv_frac * cap:
+            return True
+        # prefill backlog: best projected *existing* queue drain (max
+        # clock) across placeable instances vs the strictest (base) TTFT
+        # budget.  The arrival's own prompt is deliberately excluded —
+        # a bulk prompt on an idle cluster harms nobody (EDF + chunking
+        # bound the stall it can inject to one chunk); what sheds is the
+        # backlog best-effort work has already piled up.
+        budget = c.admission_ttft_factor * c.slo_ttft_s
+        best = math.inf
+        for e in self.prefill:
+            if e.alive and e.accepting:
+                t = max(0.0, e.busy_until - self.now) if e.busy else 0.0
+                if e.queued_tokens:
+                    t += float(e.predictor.predict_prefill(
+                        self.prefill_specs[e.idx].f_max, e.queued_tokens,
+                    )[0])
+                best = min(best, t)
+        for h in self.hybrid:
+            if h.alive and h.accepting:
+                t = 0.0
+                if h.queued_tokens:
+                    t = float(h.predictor.predict_prefill(
+                        self._default_spec_d.f_max, h.queued_tokens,
+                    )[0])
+                best = min(best, t)
+        # a fully parked/drained fleet is absent pressure, not infinite
+        # pressure: admit and let the autoscaler's wake path re-admit
+        # capacity rather than shedding into idle slots
+        return math.isfinite(best) and best > budget
 
     # -- routing --------------------------------------------------------------
     def _match_len(self, eng, req: Request) -> int:
@@ -516,7 +625,7 @@ class PDCluster:
             )
             for h in self.hybrid
         ]
-        idx = self.prefill_router.route(views, RouteRequest(req.prompt_len))
+        idx = self.prefill_router.route(views, self._route_req(req))
         if idx >= HYBRID_OFF:
             eng = self.hybrid[idx - HYBRID_OFF]
             eng.enqueue_prefill(req, self.now)
@@ -527,6 +636,14 @@ class PDCluster:
         eng.enqueue(req, self.now)
         if not eng.busy:
             self._kick_prefill(eng)
+
+    def _route_req(self, req: Request) -> RouteRequest:
+        """Router view of the request: KV it brings (prompt + recomputed
+        context after a preemption) and its resolved tier target."""
+        return RouteRequest(
+            req.prompt_len + req.tokens_out,
+            itl_slo_s=req.slo_itl_s if req.slo_itl_s > 0 else None,
+        )
 
     def _route_decode(self, req: Request) -> None:
         if self.autoscaler is not None:
@@ -541,6 +658,7 @@ class PDCluster:
                 accepting=e.accepting,
                 kv_headroom=e.kv_headroom,
                 latency_bias_s=self._bias_ewma.get(e.idx, 0.0),
+                binding_itl_s=e.binding_itl_s,
             )
             for e in self.decode
         ]
@@ -550,12 +668,15 @@ class PDCluster:
                 has_waiting=len(h.waiting) > 0,
                 alive=h.alive, accepting=h.accepting,
                 kv_headroom=h.kv_headroom,
+                binding_itl_s=h.binding_itl_s,
             )
             for h in self.hybrid
         ]
-        idx = self.decode_router.route(views, RouteRequest(req.prompt_len))
-        # KV migration latency (prompt KV bytes over the transfer fabric)
-        bytes_ = req.prompt_len * self.hw.kv_bytes_per_token() + \
+        idx = self.decode_router.route(views, self._route_req(req))
+        # KV migration latency (context KV bytes over the transfer fabric;
+        # a preemption resume re-transfers prompt + regenerated context)
+        bytes_ = (req.prompt_len + req.tokens_out) \
+            * self.hw.kv_bytes_per_token() + \
             self.hw.state_bytes_per_request()
         dt = self.cfg.transfer_const_s + bytes_ / self.cfg.transfer_bw
         self._push(self.now + dt, _JOIN_D, (req, idx))
@@ -585,6 +706,16 @@ class PDCluster:
             r.output_tokens = []
             r.t_prefill_start = -1.0
             r.t_first_token = r.t_finish = r.t_join_decode = -1.0
+            # tier state is re-resolved per run (the same workload is
+            # legitimately served tiered and untiered across arms)
+            r.priority = 1
+            r.slo_ttft_s = r.slo_itl_s = -1.0
+            r.deadline_s = math.inf
+            r.preemptible = r.sheddable = False
+            r.boosts_queue = True
+            r.preemptions = 0
+            r.preempt_gen_len = 0
+            r.resume_pending = False
             self._push(r.arrival_s, _ARRIVAL, r)
         pending = len(requests)
         self._arrived_tokens = 0
@@ -598,6 +729,11 @@ class PDCluster:
             self.now = t
 
             if kind == _ARRIVAL:
+                self._resolve_tier(data)
+                if self._should_shed(data):
+                    data.phase = Phase.SHED
+                    pending -= 1
+                    continue
                 self._arrived_tokens += data.prompt_len
                 self._route_prefill(data)
 
@@ -619,6 +755,9 @@ class PDCluster:
                     req.restarts += 1
                     req.tokens_out = 0
                     req.kv_len = 0
+                    req.preempt_gen_len = 0
+                    req.resume_pending = False
+                    req.output_tokens = []  # re-prefill re-emits
                     self._route_prefill(req)
                     continue
                 eng.unpark(self.now)  # KV landed after the drain finished
@@ -670,6 +809,9 @@ class PDCluster:
                     for r in lost:  # KV lost: back through prefill
                         r.tokens_out = 0
                         r.kv_len = 0
+                        r.preempt_gen_len = 0
+                        r.resume_pending = False
+                        r.output_tokens = []  # re-prefill re-emits
                         self._route_prefill(r)
                 elif action == "scale_out":
                     if phase == "decode":
@@ -707,7 +849,10 @@ class PDCluster:
                 hits += e.cache.hit_tokens
                 lookups += e.cache.lookup_tokens
         return RunMetrics(
-            requests=requests,
+            # snapshot: callers legitimately re-run the same Request
+            # objects under another policy arm, which resets them in
+            # place — metrics of *this* run must not silently change
+            requests=[copy.copy(r) for r in requests],
             instances=energies,
             slo_ttft_s=self.cfg.slo_ttft_s,
             slo_itl_s=self.cfg.slo_itl_s,

@@ -15,9 +15,11 @@ backends. Backends provide the iteration's latency/energy ground truth and
 """
 from __future__ import annotations
 
-from collections import deque
+import heapq
+import itertools
+import math
 from dataclasses import dataclass, field
-from typing import Callable, Deque, List, Optional, Tuple
+from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -27,6 +29,99 @@ from repro.core.hwmodel import HardwareModel, IterCost
 from repro.serving.metrics import InstanceEnergy
 from repro.serving.radixcache import RadixCache
 from repro.serving.request import Phase, Request
+
+
+# ---------------------------------------------------------------------------
+# Deadline-aware queue (strict priority across tiers, EDF within a tier)
+# ---------------------------------------------------------------------------
+
+
+class TierQueue:
+    """Request queue ordered by (priority, deadline, admission seq).
+
+    Strict priority across tiers, earliest-deadline-first within a tier,
+    admission order as the final tie-break.  Untiered requests all carry
+    ``priority=1, deadline=+inf``, so the order degenerates to exact
+    FCFS — pre-tier runs are bit-identical.
+
+    A request re-entering after a *partial* chunk iteration keeps its
+    original admission seq (``requeue``), so it resumes ahead of
+    same-key later arrivals — the chunked-prefill front-of-queue
+    contract.  A fresh ``append`` (arrival, failure restart, preemption
+    resume) draws a new seq and joins at the back of its (priority,
+    deadline) class.
+    """
+
+    def __init__(self):
+        self._heap: List[tuple] = []
+        self._seq = itertools.count()
+        self._urgent = 0  # queued requests whose tier boosts EcoFreq
+
+    def _push(self, r: Request, seq: int) -> None:
+        r.queue_seq = seq  # carried on the request: O(1) memory per queue
+        heapq.heappush(self._heap, (r.priority, r.deadline_s, seq, r))
+        if r.boosts_queue:
+            self._urgent += 1
+
+    def append(self, r: Request) -> None:
+        self._push(r, next(self._seq))
+
+    def requeue(self, rs: List[Request]) -> None:
+        """Partially-processed work back in, keeping admission order."""
+        for r in rs:
+            self._push(
+                r, r.queue_seq if r.queue_seq >= 0 else next(self._seq)
+            )
+
+    def peek(self) -> Request:
+        return self._heap[0][3]
+
+    def popleft(self) -> Request:
+        r = heapq.heappop(self._heap)[3]
+        if r.boosts_queue:
+            self._urgent -= 1
+        return r
+
+    def clear(self) -> None:
+        self._heap.clear()
+        self._urgent = 0
+
+    @property
+    def has_urgent(self) -> bool:
+        """Any queued request whose tier boosts the EcoFreq queue check
+        (== ``bool(queue)`` for untiered workloads)."""
+        return self._urgent > 0
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def __iter__(self) -> Iterator[Request]:
+        return (e[3] for e in self._heap)
+
+
+def _batch_budget_s(batch: List[Request], now: float) -> Optional[float]:
+    """Tightest remaining TTFT budget in the batch (EcoFreq tier hook);
+    None when any deadline is unresolved (untiered -> legacy formula)."""
+    b = math.inf
+    for r in batch:
+        if not math.isfinite(r.deadline_s):
+            return None
+        b = min(b, r.deadline_s - now)
+    return b if batch else None
+
+
+def _binding_itl_s(running: List[Request]) -> Optional[float]:
+    """Binding (minimum) resolved ITL target across the running batch;
+    None when any request is untiered (legacy global-SLO behavior)."""
+    b = math.inf
+    for r in running:
+        if r.slo_itl_s <= 0:
+            return None
+        b = min(b, r.slo_itl_s)
+    return b if running else None
 
 
 # ---------------------------------------------------------------------------
@@ -148,7 +243,7 @@ class PrefillEngine(ParkableEngine):
     # radix prefix cache; None = no prompt reuse
     cache: Optional[RadixCache] = None
 
-    queue: Deque[Request] = field(default_factory=deque)
+    queue: TierQueue = field(default_factory=TierQueue)
     busy: bool = False
     busy_until: float = 0.0  # current batch's completion time
     alive: bool = True
@@ -185,7 +280,9 @@ class PrefillEngine(ParkableEngine):
         self.queue.append(req)
 
     def form_batch(self) -> Tuple[List[Request], int]:
-        """FCFS whole-prompt batching under the token budget (>=1 req).
+        """Queue-order whole-prompt batching under the token budget
+        (>=1 req); the queue itself is priority+EDF ordered (exact FCFS
+        for untiered workloads).
 
         Legacy (unchunked) path: an oversized prompt is admitted whole,
         bypassing the budget — exactly the behavior chunked prefill fixes.
@@ -193,7 +290,7 @@ class PrefillEngine(ParkableEngine):
         batch: List[Request] = []
         tokens = 0
         while self.queue:
-            nxt = self.queue[0]
+            nxt = self.queue.peek()
             if batch and tokens + nxt.prefill_remaining > self.max_batch_tokens:
                 break
             batch.append(self.queue.popleft())
@@ -201,15 +298,18 @@ class PrefillEngine(ParkableEngine):
         return batch, tokens
 
     def form_chunk(self) -> Tuple[List[Request], List[int]]:
-        """FCFS *token-level* batching: fill the chunk budget exactly,
-        splitting the boundary prompt across iterations.  Only the last
-        admitted request can be partial, so batch order stays FCFS."""
+        """Queue-order *token-level* batching: fill the chunk budget
+        exactly, splitting the boundary prompt across iterations.  Only
+        the last admitted request can be partial, so batch order follows
+        the queue (FCFS untiered; priority+EDF with tiers — an urgent
+        arrival overtakes a half-prefilled batch prompt at the next chunk
+        boundary)."""
         budget = self.chunk_tokens or self.max_batch_tokens
         batch: List[Request] = []
         takes: List[int] = []
         left = budget
         while self.queue and left > 0:
-            nxt = self.queue[0]
+            nxt = self.queue.peek()
             take = min(nxt.prefill_remaining, left)
             if take <= 0:
                 break
@@ -238,9 +338,11 @@ class PrefillEngine(ParkableEngine):
                 r.t_prefill_start = now
         max_wait = max(now - r.arrival_s for r in batch)
         f = self.controller.select(
-            SystemState(has_waiting=len(self.queue) > 0, now_s=now),
+            SystemState(has_waiting=len(self.queue) > 0, now_s=now,
+                        has_urgent_waiting=self.queue.has_urgent),
             BatchInfo("prefill", n_tok=n_new, max_waiting_s=max_wait,
-                      n_cached=n_ctx),
+                      n_cached=n_ctx,
+                      budget_s=_batch_budget_s(batch, now)),
         )
         if self.chunk_tokens is not None or n_ctx > 0:
             cost = self.backend.prefill_chunk(batch, takes, n_new, n_ctx, f)
@@ -259,8 +361,10 @@ class PrefillEngine(ParkableEngine):
 
     def finish_iteration(self, now: float) -> List[Request]:
         """Iteration done: advance chunk progress; prompts that completed
-        emit their first token and return (partial prompts re-queue at the
-        front, preserving FCFS)."""
+        emit their first token and return (partial prompts re-queue,
+        keeping their admission seq so they stay at the front of their
+        tier class).  A preemption *resume* recomputes KV only — its
+        first token was emitted long ago and keeps its timestamp."""
         batch, takes = self.current_batch, self._takes
         self.current_batch, self._takes = [], []
         done: List[Request] = []
@@ -268,7 +372,9 @@ class PrefillEngine(ParkableEngine):
         for r, take in zip(batch, takes):
             r.computed_len += take
             if r.prefill_remaining <= 0:
-                r.t_first_token = now
+                if not r.resuming:
+                    r.t_first_token = now
+                r.resume_pending = False  # recompute (if any) is done
                 r.phase = Phase.TRANSFERRING
                 if self.cache is not None and r.prompt_tokens:
                     self.cache.unlock(self._locks.pop(r.rid, None))
@@ -277,7 +383,7 @@ class PrefillEngine(ParkableEngine):
             else:
                 r.phase = Phase.QUEUED_PREFILL
                 partial.append(r)
-        self.queue.extendleft(reversed(partial))
+        self.queue.requeue(partial)
         return done
 
     def release_locks(self) -> None:
@@ -303,13 +409,17 @@ class DecodeEngine(ParkableEngine):
     max_running: int = 512
     kv_capacity_tokens: int = 2_000_000
     record_trace: bool = False
+    # tier preemption: max evictions per request (0 = preemption off);
+    # set by the cluster when SLO tiers are enabled
+    preempt_cap: int = 0
 
-    waiting: Deque[Request] = field(default_factory=deque)
+    waiting: TierQueue = field(default_factory=TierQueue)
     running: List[Request] = field(default_factory=list)
     busy: bool = False
     alive: bool = True
     accepting: bool = True  # False while draining/parked (EcoScale)
     energy: InstanceEnergy = None
+    preempted_out: List[Request] = field(default_factory=list)
     _iter_cost: Optional[IterCost] = None
     _iter_f: float = 0.0
     _parked_at: Optional[float] = None
@@ -337,27 +447,79 @@ class DecodeEngine(ParkableEngine):
     @property
     def kv_headroom(self) -> int:
         return self.kv_capacity_tokens - self.n_kv - sum(
-            r.prompt_len for r in self.waiting
+            r.kv_len for r in self.waiting
         )
+
+    @property
+    def binding_itl_s(self) -> Optional[float]:
+        """Tightest resolved ITL target among resident requests (what a
+        tier-aware router compares against); None when untiered/empty."""
+        return _binding_itl_s(self.running)
 
     def enqueue(self, req: Request) -> None:
         req.phase = Phase.QUEUED_DECODE
         req.decode_instance = self.idx
-        req.kv_len = req.prompt_len
+        # a preemption resume re-enters with its recomputed context
+        # (prompt + already-delivered tokens) resident
+        req.kv_len = req.prompt_len + req.tokens_out
         self.waiting.append(req)
 
-    def _admit(self, now: float) -> None:
-        while (
-            self.waiting
-            and len(self.running) < self.max_running
-            and self.n_kv + self.waiting[0].kv_len + len(self.running)
+    def _fits(self, r: Request) -> bool:
+        return (
+            len(self.running) < self.max_running
+            and self.n_kv + r.kv_len + len(self.running)
             <= self.kv_capacity_tokens
-        ):
-            r = self.waiting.popleft()
-            r.phase = Phase.RUNNING_DECODE
-            r.t_join_decode = now
-            self.backend.insert(r)
-            self.running.append(r)
+        )
+
+    def _preempt_for(self, head: Request, now: float) -> bool:
+        """KV/headroom pressure: evict one preemptible lower-priority
+        running request (least urgent first: highest priority number,
+        then latest deadline) so ``head`` can eventually admit.  The
+        victim loses its KV and re-queues for prefill to *recompute*
+        prompt + already-generated context; delivered tokens are never
+        re-emitted.  Returns True if an eviction happened."""
+        if self.preempt_cap <= 0:
+            return False
+        victims = [
+            r for r in self.running
+            if r.preemptible and r.priority > head.priority
+            and r.preemptions < self.preempt_cap
+        ]
+        if not victims:
+            return False
+        v = max(victims, key=lambda r: (r.priority, r.deadline_s, r.rid))
+        self.running.remove(v)
+        self.backend.release(v)
+        v.preemptions += 1
+        v.preempt_gen_len = v.tokens_out
+        v.resume_pending = True
+        v.cached_len = v.computed_len = 0
+        v.kv_len = 0
+        v.phase = Phase.QUEUED_PREFILL
+        # fresh TTFT-sized budget for the recompute (EDF key on resume)
+        if v.slo_ttft_s > 0:
+            v.deadline_s = now + v.slo_ttft_s
+        self.preempted_out.append(v)
+        return True
+
+    def take_preempted(self) -> List[Request]:
+        """Drain requests evicted since the last call (cluster re-routes
+        them through prefill)."""
+        out, self.preempted_out = self.preempted_out, []
+        return out
+
+    def _admit(self, now: float) -> None:
+        while self.waiting:
+            head = self.waiting.peek()
+            if self._fits(head):
+                r = self.waiting.popleft()
+                r.phase = Phase.RUNNING_DECODE
+                r.t_join_decode = now
+                self.backend.insert(r)
+                self.running.append(r)
+                continue
+            if not self._preempt_for(head, now):
+                break
 
     def start_iteration(self, now: float) -> Optional[Tuple[float, IterCost]]:
         if not self.alive:
@@ -369,8 +531,10 @@ class DecodeEngine(ParkableEngine):
             return None
         n_req, n_kv = self.n_req, self.n_kv
         f = self.controller.select(
-            SystemState(has_waiting=len(self.waiting) > 0, now_s=now),
-            BatchInfo("decode", n_req=n_req, n_kv=n_kv),
+            SystemState(has_waiting=len(self.waiting) > 0, now_s=now,
+                        has_urgent_waiting=self.waiting.has_urgent),
+            BatchInfo("decode", n_req=n_req, n_kv=n_kv,
+                      itl_slo_s=_binding_itl_s(self.running)),
         )
         cost = self.backend.decode_iter(self.running, n_req, n_kv, f)
         self._iter_cost, self._iter_f = cost, f
@@ -413,6 +577,11 @@ class DecodeEngine(ParkableEngine):
             r.restarts += 1
             r.tokens_out = 0
             r.kv_len = 0
+            r.preempt_gen_len = 0  # everything re-generates from scratch
+            r.resume_pending = False
+            # stale ids must not survive into the regenerated stream (a
+            # later preemption resume rebuilds context from this list)
+            r.output_tokens = []
         return lost
 
 
@@ -437,7 +606,7 @@ class HybridEngine(DecodeEngine):
 
     chunk_tokens: int = 2_048
     cache: Optional[RadixCache] = None
-    pqueue: Deque[Request] = field(default_factory=deque)
+    pqueue: TierQueue = field(default_factory=TierQueue)
     p_current: List[Request] = field(default_factory=list)
     _p_takes: List[int] = field(default_factory=list)
     _locks: dict = field(default_factory=dict)  # rid -> radix lock handle
@@ -472,7 +641,7 @@ class HybridEngine(DecodeEngine):
         takes: List[int] = []
         left = self.chunk_tokens
         while self.pqueue and left > 0:
-            take = min(self.pqueue[0].prefill_remaining, left)
+            take = min(self.pqueue.peek().prefill_remaining, left)
             if take <= 0:
                 break
             batch.append(self.pqueue.popleft())
@@ -499,20 +668,25 @@ class HybridEngine(DecodeEngine):
         # the clock must satisfy both phases' budgets: take the higher of
         # the two per-phase selections (higher f never misses harder)
         state = SystemState(
-            has_waiting=bool(self.waiting) or bool(self.pqueue), now_s=now
+            has_waiting=bool(self.waiting) or bool(self.pqueue), now_s=now,
+            has_urgent_waiting=(
+                self.waiting.has_urgent or self.pqueue.has_urgent
+            ),
         )
         f = 0.0
         if self.running:
             f = self.controller.select(
                 state,
-                BatchInfo("decode", n_req=self.n_req, n_kv=self.n_kv),
+                BatchInfo("decode", n_req=self.n_req, n_kv=self.n_kv,
+                          itl_slo_s=_binding_itl_s(self.running)),
             )
         if batch:
             max_wait = max(now - r.arrival_s for r in batch)
             f = max(f, self.controller.select(
                 state,
                 BatchInfo("prefill", n_tok=n_new, max_waiting_s=max_wait,
-                          n_cached=n_ctx),
+                          n_cached=n_ctx,
+                          budget_s=_batch_budget_s(batch, now)),
             ))
         cost = self.backend.hybrid_iter(
             self.running, self.n_req, self.n_kv, batch, takes,
@@ -546,7 +720,9 @@ class HybridEngine(DecodeEngine):
         for r, take in zip(batch, takes):
             r.computed_len += take
             if r.prefill_remaining <= 0:
-                r.t_first_token = now
+                if not r.resuming:
+                    r.t_first_token = now
+                r.resume_pending = False  # recompute (if any) is done
                 if self.cache is not None and r.prompt_tokens:
                     self.cache.unlock(self._locks.pop(r.rid, None))
                     self.cache.insert(r.prompt_tokens, now)
@@ -554,7 +730,7 @@ class HybridEngine(DecodeEngine):
             else:
                 r.phase = Phase.QUEUED_PREFILL
                 partial.append(r)
-        self.pqueue.extendleft(reversed(partial))
+        self.pqueue.requeue(partial)
         return done
 
     def fail(self) -> List[Request]:

@@ -1,8 +1,14 @@
 """Serving metrics: TTFT / ITL SLO attainment, energy, EPOT, throughput.
 
 SLO attainment follows DistServe (paper §VI-A): the percentage of finished
-requests with TTFT <= S_P and mean ITL <= S_D respectively. Energy is the
-paper's end-to-end Joules integrated over every instance (busy + idle).
+requests with TTFT <= S_P and mean ITL <= S_D respectively — with SLO
+tiers resolved, each request is judged against its *own* per-tier targets
+(identical to the run-level SLOs for untiered workloads). Energy is the
+paper's end-to-end Joules integrated over every instance (busy + idle);
+``tier_summary`` splits attainment per tier and attributes energy by
+output-token share.  Requests rejected by admission control (phase SHED)
+were never admitted: they are excluded from attainment denominators and
+reported via ``shed_frac``.
 """
 from __future__ import annotations
 
@@ -52,25 +58,55 @@ class RunMetrics:
     prefix_hit_rate: Optional[float] = None
 
     # -- per-phase ----------------------------------------------------------
-    def _done(self) -> List[Request]:
-        return [r for r in self.requests if r.finished]
+    def _done(self, tier: Optional[str] = None) -> List[Request]:
+        return [
+            r for r in self.requests
+            if r.finished and (tier is None or r.tier == tier)
+        ]
 
-    def ttft_values(self) -> np.ndarray:
-        return np.array([r.ttft_s for r in self._done()])
+    def admitted(self, tier: Optional[str] = None) -> List[Request]:
+        return [
+            r for r in self.requests
+            if r.admitted and (tier is None or r.tier == tier)
+        ]
 
-    def itl_values(self) -> np.ndarray:
-        return np.array([r.itl_mean_s for r in self._done() if r.decode_len > 0])
+    def _ttft_slo(self, r: Request) -> float:
+        return r.slo_ttft_s if r.slo_ttft_s > 0 else self.slo_ttft_s
 
-    def ttft_attainment(self) -> float:
-        v = self.ttft_values()
-        return float((v <= self.slo_ttft_s).mean()) if v.size else 0.0
+    def _itl_slo(self, r: Request) -> float:
+        return r.slo_itl_s if r.slo_itl_s > 0 else self.slo_itl_s
 
-    def itl_attainment(self) -> float:
-        v = self.itl_values()
-        return float((v <= self.slo_itl_s).mean()) if v.size else 1.0
+    def ttft_values(self, tier: Optional[str] = None) -> np.ndarray:
+        return np.array([r.ttft_s for r in self._done(tier)])
+
+    def itl_values(self, tier: Optional[str] = None) -> np.ndarray:
+        return np.array(
+            [r.itl_mean_s for r in self._done(tier) if r.decode_len > 0]
+        )
+
+    def ttft_attainment(self, tier: Optional[str] = None) -> float:
+        done = self._done(tier)
+        if not done:
+            return 0.0
+        ok = sum(r.ttft_s <= self._ttft_slo(r) for r in done)
+        return ok / len(done)
+
+    def itl_attainment(self, tier: Optional[str] = None) -> float:
+        done = [r for r in self._done(tier) if r.decode_len > 0]
+        if not done:
+            return 1.0
+        ok = sum(r.itl_mean_s <= self._itl_slo(r) for r in done)
+        return ok / len(done)
 
     def finished_frac(self) -> float:
-        return len(self._done()) / max(1, len(self.requests))
+        """Finished fraction of *admitted* requests (zero admitted-request
+        loss == 1.0; shed requests are accounted via shed_frac)."""
+        return len(self._done()) / max(1, len(self.admitted()))
+
+    def shed_frac(self) -> float:
+        """Fraction of all arrivals rejected by admission control."""
+        n = len(self.requests)
+        return (n - len(self.admitted())) / n if n else 0.0
 
     # -- energy -------------------------------------------------------------
     def energy_j(self) -> float:
@@ -86,13 +122,50 @@ class RunMetrics:
     def parked_s_total(self) -> float:
         return sum(e.parked_s for e in self.instances)
 
-    def output_tokens(self) -> int:
-        return sum(r.decode_len for r in self._done())
+    def output_tokens(self, tier: Optional[str] = None) -> int:
+        return sum(r.decode_len for r in self._done(tier))
 
     def epot_j(self) -> float:
         """Energy per output token."""
         t = self.output_tokens()
         return self.energy_j() / t if t else float("inf")
+
+    def preemptions_total(self) -> int:
+        return sum(r.preemptions for r in self.requests)
+
+    # -- per-tier -----------------------------------------------------------
+    def tiers(self) -> List[str]:
+        return sorted({r.tier for r in self.requests})
+
+    def tier_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-tier attainment + energy share (energy attributed by
+        output-token share — instances are time-shared across tiers)."""
+        total_tok = max(1, self.output_tokens())
+        out: Dict[str, Dict[str, float]] = {}
+        for tier in self.tiers():
+            n = sum(r.tier == tier for r in self.requests)
+            adm = self.admitted(tier)
+            done = self._done(tier)
+            tok = self.output_tokens(tier)
+            out[tier or "untiered"] = {
+                "n": n,
+                "admitted": len(adm),
+                "shed_frac": round((n - len(adm)) / n, 4) if n else 0.0,
+                "finished_frac": round(
+                    len(done) / max(1, len(adm)), 4
+                ),
+                "ttft_attain": round(self.ttft_attainment(tier), 4),
+                "itl_attain": round(self.itl_attainment(tier), 4),
+                "ttft_p50_ms": round(
+                    float(np.median(self.ttft_values(tier)) * 1e3), 2
+                ) if done else 0.0,
+                "output_tokens": tok,
+                "energy_share_j": round(
+                    self.energy_j() * tok / total_tok, 1
+                ),
+                "preemptions": sum(r.preemptions for r in adm),
+            }
+        return out
 
     def throughput_tok_s(self) -> float:
         return self.output_tokens() / self.duration_s if self.duration_s else 0.0
@@ -102,6 +175,10 @@ class RunMetrics:
         extra = {}
         if self.prefix_hit_rate is not None:
             extra["prefix_hit_rate"] = round(self.prefix_hit_rate, 4)
+        if self.shed_frac() > 0.0:
+            extra["shed_frac"] = round(self.shed_frac(), 4)
+        if self.preemptions_total() > 0:
+            extra["preemptions"] = self.preemptions_total()
         return {
             "n_requests": len(self.requests),
             "finished_frac": round(self.finished_frac(), 4),

@@ -76,7 +76,13 @@ class RealBackend(SimBackend):
     # Prefill: real first token + cache stash
     # ------------------------------------------------------------------
     def _real_prefill(self, r: Request) -> None:
-        toks = np.asarray(r.prompt_tokens, np.int32)
+        ctx = list(r.prompt_tokens)
+        if r.resuming:
+            # preemption resume: recompute the KV of prompt + the tokens
+            # already delivered (their ids are real and kept); the first
+            # token was emitted long ago and must not be re-emitted
+            ctx += [int(t) for t in r.output_tokens[: r.tokens_out]]
+        toks = np.asarray(ctx, np.int32)
         pad = _bucket(len(toks))
         if pad > self.max_len:
             raise ValueError(
@@ -90,8 +96,9 @@ class RealBackend(SimBackend):
             tokens=jnp.asarray(buf),
             lengths=jnp.asarray([len(toks)], jnp.int32),
         )
-        first = int(jnp.argmax(logits[0]))
-        r.output_tokens.append(first)
+        if not r.resuming:
+            first = int(jnp.argmax(logits[0]))
+            r.output_tokens.append(first)
         r.kv_handoff = cache  # migrates with the request (P -> D)
 
     def prefill_iter(self, reqs: List[Request], n_tok: int, f: float):
@@ -125,7 +132,9 @@ class RealBackend(SimBackend):
 
         self.cache = jax.tree.map(put, self.cache, cache)
         self.next_tok[slot] = req.output_tokens[-1]
-        self.pos[slot] = req.prompt_len
+        # resident context = prompt + tokens regenerated before a
+        # preemption (fresh requests: tokens_out == 0)
+        self.pos[slot] = req.prompt_len + req.tokens_out
 
     def release(self, req: Request) -> None:
         slot = self.slot_of.pop(req.rid)

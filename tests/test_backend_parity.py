@@ -3,9 +3,15 @@
 The same trace through :class:`SimBackend` and :class:`RealBackend`
 (reduced model, zero measurement noise) must produce *identical*
 latency/energy metrics and per-request completion order — the real
-backend adds token content, never timing drift.  Runs with chunked
-prefill forced small so prompts actually split across iterations in both
-backends.
+backend adds token content, never timing drift.  Covered paths:
+
+* ``plain-pd``      — legacy whole-prompt FCFS prefill batching;
+* ``chunked-pd``    — chunked prefill forced small so prompts actually
+  split across iterations in both backends;
+* ``hybrid-tiered`` — chunked prefill + a hybrid (decode+chunk)
+  instance under SLO-tiered traffic: EDF/priority queues, tier-aware
+  EcoFreq budgets and the tier-aware decode router must make identical
+  decisions over identical virtual clocks.
 """
 import dataclasses
 
@@ -15,7 +21,12 @@ import pytest
 from repro.configs.registry import REGISTRY
 from repro.core.power import A100
 from repro.models import model as M
-from repro.serving import ClusterConfig, PDCluster, poisson_workload
+from repro.serving import (
+    DEFAULT_TIERS,
+    ClusterConfig,
+    PDCluster,
+    poisson_workload,
+)
 from repro.serving.cluster import build_predictor
 from repro.serving.realengine import make_real_backend_factory
 from repro.serving.workload import DatasetDist, LengthDist, attach_tokens
@@ -38,34 +49,49 @@ def pred():
     return build_predictor(MODEL, A100, A100.freq_levels_2, kv_cap=400_000)
 
 
-def _workload(rc):
+def _workload(rc, tiered: bool):
     tiny = DatasetDist(
         "tiny",
         prefill=LengthDist(24.0, 10.0, hi=60),
         decode=LengthDist(6.0, 3.0, hi=12),
     )
     reqs = poisson_workload(tiny, 2.5, 10.0, seed=21)
+    if tiered:
+        tiers = ("interactive", "standard", "batch")
+        for r in reqs:
+            r.tier = tiers[r.rid % 3]
     return attach_tokens(reqs, rc.vocab_size, seed=22)
 
 
-def _cfg(pred, **kw):
+SCENARIOS = {
+    "plain-pd": dict(chunked_prefill=False, prefill_chunk_tokens=None),
+    "chunked-pd": dict(prefill_chunk_tokens=32),
+    "hybrid-tiered": dict(
+        prefill_chunk_tokens=32, n_hybrid=1, slo_tiers=DEFAULT_TIERS
+    ),
+}
+
+
+def _cfg(pred, scenario, **kw):
     return ClusterConfig(
         model=MODEL, chip=A100, n_prefill=1, n_decode=2,
         policy="voltana", predictor=pred, kv_capacity_tokens=400_000,
         online_adapt=False, decode_max_running=8, seed=4,
         noise_sigma=0.0,  # determinism: parity must be exact
-        prefill_chunk_tokens=32,  # force real chunk splits
+        **SCENARIOS[scenario],
         **kw,
     )
 
 
-def test_sim_and_real_backends_agree(rc, rparams, pred):
-    reqs_sim = _workload(rc)
-    reqs_real = _workload(rc)
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_sim_and_real_backends_agree(rc, rparams, pred, scenario):
+    tiered = "tiered" in scenario
+    reqs_sim = _workload(rc, tiered)
+    reqs_real = _workload(rc, tiered)
 
-    m_sim = PDCluster(_cfg(pred)).run(reqs_sim)
+    m_sim = PDCluster(_cfg(pred, scenario)).run(reqs_sim)
     m_real = PDCluster(_cfg(
-        pred,
+        pred, scenario,
         backend_factory=make_real_backend_factory(
             rc, rparams, slots=8, max_len=128
         ),
@@ -83,6 +109,7 @@ def test_sim_and_real_backends_agree(rc, rparams, pred):
         assert rs.prefill_instance == rr.prefill_instance
         assert rs.decode_instance == rr.decode_instance
         assert rs.max_itl_s == pytest.approx(rr.max_itl_s)
+        assert rs.preemptions == rr.preemptions
 
     # identical completion order
     order_sim = [r.rid for r in sorted(reqs_sim, key=lambda r: r.t_finish)]
@@ -101,3 +128,77 @@ def test_sim_and_real_backends_agree(rc, rparams, pred):
     # and the real side actually produced the tokens it priced
     for r in reqs_real:
         assert len(r.output_tokens) == r.decode_len + 1
+
+
+def _pressure_workload(rc, n_batch=3, n_int=3):
+    """Batch-tier long decodes occupy a tiny decode instance; an
+    interactive burst lands while they hold the KV (forces preemption)."""
+    from repro.serving import Request
+
+    reqs = []
+    for i in range(n_batch):
+        reqs.append(Request(i, 0.01 * i, prompt_len=40, decode_len=80,
+                            tier="batch"))
+    for j in range(n_int):
+        reqs.append(Request(n_batch + j, 0.4 + 0.01 * j, prompt_len=60,
+                            decode_len=10, tier="interactive"))
+    return attach_tokens(reqs, rc.vocab_size, seed=5)
+
+
+def _pressure_cfg(pred, **kw):
+    base = dict(
+        model=MODEL, chip=A100, n_prefill=1, n_decode=1,
+        policy="voltana", predictor=pred, kv_capacity_tokens=200,
+        online_adapt=False, decode_max_running=8, seed=4,
+        noise_sigma=0.0, prefill_chunk_tokens=32,
+        slo_tiers=DEFAULT_TIERS, admission_control=False,
+    )
+    base.update(kw)
+    return ClusterConfig(**base)
+
+
+def test_real_backend_preemption_resume(rc, rparams, pred):
+    """The recompute-on-resume path must run over *real* compute: the
+    resume prefill rebuilds KV from prompt + already-delivered ids, the
+    first token is not re-emitted, and Sim/Real timing parity holds
+    through preempt/resume."""
+    reqs_sim = _pressure_workload(rc)
+    reqs_real = _pressure_workload(rc)
+
+    m_sim = PDCluster(_pressure_cfg(pred)).run(reqs_sim)
+    m_real = PDCluster(_pressure_cfg(
+        pred,
+        backend_factory=make_real_backend_factory(
+            rc, rparams, slots=8, max_len=128
+        ),
+    )).run(reqs_real)
+
+    assert m_sim.preemptions_total() > 0, "scenario never preempted"
+    assert m_sim.preemptions_total() == m_real.preemptions_total()
+    assert m_sim.finished_frac() == m_real.finished_frac() == 1.0
+    for rs, rr in zip(reqs_sim, reqs_real):
+        assert rs.preemptions == rr.preemptions
+        assert rs.t_finish == pytest.approx(rr.t_finish)
+        # delivered exactly decode_len + 1 ids, across preempt/resume
+        assert len(rr.output_tokens) == rr.decode_len + 1
+    assert m_sim.energy_j() == pytest.approx(m_real.energy_j(), rel=1e-9)
+
+
+def test_real_backend_failure_restart_token_hygiene(rc, rparams, pred):
+    """A failure restart regenerates from scratch: stale pre-failure ids
+    must not survive in output_tokens (a later preemption resume rebuilds
+    context from that list)."""
+    reqs = _pressure_workload(rc)
+    cfg = _pressure_cfg(
+        pred, n_decode=2, kv_capacity_tokens=400_000,
+        backend_factory=make_real_backend_factory(
+            rc, rparams, slots=8, max_len=128
+        ),
+    )
+    cl = PDCluster(cfg)
+    cl.schedule_failure(0.3, "decode", 0)
+    m = cl.run(reqs)
+    assert m.finished_frac() == 1.0
+    assert any(r.restarts > 0 for r in reqs), "failure hit nobody"
+    for r in reqs:
+        assert len(r.output_tokens) == r.decode_len + 1, r

@@ -266,3 +266,92 @@ def test_ecopred_learns_cached_context_dimension(pred):
     t_hit = float(pred.predict_prefill(1410.0, 512, 7_500)[0])
     t_cold = float(pred.predict_prefill(1410.0, 8_012, 0)[0])
     assert t_hit < 0.5 * t_cold
+
+
+# -- radix cache property sweep (randomized insert/lock/evict) ---------------
+
+
+def _radix_total_tokens(cache: RadixCache) -> int:
+    total = 0
+    stack = [cache.root]
+    while stack:
+        n = stack.pop()
+        stack.extend(n.children.values())
+        if n is not cache.root:
+            total += len(n.tokens)
+    return total
+
+
+def _radix_path_intact(cache: RadixCache, handle) -> bool:
+    """The pinned node's ancestor chain must still hang off the root and
+    every link must be consistent (eviction never severs a locked path)."""
+    node = handle
+    while node.parent is not None:
+        if node.parent.children.get(node.tokens[0]) is not node:
+            return False
+        node = node.parent
+    return node is cache.root
+
+
+def _radix_property_run(seed: int, capacity: int) -> None:
+    rng = np.random.default_rng(seed)
+    cache = RadixCache(capacity)
+    # shared-prefix pool: sequences extend each other like multi-turn
+    pool = [rng.integers(0, 50, size=rng.integers(4, 40)).tolist()
+            for _ in range(6)]
+    locks = []  # (handle, tokens, matched_at_lock)
+    now = 0.0
+    for _ in range(120):
+        now += 1.0
+        op = rng.random()
+        base = pool[int(rng.integers(len(pool)))]
+        seq = base + rng.integers(0, 50, size=rng.integers(0, 30)).tolist()
+        if op < 0.45:  # lookup + insert (the engine's completion path)
+            cache.lookup(seq, now)
+            cache.insert(seq, now)
+        elif op < 0.75:  # lock (the engine's enqueue path)
+            matched = cache.match_len(seq)
+            locks.append((cache.lock(seq), seq, matched))
+        elif locks:  # unlock a random outstanding pin
+            h, _, _ = locks.pop(int(rng.integers(len(locks))))
+            cache.unlock(h)
+
+        # -- invariants after every op --------------------------------
+        assert cache.size_tokens == _radix_total_tokens(cache)
+        for h, seq_l, matched_l in locks:
+            if h is not None:
+                assert _radix_path_intact(cache, h), (
+                    "eviction removed a lock-pinned prefix"
+                )
+        if not locks:
+            # with no pins outstanding the cache must honor capacity
+            cache.insert(
+                rng.integers(0, 50, size=8).tolist(), now
+            )
+            assert cache.size_tokens <= capacity
+
+    # release everything: the next over-capacity insert must fit again
+    for h, _, _ in locks:
+        cache.unlock(h)
+    cache.insert(rng.integers(0, 50, size=16).tolist(), now + 1)
+    assert cache.size_tokens <= capacity
+    assert cache.size_tokens >= 0
+
+
+@pytest.mark.parametrize("seed,capacity", [
+    (0, 64), (1, 64), (2, 128), (3, 32), (4, 256), (5, 48),
+])
+def test_radix_properties_grid(seed, capacity):
+    _radix_property_run(seed, capacity)
+
+
+from _hyp import given, settings, st  # noqa: E402
+
+
+@given(seed=st.integers(0, 2**16), capacity=st.sampled_from([32, 64, 200]))
+@settings(max_examples=25, deadline=None)
+def test_radix_properties_sweep(seed, capacity):
+    """Property sweep: eviction never removes lock-pinned prefixes and
+    the token footprint never exceeds capacity while unpinned, under
+    randomized insert/lock/evict sequences."""
+    _radix_property_run(seed, capacity)

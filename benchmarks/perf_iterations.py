@@ -61,6 +61,49 @@ ITERATIONS = [
 ]
 
 
+def event_loop_benchmark(rate_rps: float = 6.0, duration_s: float = 60.0,
+                         seed: int = 0, paged: bool = False,
+                         predictor_bank: dict = None) -> dict:
+    """Wall-clock the pure-Sim serving event loop on a fixed reference
+    scenario (2P/2D SHAREGPT on A100) — the control-plane overhead the
+    paged-KV / scheduling refactors must not regress.  Returns the dict
+    ``benchmarks.run --smoke`` embeds in ``BENCH_serving.json``.
+
+    Pass one ``predictor_bank`` dict across calls: the EcoPred offline
+    profile dominates setup cost and is identical for every variant."""
+    import time
+
+    from repro.configs.registry import REGISTRY
+    from repro.core.power import A100
+    from repro.serving import ClusterConfig, PDCluster, poisson_workload
+    from repro.serving.workload import SHAREGPT
+
+    model = REGISTRY["llama-3.1-8b"]
+    reqs = poisson_workload(SHAREGPT, rate_rps, duration_s, seed=seed)
+    cfg = ClusterConfig(
+        model=model, chip=A100, n_prefill=2, n_decode=2,
+        policy="voltana", online_adapt=False,
+        predictor_bank=predictor_bank if predictor_bank is not None else {},
+        seed=seed, paged=paged,
+    )
+    cluster = PDCluster(cfg)
+    t0 = time.perf_counter()
+    m = cluster.run(reqs)
+    wall_s = time.perf_counter() - t0
+    toks = m.output_tokens()
+    return {
+        "paged": paged,
+        "requests": len(reqs),
+        "output_tokens": toks,
+        "event_loop_wall_s": round(wall_s, 4),
+        "tokens_per_wall_s": round(toks / wall_s, 1) if wall_s else None,
+        "energy_per_token_j": round(m.epot_j(), 6),
+        "ttft_attainment": round(m.ttft_attainment(), 4),
+        "itl_attainment": round(m.itl_attainment(), 4),
+        "finished_frac": round(m.finished_frac(), 4),
+    }
+
+
 def run(out_dir=None, results_path=None):
     """Reads perf_results.jsonl produced by `python -m benchmarks.perf_iterations`
     (standalone mode) and emits the §Perf table; returns rows."""

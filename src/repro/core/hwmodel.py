@@ -497,6 +497,21 @@ class HardwareModel:
     def kv_bytes_per_token(self) -> float:
         return _body_params(self.cfg)[4]
 
+    def kv_transfer_bytes(self, n_tokens: int, page_size: int = 0) -> float:
+        """Bytes a P→D migration of an ``n_tokens`` context moves.
+
+        Paged serving transfers whole pages (the block-pool allocator's
+        unit of copy), so the context rounds up to its page footprint;
+        ``page_size=0`` is the legacy token-granular pricing.  Recurrent
+        per-request state rides along either way.
+        """
+        if page_size > 0 and n_tokens > 0:
+            n_tokens = -(-n_tokens // page_size) * page_size
+        return (
+            n_tokens * self.kv_bytes_per_token()
+            + self.state_bytes_per_request()
+        )
+
     def state_bytes_per_request(self) -> float:
         return _body_params(self.cfg)[5]
 

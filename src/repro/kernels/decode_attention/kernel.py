@@ -88,6 +88,152 @@ def _decode_kernel(
         o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(
+    bt_ref,  # SMEM (B, Pmax) int32 block tables (-1 = unused)
+    len_ref,  # SMEM (B,) int32 valid tokens incl. the current one
+    q_ref,  # (1, 1, G, Dh)
+    k_ref,  # (1, 1, page, Dh) — the page bt[b, p] points at
+    v_ref,  # (1, 1, page, Dh)
+    o_ref,  # (1, 1, G, Dh)
+    m_scr,  # VMEM (G,) f32
+    l_scr,  # VMEM (G,) f32
+    acc_scr,  # VMEM (G, Dh) f32
+    *,
+    window: Optional[int],
+    softcap: Optional[float],
+    page_size: int,
+    num_pages_max: int,
+    scale: float,
+):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    q_pos = length - 1
+
+    @pl.when(pi * page_size < length)
+    def _page():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, Dh)
+        k = k_ref[0, 0].astype(jnp.float32)  # (page, Dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (G, page)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+
+        # token position of slot j in this page is pi * page_size + j
+        pos = pi * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (page_size,), 0
+        )
+        valid = pos < length
+        if window is not None:
+            valid &= q_pos - pos < window
+        s = jnp.where(valid[None, :], s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(pi == num_pages_max - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-37)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "interpret"),
+)
+def paged_decode_attention(
+    q: jax.Array,  # (B, Hq, Dh)
+    k_pages: jax.Array,  # (P, page_size, Hkv, Dh) — the whole pool
+    v_pages: jax.Array,  # (P, page_size, Hkv, Dh)
+    block_tables: jax.Array,  # (B, Pmax) int32 page ids, -1 = unused
+    lengths: jax.Array,  # (B,) int32 valid tokens incl. the current one
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash-decode over a paged KV pool (vLLM-style block tables).
+
+    Position ``i`` of sequence ``b`` lives in page
+    ``block_tables[b, i // page_size]`` at offset ``i % page_size``; the
+    block table is a **scalar-prefetch** argument, so each grid step's
+    ``BlockSpec`` index_map dereferences it to DMA exactly the pages the
+    sequence owns — the gather happens in the pipeline, not the kernel
+    body.  Out-of-table entries (-1) clamp to page 0 and are masked by
+    the length check; pages past a sequence's count are skipped.
+    """
+    P, page_size, Hkv, Dh = k_pages.shape
+    B, Pmax = block_tables.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+
+    qg = q.reshape(B, Hkv, G, Dh)
+    kt = k_pages.transpose(0, 2, 1, 3)  # (P, Hkv, page, Dh)
+    vt = v_pages.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _paged_decode_kernel,
+        window=window,
+        softcap=softcap,
+        page_size=page_size,
+        num_pages_max=Pmax,
+        scale=scale,
+    )
+
+    def kv_map(b, h, p, bt, ln):
+        return (jnp.maximum(bt[b, p], 0), h, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, Pmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, p, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, Dh), kv_map),
+            pl.BlockSpec((1, 1, page_size, Dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, G, Dh), lambda b, h, p, bt, ln: (b, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, Dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
+        interpret=interpret,
+    )(
+        block_tables.astype(jnp.int32),
+        lengths.astype(jnp.int32),
+        qg, kt, vt,
+    )
+    return out.reshape(B, Hq, Dh)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("window", "softcap", "block_c", "interpret"),

@@ -6,6 +6,9 @@ from typing import Optional
 import jax
 
 from repro.kernels.decode_attention.kernel import decode_attention as _kernel
+from repro.kernels.decode_attention.kernel import (
+    paged_decode_attention as _paged_kernel,
+)
 
 
 def decode_attention(
@@ -26,4 +29,23 @@ def decode_attention(
         q, k_cache, v_cache, slot_pos, q_pos,
         window=window, softcap=softcap, block_c=block_c,
         interpret=interpret,
+    )
+
+
+def paged_decode_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _paged_kernel(
+        q, k_pages, v_pages, block_tables, lengths,
+        window=window, softcap=softcap, interpret=interpret,
     )

@@ -10,6 +10,43 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def paged_decode_attention_ref(
+    q: jax.Array,  # (B, Hq, Dh)
+    k_pages: jax.Array,  # (P, page_size, Hkv, Dh)
+    v_pages: jax.Array,  # (P, page_size, Hkv, Dh)
+    block_tables: jax.Array,  # (B, Pmax) int32 page ids, -1 = unused
+    lengths: jax.Array,  # (B,) int32 valid tokens incl. the current one
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Oracle for the paged kernel: gather every table page into a dense
+    per-sequence cache, then run masked single-token attention."""
+    P, page_size, Hkv, Dh = k_pages.shape
+    B, Pmax = block_tables.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    bt = jnp.maximum(block_tables, 0)
+    # (B, Pmax, page, Hkv, Dh) -> (B, Pmax*page, Hkv, Dh)
+    kc = k_pages[bt].reshape(B, Pmax * page_size, Hkv, Dh)
+    vc = v_pages[bt].reshape(B, Pmax * page_size, Hkv, Dh)
+    pos = jnp.arange(Pmax * page_size, dtype=jnp.int32)[None]  # (1, C)
+    q_pos = lengths - 1
+    mask = pos < lengths[:, None]
+    if window is not None:
+        mask &= q_pos[:, None] - pos < window
+    qr = q.reshape(B, Hkv, G, Dh).astype(jnp.float32)
+    s = jnp.einsum(
+        "bhgd,bchd->bhgc", qr, kc.astype(jnp.float32)
+    ) / math.sqrt(Dh)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgc,bchd->bhgd", p, vc.astype(jnp.float32))
+    return o.reshape(B, Hq, Dh).astype(q.dtype)
+
+
 def decode_attention_ref(
     q: jax.Array,  # (B, Hq, Dh)
     k_cache: jax.Array,  # (B, C, Hkv, Dh)

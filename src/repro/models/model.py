@@ -643,6 +643,229 @@ def prefill(
     return logits, cache
 
 
+# ---------------------------------------------------------------------------
+# Paged serving: KV lives in pool pages, requests carry block tables
+# ---------------------------------------------------------------------------
+
+
+def _check_paged(cfg: ModelConfig) -> None:
+    assert not cfg.has_mamba, (
+        "paged KV covers attention caches only; recurrent (Mamba) state "
+        "is constant-size per request and cannot resume mid-sequence from "
+        "shared prefix pages — serve hybrid models with paged=False"
+    )
+    assert cfg.kv_dtype != "int8", (
+        "paged cache does not carry int8 KV scales yet (paged=False "
+        "supports them)"
+    )
+
+
+def init_paged_cache(
+    cfg: ModelConfig, num_pages: int, page_size: int
+) -> PyTree:
+    """Paged decode cache: per attention layer, a pool of
+    ``(num_pages + 1, page_size, Hkv, Dh)`` K/V pages shared by every
+    resident sequence.  Page ids are handed out by
+    :class:`~repro.serving.kvpool.KVPool`; token position ``i`` of a
+    sequence lives in ``block_table[i // page_size]`` at offset
+    ``i % page_size``.  The extra page at index ``num_pages`` is a
+    write scratch: masked/padded scatters land there instead of
+    corrupting live pages.
+    """
+    _check_paged(cfg)
+    kv_dt = _kv_store_dtype(cfg)
+    n = cfg.n_blocks
+    cache = {}
+    for i, spec in enumerate(cfg.block_pattern):
+        entry = {}
+        if spec.mixer == "attn":
+            entry["k"] = jnp.zeros(
+                (n, num_pages + 1, page_size, cfg.n_kv_heads, cfg.head_dim),
+                kv_dt,
+            )
+            entry["v"] = jnp.zeros_like(entry["k"])
+        cache[f"layer_{i}"] = entry
+    return cache
+
+
+def _gather_pages(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """(P+1, ps, H, D) pages × (B, Pmax) tables -> (B, Pmax*ps, H, D)
+    dense per-sequence view (−1 table entries clamp to page 0; callers
+    mask by length)."""
+    B, Pmax = block_tables.shape
+    ps = pages.shape[1]
+    g = pages[jnp.maximum(block_tables, 0)]  # (B, Pmax, ps, H, D)
+    return g.reshape(B, Pmax * ps, *pages.shape[2:])
+
+
+def prefill_paged(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S) NEW suffix tokens, left-aligned
+    lengths: jax.Array,  # (B,) int32 — number of new tokens
+    ctx_lens: jax.Array,  # (B,) int32 — resident prefix (page-aligned)
+    block_tables: jax.Array,  # (B, Pmax) page ids over ctx+new, -1 pad
+    cache: PyTree,  # paged cache (init_paged_cache)
+):
+    """Prefill that **writes straight into pool pages**.
+
+    The ``ctx_lens`` resident prefix (a radix prefix-cache hit, already
+    in the pool) is *not* recomputed: its K/V pages are gathered for the
+    new tokens' attention span, and only the suffix runs the forward.
+    New K/V scatters into the pages ``block_tables`` assigns to
+    positions ``ctx .. ctx+len``.  With ``ctx_lens == 0`` this is a
+    whole-prompt prefill.  Returns ``(last_logits (B, V), cache)``.
+    """
+    _check_paged(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B, S = x.shape[:2]
+    scratch = jax.tree_util.tree_leaves(cache)[0].shape[1] - 1
+    ps = jax.tree_util.tree_leaves(cache)[0].shape[2]
+    Pmax = block_tables.shape[1]
+    C = Pmax * ps
+    pos_row = jnp.arange(S, dtype=jnp.int32)
+    positions = ctx_lens[:, None] + pos_row[None]  # (B, S) absolute
+    valid = pos_row[None] < lengths[:, None]
+    ctx_pos = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (B, C))
+    ctx_valid = ctx_pos < ctx_lens[:, None]
+    bidx = jnp.arange(B)[:, None]
+    # new token i of row b -> page block_tables[b, pos//ps], offset pos%ps
+    pid = block_tables[bidx, positions // ps]  # (B, S)
+    pid = jnp.where(valid & (pid >= 0), pid, scratch)
+    off = positions % ps
+
+    def body(carry, xs):
+        xc = carry
+        bp, cache_in = xs
+        bp = _dequant_tree(bp, _dtype(cfg))
+        cache_out = {}
+        for i, spec in enumerate(cfg.block_pattern):
+            lp = bp[f"layer_{i}"]
+            ci = cache_in[f"layer_{i}"]
+            co = {}
+            if spec.mixer == "attn":
+                h = L.rms_norm(xc, lp["attn"]["norm"], cfg.norm_eps)
+                q, k, v = _attn_qkv(lp["attn"], cfg, h)
+                if cfg.use_rope:
+                    sin, cos = L.rope_sincos(
+                        positions, cfg.head_dim, cfg.rope_theta
+                    )
+                    q = L.apply_rope(q, sin, cos)
+                    k = L.apply_rope(k, sin, cos)
+                # resident prefix pages join the attention span as-is —
+                # this is the zero-recompute prefix reuse
+                kg = _gather_pages(ci["k"], block_tables).astype(q.dtype)
+                vg = _gather_pages(ci["v"], block_tables).astype(q.dtype)
+                o = L.chunked_attention(
+                    q,
+                    jnp.concatenate([kg, k], axis=1),
+                    jnp.concatenate([vg, v], axis=1),
+                    causal=True, window=spec.window,
+                    softcap=cfg.attn_softcap,
+                    q_positions=positions,
+                    kv_positions=jnp.concatenate(
+                        [ctx_pos, positions], axis=1
+                    ),
+                    kv_valid=jnp.concatenate([ctx_valid, valid], axis=1),
+                    q_chunk=S, k_chunk=C + S,
+                )
+                out = jnp.einsum(
+                    "bse,ed->bsd", o.reshape(B, S, cfg.q_dim),
+                    lp["attn"]["wo"],
+                )
+                xc = xc + out
+                co["k"] = ci["k"].at[pid, off].set(k.astype(ci["k"].dtype))
+                co["v"] = ci["v"].at[pid, off].set(v.astype(ci["v"].dtype))
+            if spec.ffn != "none":
+                out, _ = _ffn(lp, cfg, xc)
+                xc = xc + out
+            cache_out[f"layer_{i}"] = co
+        return xc, cache_out
+
+    x, cache = lax.scan(
+        body, x, (params["blocks"], cache), unroll=L.in_analysis_mode()
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = jnp.maximum(lengths - 1, 0)
+    logits = lm_logits(params, cfg, x[jnp.arange(B), last])
+    return logits, cache
+
+
+def decode_step_paged(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B,) int32
+    cache: PyTree,  # paged cache (init_paged_cache)
+    lengths: jax.Array,  # (B,) int32 — resident tokens == new position
+    block_tables: jax.Array,  # (B, Pmax) page ids, -1 pad
+):
+    """One decode iteration over the paged pool.  The new token's K/V is
+    scattered into its sequence's tail page before attention; sequences
+    whose table lacks the page (or empty slots, table all -1) write to
+    the scratch page.  Returns ``(logits (B, V), new_cache)``."""
+    _check_paged(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, d)
+    B = x.shape[0]
+    q_pos = lengths
+    scratch = jax.tree_util.tree_leaves(cache)[0].shape[1] - 1
+    ps = jax.tree_util.tree_leaves(cache)[0].shape[2]
+    Pmax = block_tables.shape[1]
+    C = Pmax * ps
+    bidx = jnp.arange(B)
+    pid = block_tables[bidx, jnp.minimum(q_pos // ps, Pmax - 1)]
+    pid = jnp.where(pid >= 0, pid, scratch)
+    off = q_pos % ps
+    # dense per-slot view: position i sits at gathered index i
+    slot_pos = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (B, C))
+
+    def body(carry, xs):
+        xc = carry
+        bp, cache_in = xs
+        bp = _dequant_tree(bp, _dtype(cfg))
+        cache_out = {}
+        for i, spec in enumerate(cfg.block_pattern):
+            lp = bp[f"layer_{i}"]
+            ci = cache_in[f"layer_{i}"]
+            co = {}
+            if spec.mixer == "attn":
+                h = L.rms_norm(xc[:, None, :], lp["attn"]["norm"],
+                               cfg.norm_eps)
+                q, k, v = _attn_qkv(lp["attn"], cfg, h)  # (B, 1, H, Dh)
+                if cfg.use_rope:
+                    sin, cos = L.rope_sincos(
+                        q_pos[:, None], cfg.head_dim, cfg.rope_theta
+                    )
+                    q = L.apply_rope(q, sin, cos)
+                    k = L.apply_rope(k, sin, cos)
+                co["k"] = ci["k"].at[pid, off].set(
+                    k[:, 0].astype(ci["k"].dtype)
+                )
+                co["v"] = ci["v"].at[pid, off].set(
+                    v[:, 0].astype(ci["v"].dtype)
+                )
+                kg = _gather_pages(co["k"], block_tables).astype(q.dtype)
+                vg = _gather_pages(co["v"], block_tables).astype(q.dtype)
+                o = L.decode_attention(
+                    q[:, 0], kg, vg, slot_pos, q_pos,
+                    window=spec.window, softcap=cfg.attn_softcap,
+                )
+                xc = xc + jnp.einsum(
+                    "be,ed->bd", o.reshape(B, cfg.q_dim), lp["attn"]["wo"]
+                )
+            if spec.ffn != "none":
+                out, _ = _ffn(lp, cfg, xc)
+                xc = xc + out
+            cache_out[f"layer_{i}"] = co
+        return xc, cache_out
+
+    x, new_cache = lax.scan(
+        body, x, (params["blocks"], cache), unroll=L.in_analysis_mode()
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params, cfg, x)
+    return logits, new_cache
+
+
 def decode_step(
     params: Params,
     cfg: ModelConfig,

@@ -13,8 +13,13 @@ from repro.serving.engine import (  # noqa: F401
     SimBackend,
     TierQueue,
 )
+from repro.serving.kvpool import (  # noqa: F401
+    BlockTable,
+    KVPool,
+    PageAllocError,
+)
 from repro.serving.metrics import InstanceEnergy, RunMetrics  # noqa: F401
-from repro.serving.radixcache import RadixCache  # noqa: F401
+from repro.serving.radixcache import PagedRadixCache, RadixCache  # noqa: F401
 from repro.serving.request import (  # noqa: F401
     BATCH,
     DEFAULT_TIERS,

@@ -53,7 +53,7 @@ from repro.serving.engine import (
     SimBackend,
 )
 from repro.serving.metrics import RunMetrics
-from repro.serving.radixcache import RadixCache
+from repro.serving.radixcache import PagedRadixCache, RadixCache
 from repro.serving.request import Phase, Request, TierSpec, UNTIERED
 
 
@@ -118,6 +118,13 @@ class ClusterConfig:
     # cache-affinity prefill routing; needs requests with prompt_tokens
     prefix_cache: bool = False
     prefix_cache_capacity: Optional[int] = None  # tokens; default: KV cap
+    # paged KV memory: every layer speaks kv_page_size-token pages —
+    # decode admission/headroom pad footprints to whole pages, P->D
+    # migration prices whole pages, the radix cache matches at page
+    # granularity (and, with a real backend, hands out actual pool
+    # pages zero-copy).  False = legacy token granularity, bit-exact.
+    paged: bool = False
+    kv_page_size: int = 16
     # hybrid instances: decode engines that admit prefill chunks between
     # decode steps (local decode join, no KV migration)
     n_hybrid: int = 0
@@ -411,7 +418,18 @@ class PDCluster:
         if not self.cfg.prefix_cache:
             return None
         cap = self.cfg.prefix_cache_capacity or self._kv_cap_for(spec)
+        if self.cfg.paged:
+            return PagedRadixCache(cap, self.cfg.kv_page_size)
         return RadixCache(cap)
+
+    def _bind_backend_cache(self, backend, cache) -> None:
+        """Give a paged real backend the engine's radix cache so its
+        nodes can hold pool page refs (no-op for Sim backends)."""
+        if cache is None:
+            return
+        bind = getattr(backend, "bind_prefix_cache", None)
+        if bind is not None:
+            bind(cache)
 
     def _make_prefill(self, idx: int, spec: InstanceSpec) -> PrefillEngine:
         c = self.cfg
@@ -422,7 +440,7 @@ class PDCluster:
             backend = c.backend_factory("prefill", idx, hw, seed)
         else:
             backend = SimBackend(hw, c.noise_sigma, seed=seed)
-        return PrefillEngine(
+        eng = PrefillEngine(
             idx=idx,
             backend=backend,
             controller=self._controller(spec.freqs(), pred, spec.chip),
@@ -435,6 +453,8 @@ class PDCluster:
             ),
             cache=self._cache_for(spec),
         )
+        self._bind_backend_cache(backend, eng.cache)
+        return eng
 
     def _make_decode(self, idx: int, spec: InstanceSpec) -> DecodeEngine:
         c = self.cfg
@@ -458,6 +478,7 @@ class PDCluster:
             kv_capacity_tokens=self._kv_cap_for(spec),
             record_trace=c.record_traces,
             preempt_cap=self._preempt_cap(),
+            page_size=c.kv_page_size if c.paged else 0,
         )
 
     def _preempt_cap(self) -> int:
@@ -473,7 +494,7 @@ class PDCluster:
             backend = c.backend_factory("hybrid", j, hw, seed)
         else:
             backend = SimBackend(hw, c.noise_sigma, seed=seed)
-        return HybridEngine(
+        eng = HybridEngine(
             idx=HYBRID_OFF + j,
             backend=backend,
             controller=self._controller(spec.freqs(), pred, spec.chip),
@@ -484,7 +505,10 @@ class PDCluster:
             chunk_tokens=c.hybrid_chunk_tokens,
             cache=self._cache_for(spec),
             preempt_cap=self._preempt_cap(),
+            page_size=c.kv_page_size if c.paged else 0,
         )
+        self._bind_backend_cache(backend, eng.cache)
+        return eng
 
     # -- event helpers --------------------------------------------------------
     def _push(self, t: float, kind: int, data) -> None:
@@ -674,10 +698,12 @@ class PDCluster:
         ]
         idx = self.decode_router.route(views, self._route_req(req))
         # KV migration latency (context KV bytes over the transfer fabric;
-        # a preemption resume re-transfers prompt + regenerated context)
-        bytes_ = (req.prompt_len + req.tokens_out) \
-            * self.hw.kv_bytes_per_token() + \
-            self.hw.state_bytes_per_request()
+        # a preemption resume re-transfers prompt + regenerated context;
+        # paged serving copies whole pages, so the price rounds up too)
+        bytes_ = self.hw.kv_transfer_bytes(
+            req.prompt_len + req.tokens_out,
+            page_size=self.cfg.kv_page_size if self.cfg.paged else 0,
+        )
         dt = self.cfg.transfer_const_s + bytes_ / self.cfg.transfer_bw
         self._push(self.now + dt, _JOIN_D, (req, idx))
 
@@ -801,6 +827,7 @@ class PDCluster:
                         eng.alive = False
                         eng.release_locks()
                         lost = list(eng.current_batch) + list(eng.queue)
+                        eng.backend.abort_prefill(lost)
                         eng.current_batch = []
                         eng._takes = []
                         eng.queue.clear()

@@ -184,6 +184,16 @@ class SimBackend:
     def release(self, req: Request) -> None:  # decode slot free
         pass
 
+    def prefix_inserted(self, req: Request, cache, now: float) -> None:
+        """Called right after the engine inserted ``req``'s prompt into
+        its radix cache: a paged real backend attaches the request's KV
+        pool pages to the just-created nodes (zero-copy prefix reuse)
+        and drops its own in-flight references."""
+
+    def abort_prefill(self, reqs: List[Request]) -> None:
+        """In-flight prefill work was lost (instance failure): a paged
+        real backend releases the page references it stashed for it."""
+
 
 # ---------------------------------------------------------------------------
 # Drain / park lifecycle (EcoScale scale-in)
@@ -379,6 +389,7 @@ class PrefillEngine(ParkableEngine):
                 if self.cache is not None and r.prompt_tokens:
                     self.cache.unlock(self._locks.pop(r.rid, None))
                     self.cache.insert(r.prompt_tokens, now)
+                    self.backend.prefix_inserted(r, self.cache, now)
                 done.append(r)
             else:
                 r.phase = Phase.QUEUED_PREFILL
@@ -412,6 +423,10 @@ class DecodeEngine(ParkableEngine):
     # tier preemption: max evictions per request (0 = preemption off);
     # set by the cluster when SLO tiers are enabled
     preempt_cap: int = 0
+    # paged KV accounting: footprints round up to whole pages, so
+    # admission/headroom/cost all see the fragmentation a block-pool
+    # allocator actually pays (0 = legacy token granularity, bit-exact)
+    page_size: int = 0
 
     waiting: TierQueue = field(default_factory=TierQueue)
     running: List[Request] = field(default_factory=list)
@@ -436,18 +451,28 @@ class DecodeEngine(ParkableEngine):
         return not self.running and not self.waiting
 
     # -- state-space coordinates (what the router sees) --------------------
+    def _kv_footprint(self, n_tokens: int) -> int:
+        """Resident KV footprint of an ``n_tokens``-long sequence: the
+        tokens themselves, or — paged — their whole-page padding (a
+        sequence owns its tail page even when half empty, and decode
+        attention streams whole pages)."""
+        if self.page_size <= 0 or n_tokens <= 0:
+            return n_tokens
+        ps = self.page_size
+        return -(-n_tokens // ps) * ps
+
     @property
     def n_req(self) -> int:
         return len(self.running)
 
     @property
     def n_kv(self) -> int:
-        return sum(r.kv_len for r in self.running)
+        return sum(self._kv_footprint(r.kv_len) for r in self.running)
 
     @property
     def kv_headroom(self) -> int:
         return self.kv_capacity_tokens - self.n_kv - sum(
-            r.kv_len for r in self.waiting
+            self._kv_footprint(r.kv_len) for r in self.waiting
         )
 
     @property
@@ -467,7 +492,8 @@ class DecodeEngine(ParkableEngine):
     def _fits(self, r: Request) -> bool:
         return (
             len(self.running) < self.max_running
-            and self.n_kv + r.kv_len + len(self.running)
+            and self.n_kv + self._kv_footprint(r.kv_len)
+            + len(self.running)
             <= self.kv_capacity_tokens
         )
 
@@ -726,6 +752,7 @@ class HybridEngine(DecodeEngine):
                 if self.cache is not None and r.prompt_tokens:
                     self.cache.unlock(self._locks.pop(r.rid, None))
                     self.cache.insert(r.prompt_tokens, now)
+                    self.backend.prefix_inserted(r, self.cache, now)
                 self.enqueue(r)  # local decode join, no migration
             else:
                 r.phase = Phase.QUEUED_PREFILL
@@ -735,6 +762,7 @@ class HybridEngine(DecodeEngine):
 
     def fail(self) -> List[Request]:
         p_lost = list(self.p_current) + list(self.pqueue)
+        self.backend.abort_prefill(p_lost)
         if self.cache is not None:
             for handle in self._locks.values():
                 self.cache.unlock(handle)

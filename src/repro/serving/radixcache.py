@@ -39,6 +39,9 @@ class RadixNode:
     children: Dict[int, "RadixNode"] = field(default_factory=dict)
     last_access: float = 0.0
     locks: int = 0  # in-flight prefills pinned on this path
+    # KV pool page ids backing this edge's tokens (PagedRadixCache only;
+    # the cache holds one pool reference per attached page)
+    pages: List[int] = field(default_factory=list)
 
     @property
     def is_leaf(self) -> bool:
@@ -82,6 +85,12 @@ class RadixCache:
             node = child
         return node, matched
 
+    def _cap(self, matched: int, n: int) -> int:
+        """Usable match length: the last prompt token always computes
+        (its logits are the first output).  Paged subclasses also
+        quantize to whole pages here."""
+        return min(matched, n - 1)
+
     def match_len(self, tokens: Optional[Sequence[int]]) -> int:
         """Longest cached prefix of ``tokens`` — pure peek, no touch.
 
@@ -91,14 +100,14 @@ class RadixCache:
         if not tokens:
             return 0
         _, matched = self._walk(tokens)
-        return min(matched, len(tokens) - 1)
+        return self._cap(matched, len(tokens))
 
     def lookup(self, tokens: Optional[Sequence[int]], now: float) -> int:
         """Longest cached prefix; touches the path's recency."""
         if not tokens:
             return 0
         node, matched = self._walk(tokens)
-        matched = min(matched, len(tokens) - 1)
+        matched = self._cap(matched, len(tokens))
         self.lookup_tokens += len(tokens)
         self.hit_tokens += matched
         while node is not None:
@@ -208,3 +217,183 @@ class RadixCache:
 
     def reset_stats(self) -> None:
         self.hit_tokens = self.lookup_tokens = self.evicted_tokens = 0
+
+
+# ---------------------------------------------------------------------------
+# Page-granular radix cache (paged KV pool)
+# ---------------------------------------------------------------------------
+
+
+class PagedRadixCache(RadixCache):
+    """Radix prefix cache whose unit of sharing is a whole KV **page**.
+
+    Every edge spans a multiple of ``page_size`` tokens and children are
+    keyed by the edge's *first page* (two prompts diverging mid-page
+    share nothing — their page contents differ, so their KV pages can't
+    be shared either).  Matches, inserts and splits all quantize to page
+    boundaries, which keeps the control plane's ``cached_len`` exactly
+    equal to what a paged real backend can reuse.
+
+    With a :class:`~repro.serving.kvpool.KVPool` bound (``pool``), nodes
+    additionally hold the page ids backing their tokens
+    (:meth:`attach_pages` / :meth:`match_pages`): a prefix hit hands the
+    hitting request the *same physical pages* — zero-copy reuse — and
+    eviction releases the cache's references back to the pool.  Without
+    a pool (the simulator) the cache is pure accounting, bit-identical
+    in match lengths and eviction order, which is what keeps Sim/Real
+    backend parity through the paged path.
+    """
+
+    def __init__(self, capacity_tokens: int = 1 << 60,
+                 page_size: int = 16, pool=None):
+        super().__init__(capacity_tokens)
+        assert page_size > 0
+        self.page_size = int(page_size)
+        self.pool = pool  # KVPool (real backend) or None (simulation)
+
+    # -- page arithmetic ----------------------------------------------------
+    def _quant(self, n: int) -> int:
+        return (n // self.page_size) * self.page_size
+
+    def _cap(self, matched: int, n: int) -> int:
+        return self._quant(min(matched, n - 1))
+
+    def _key(self, tokens: Sequence[int]) -> Tuple[int, ...]:
+        """Child key: the edge's first page."""
+        return tuple(tokens[: self.page_size])
+
+    def _common_pages(self, a: Sequence[int], b: Sequence[int]) -> int:
+        """Longest common prefix in whole pages (token count)."""
+        ps = self.page_size
+        n = min(len(a), len(b)) // ps
+        i = 0
+        while i < n and tuple(a[i * ps:(i + 1) * ps]) \
+                == tuple(b[i * ps:(i + 1) * ps]):
+            i += 1
+        return i * ps
+
+    # -- overridden tree navigation ----------------------------------------
+    def _walk(self, tokens: Sequence[int]) -> Tuple[RadixNode, int]:
+        tokens = tuple(tokens)
+        node, matched = self.root, 0
+        while matched + self.page_size <= len(tokens):
+            child = node.children.get(self._key(tokens[matched:]))
+            if child is None:
+                break
+            k = self._common_pages(child.tokens, tokens[matched:])
+            matched += k
+            if k < len(child.tokens):
+                break
+            node = child
+        return node, matched
+
+    def insert(self, tokens: Optional[Sequence[int]], now: float) -> int:
+        """Add ``tokens``' whole-page prefix (the sub-page tail is never
+        shareable, so it is never cached)."""
+        if not tokens:
+            return 0
+        tokens = tuple(tokens[: self._quant(len(tokens))])
+        if not tokens:
+            return 0
+        node, pos = self.root, 0
+        added = 0
+        while pos < len(tokens):
+            child = node.children.get(self._key(tokens[pos:]))
+            if child is None:
+                leaf = RadixNode(tokens[pos:], parent=node, last_access=now)
+                node.children[self._key(tokens[pos:])] = leaf
+                added += len(leaf.tokens)
+                node = leaf
+                break
+            k = self._common_pages(child.tokens, tokens[pos:])
+            if k < len(child.tokens):
+                child = self._split(child, k)
+            node, pos = child, pos + k
+            node.last_access = now
+        self.size_tokens += added
+        self._evict_to_fit()
+        return added
+
+    def _split(self, node: RadixNode, k: int) -> RadixNode:
+        assert k % self.page_size == 0, (k, self.page_size)
+        parent = node.parent
+        upper = RadixNode(
+            node.tokens[:k], parent=parent,
+            last_access=node.last_access, locks=node.locks,
+        )
+        if node.pages:  # the page ids split with the edge
+            kp = k // self.page_size
+            upper.pages = node.pages[:kp]
+            node.pages = node.pages[kp:]
+        lower_tokens = node.tokens[k:]
+        node.tokens = lower_tokens
+        node.parent = upper
+        upper.children[self._key(lower_tokens)] = node
+        parent.children[self._key(upper.tokens)] = upper
+        return upper
+
+    def _remove_leaf(self, leaf: RadixNode) -> None:
+        self.size_tokens -= len(leaf.tokens)
+        self.evicted_tokens += len(leaf.tokens)
+        del leaf.parent.children[self._key(leaf.tokens)]
+        if leaf.pages:
+            if self.pool is not None:
+                self.pool.decref(leaf.pages)
+            leaf.pages = []
+
+    # -- page payloads (real backend) --------------------------------------
+    def attach_pages(self, tokens: Sequence[int],
+                     pages: Sequence[int]) -> int:
+        """Attach pool pages to the already-inserted path of ``tokens``
+        (``pages[i]`` backs tokens ``[i*ps, (i+1)*ps)``); the cache
+        takes its own pool reference on every page it retains.  Nodes
+        that already carry pages keep them (same token path ⇒ identical
+        KV content).  Returns the number of pages newly attached."""
+        if self.pool is None or not tokens:
+            return 0
+        tokens = tuple(tokens[: self._quant(len(tokens))])
+        node, matched, attached = self.root, 0, 0
+        while matched < len(tokens):
+            child = node.children.get(self._key(tokens[matched:]))
+            if child is None:
+                break
+            k = self._common_pages(child.tokens, tokens[matched:])
+            if k < len(child.tokens):
+                break  # pages attach whole-edge only
+            if not child.pages:
+                lo = matched // self.page_size
+                hi = (matched + k) // self.page_size
+                child.pages = list(pages[lo:hi])
+                self.pool.incref(child.pages)
+                attached += hi - lo
+            node, matched = child, matched + k
+        return attached
+
+    def match_pages(self, tokens: Optional[Sequence[int]]
+                    ) -> Tuple[int, List[int]]:
+        """Longest prefix of ``tokens`` covered by *resident pages*:
+        ``(n_tokens, page_ids)``, page-aligned and capped at
+        ``len(tokens) - 1`` exactly like :meth:`lookup`.  The ids are
+        returned un-retained — callers incref before relying on them
+        (single-threaded event loop: nothing evicts in between)."""
+        if self.pool is None or not tokens:
+            return 0, []
+        tokens = tuple(tokens)
+        node, matched = self.root, 0
+        pages: List[int] = []
+        while matched < len(tokens):
+            child = node.children.get(self._key(tokens[matched:]))
+            if child is None:
+                break
+            k = self._common_pages(child.tokens, tokens[matched:])
+            if not child.pages:
+                break
+            if k < len(child.tokens):
+                pages.extend(child.pages[: k // self.page_size])
+                matched += k
+                break
+            pages.extend(child.pages)
+            matched += k
+            node = child
+        n = self._cap(matched, len(tokens))
+        return n, pages[: n // self.page_size]

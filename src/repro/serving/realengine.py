@@ -3,14 +3,24 @@
 Drop-in replacement for :class:`~repro.serving.engine.SimBackend`: the
 cluster's schedulers/controllers/routers are untouched; this backend
 additionally runs real forwards of a (reduced) model, so examples and
-integration tests exercise tokens end-to-end:
+integration tests exercise tokens end-to-end.
 
-* prefill: one ``model.prefill`` per request (B=1, prompt padded to a
-  power-of-two bucket to bound recompilation), emitting the real first
-  token and stashing the request's KV/SSM cache for migration.
-* decode: a slot-batched ``model.decode_step`` per engine iteration over
-  a fixed-capacity cache; requests are scattered into free slots on admit
-  and freed on completion (continuous batching over real state).
+Two memory models, selected by ``paged``:
+
+* **dense** (``paged=False``, the legacy default, bit-exact with the
+  pre-paged backend): prefill runs B=1 with the prompt padded to a
+  power-of-two bucket (clamped to ``max_len``) and stashes a
+  per-request dense KV cache for migration; decode scatters requests
+  into slots of a ``slots × max_len`` ring cache.
+* **paged** (``paged=True``): KV lives in a
+  :class:`~repro.serving.kvpool.KVPool` of fixed-size pages backed by
+  one physical ``(pool_pages, page_size, …)`` array set
+  (:func:`repro.models.model.init_paged_cache`).  Prefill writes
+  straight into pool pages; radix prefix-cache hits hand the request
+  the *same* pages (refcount > 1, zero recomputation — see
+  :class:`~repro.serving.radixcache.PagedRadixCache`); decode grows a
+  per-slot block table page by page; P→D migration copies whole pages;
+  release/preemption returns pages to the pool.
 
 The **virtual clock still advances by the hardware model's time** — CPU
 wall time is meaningless for TPU SLO semantics — so latency/energy results
@@ -18,7 +28,6 @@ are identical between backends; only token content differs (real here).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from functools import partial
 from typing import Dict, List, Optional
 
@@ -30,13 +39,20 @@ from repro.configs.base import ModelConfig
 from repro.core.hwmodel import HardwareModel
 from repro.models import model as M
 from repro.serving.engine import SimBackend
+from repro.serving.kvpool import BlockTable, KVPool, PageAllocError
+from repro.serving.radixcache import PagedRadixCache
 from repro.serving.request import Request
 
 
-def _bucket(n: int, lo: int = 16) -> int:
+def _bucket(n: int, lo: int = 16, hi: Optional[int] = None) -> int:
+    """Power-of-two padding bucket, clamped to the cache capacity: a
+    70-token prompt with ``max_len=96`` pads to 96, not to an impossible
+    128 (capacity itself is checked separately, on the *token* count)."""
     b = lo
     while b < n:
         b *= 2
+    if hi is not None:
+        b = min(b, hi)
     return b
 
 
@@ -53,42 +69,156 @@ class RealBackend(SimBackend):
         max_len: int = 256,
         noise_sigma: float = 0.0,
         seed: int = 0,
+        paged: bool = False,
+        page_size: int = 16,
+        pool_pages: Optional[int] = None,
     ):
         super().__init__(hw, noise_sigma, seed)
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
-        # decode slot state
-        self.cache = M.init_cache(cfg, slots, max_len)
+        self.paged = paged
+        # decode slot state (both memory models batch decode over slots)
         self.slot_of: Dict[int, int] = {}  # rid -> slot
         self.free = list(range(slots))[::-1]
         self.next_tok = np.zeros(slots, np.int32)
         self.pos = np.zeros(slots, np.int32)
 
-        self._prefill_jit = jax.jit(
-            partial(M.prefill, cfg=cfg, max_len=max_len),
-            static_argnames=(),
+        if paged:
+            assert max_len % page_size == 0, (max_len, page_size)
+            self.page_size = page_size
+            self.max_pages = max_len // page_size
+            # worst case: every decode slot at max_len, plus in-flight
+            # prefill tables and radix-shared prefix pages
+            self.pool_pages = pool_pages or (2 * slots + 8) * self.max_pages
+            self.pool = KVPool(self.pool_pages, page_size)
+            self.kvcache = M.init_paged_cache(cfg, self.pool_pages, page_size)
+            self.block_tables = np.full(
+                (slots, self.max_pages), -1, np.int32
+            )
+            self.table_of: Dict[int, BlockTable] = {}  # rid -> resident table
+            # prefill tables awaiting the radix attach at iteration end
+            self._pstash: Dict[int, List[int]] = {}
+            self._radix: Optional[PagedRadixCache] = None
+            # observability (acceptance: prefix hits skip real compute)
+            self.reused_tokens = 0
+            self.computed_tokens = 0
+            self._prefill_jit = jax.jit(partial(M.prefill_paged, cfg=cfg))
+            self._decode_jit = jax.jit(partial(M.decode_step_paged, cfg=cfg))
+        else:
+            self.cache = M.init_cache(cfg, slots, max_len)
+            self._prefill_jit = jax.jit(
+                partial(M.prefill, cfg=cfg, max_len=max_len),
+                static_argnames=(),
+            )
+            self._decode_jit = jax.jit(partial(M.decode_step, cfg=cfg))
+
+    # ------------------------------------------------------------------
+    # Paged plumbing
+    # ------------------------------------------------------------------
+    def bind_prefix_cache(self, cache) -> None:
+        """Wire the engine's radix cache to this backend's page pool so
+        cache nodes can hold page refs (called by the cluster; no-op for
+        dense backends or plain token-granular caches).
+
+        The cache's capacity must fit the pool's spare room after every
+        decode slot maxes out.  Silently shrinking it instead would make
+        the Real side evict prefixes the Sim side keeps — breaking the
+        Sim==Real parity contract — so a misfit fails loudly here.
+        """
+        if not self.paged or not isinstance(cache, PagedRadixCache):
+            return
+        budget = (self.pool_pages - self.slots * self.max_pages) \
+            * self.page_size
+        if cache.capacity_tokens > budget:
+            raise ValueError(
+                f"prefix cache capacity ({cache.capacity_tokens} tokens) "
+                f"exceeds the page pool's spare room ({budget} tokens "
+                f"after reserving {self.slots} slots × {self.max_len}); "
+                "raise pool_pages on make_real_backend_factory or lower "
+                "ClusterConfig.prefix_cache_capacity"
+            )
+        cache.pool = self.pool
+        self._radix = cache
+
+    def _evict_radix_for(self, n: int) -> bool:
+        """Best-effort: shed cold radix-held pages so ``n`` more can be
+        allocated (locked / in-flight pages are pinned and survive).
+        Returns False when there is no radix cache to shed from."""
+        if self._radix is None:
+            return False
+        cap0 = self._radix.capacity_tokens
+        self._radix.capacity_tokens = max(
+            0, self._radix.size_tokens - n * self.page_size
         )
-        self._decode_jit = jax.jit(partial(M.decode_step, cfg=cfg))
+        self._radix._evict_to_fit()
+        self._radix.capacity_tokens = cap0
+        return True
+
+    def _alloc_pages(self, n: int) -> List[int]:
+        """Pool allocation with the radix-shedding fallback.  If even
+        that cannot free enough (everything pinned by in-flight work),
+        the PageAllocError propagates: an under-provisioned pool is a
+        sizing misconfiguration and must fail loudly, not wedge."""
+        try:
+            return self.pool.alloc(n)
+        except PageAllocError:
+            if not self._evict_radix_for(n):
+                raise
+            return self.pool.alloc(n)
+
+    def prefix_inserted(self, r: Request, cache, now: float) -> None:
+        """Engine hook: the prompt just entered the radix cache — attach
+        its full pages (the cache takes its own refs), then release the
+        in-flight references the prefill stashed."""
+        if not self.paged:
+            return
+        table = self._pstash.pop(r.rid, None)
+        if table is None:
+            return
+        if self._radix is not None and r.prompt_tokens:
+            self._radix.attach_pages(r.prompt_tokens, table)
+        self.pool.decref(table)
+
+    def abort_prefill(self, reqs: List[Request]) -> None:
+        """Engine hook: in-flight prefill lost (failure) — release the
+        stashed page references before the requests re-route."""
+        if not self.paged:
+            return
+        for r in reqs:
+            table = self._pstash.pop(r.rid, None)
+            if table:
+                self.pool.decref(table)
+            r.kv_handoff = None
 
     # ------------------------------------------------------------------
     # Prefill: real first token + cache stash
     # ------------------------------------------------------------------
-    def _real_prefill(self, r: Request) -> None:
+    def _context_tokens(self, r: Request) -> np.ndarray:
         ctx = list(r.prompt_tokens)
         if r.resuming:
             # preemption resume: recompute the KV of prompt + the tokens
             # already delivered (their ids are real and kept); the first
             # token was emitted long ago and must not be re-emitted
             ctx += [int(t) for t in r.output_tokens[: r.tokens_out]]
-        toks = np.asarray(ctx, np.int32)
-        pad = _bucket(len(toks))
-        if pad > self.max_len:
+        return np.asarray(ctx, np.int32)
+
+    def _real_prefill(self, r: Request) -> None:
+        toks = self._context_tokens(r)
+        if len(toks) > self.max_len:
             raise ValueError(
-                f"prompt {len(toks)} exceeds cache capacity "
-                f"{self.max_len}"
+                f"request {r.rid}: prompt+context of {len(toks)} tokens "
+                f"exceeds the decode cache capacity ({self.max_len}); "
+                "admission must reject or truncate it upstream"
             )
+        if self.paged:
+            self._real_prefill_paged(r, toks)
+        else:
+            self._real_prefill_dense(r, toks)
+
+    def _real_prefill_dense(self, r: Request, toks: np.ndarray) -> None:
+        pad = _bucket(len(toks), hi=self.max_len)
         buf = np.zeros((1, pad), np.int32)
         buf[0, : len(toks)] = toks
         logits, cache = self._prefill_jit(
@@ -101,6 +231,56 @@ class RealBackend(SimBackend):
             r.output_tokens.append(first)
         r.kv_handoff = cache  # migrates with the request (P -> D)
 
+    def _real_prefill_paged(self, r: Request, toks: np.ndarray) -> None:
+        """Prefill into pool pages.  A radix prefix hit contributes its
+        resident pages (incref, zero recomputation); only the suffix
+        runs the forward, writing its KV into freshly allocated pages."""
+        L = len(toks)
+        n_ctx, ctx_pages = 0, []
+        if self._radix is not None:
+            n_ctx, ctx_pages = self._radix.match_pages(toks.tolist())
+        self.pool.incref(ctx_pages)
+        try:
+            new_pages = self._alloc_pages(
+                self.pool.pages_for(L) - len(ctx_pages)
+            )
+        except PageAllocError:
+            self.pool.decref(ctx_pages)
+            raise
+        table = list(ctx_pages) + new_pages
+        S = L - n_ctx
+        pad = _bucket(S, hi=self.max_len)
+        buf = np.zeros((1, pad), np.int32)
+        buf[0, :S] = toks[n_ctx:]
+        bt = np.full((1, self.max_pages), -1, np.int32)
+        bt[0, : len(table)] = table
+        logits, self.kvcache = self._prefill_jit(
+            self.params,
+            tokens=jnp.asarray(buf),
+            lengths=jnp.asarray([S], jnp.int32),
+            ctx_lens=jnp.asarray([n_ctx], jnp.int32),
+            block_tables=jnp.asarray(bt),
+            cache=self.kvcache,
+        )
+        if not r.resuming:
+            r.output_tokens.append(int(jnp.argmax(logits[0])))
+        # migration payload: the request's pages, gathered page-stack —
+        # the decode side scatters them into its own pool
+        idx = np.asarray(table)
+        r.kv_handoff = (
+            jax.tree.map(lambda x: x[:, idx], self.kvcache), L
+        )
+        self.reused_tokens += n_ctx
+        self.computed_tokens += S
+        if self._radix is not None and r.prompt_tokens:
+            # refs live until the radix attach at iteration end (the
+            # engine's prefix_inserted hook) or an abort on failure
+            self._pstash[r.rid] = table
+        else:
+            # no radix to hand the pages to: the handoff copy is taken,
+            # release them now
+            self.pool.decref(table)
+
     def prefill_iter(self, reqs: List[Request], n_tok: int, f: float):
         for r in reqs:
             self._real_prefill(r)
@@ -109,9 +289,8 @@ class RealBackend(SimBackend):
     def prefill_chunk(self, reqs: List[Request], takes, n_new: int,
                       n_ctx: int, f: float):
         """Chunked scheduling over real compute: the virtual clock/energy
-        price each chunk, but the actual forward runs whole-prompt on the
-        *final* chunk (prefix-cache hits must not change token content —
-        the simulator's cache stores token counts, not real KV)."""
+        price each chunk, but the actual forward runs on the *final*
+        chunk (dense: whole prompt; paged: the post-prefix suffix)."""
         for r, take in zip(reqs, takes):
             if take >= r.prefill_remaining:
                 self._real_prefill(r)
@@ -124,13 +303,31 @@ class RealBackend(SimBackend):
         assert self.free, "no free decode slots (max_running too high?)"
         slot = self.free.pop()
         self.slot_of[req.rid] = slot
-        cache, req.kv_handoff = req.kv_handoff, None
+        handoff, req.kv_handoff = req.kv_handoff, None
 
-        def put(dst, src):
-            # dst: (n_blocks, slots, ...); src: (n_blocks, 1, ...)
-            return dst.at[:, slot].set(src[:, 0])
+        if self.paged:
+            tree, L = handoff
+            table = BlockTable(self.pool)
+            table.adopt(self._alloc_pages(self.pool.pages_for(L)), L)
+            dst = np.asarray(table.pages)
 
-        self.cache = jax.tree.map(put, self.cache, cache)
+            def put(cache_leaf, src):
+                # cache_leaf: (n_blocks, P+1, ps, ...); src: the
+                # request's page stack (n_blocks, n_pages, ps, ...)
+                return cache_leaf.at[:, dst].set(src)
+
+            self.kvcache = jax.tree.map(put, self.kvcache, tree)
+            self.table_of[req.rid] = table
+            self.block_tables[slot] = -1
+            self.block_tables[slot, : len(table.pages)] = table.pages
+        else:
+            cache = handoff
+
+            def put(dst_leaf, src):
+                # dst: (n_blocks, slots, ...); src: (n_blocks, 1, ...)
+                return dst_leaf.at[:, slot].set(src[:, 0])
+
+            self.cache = jax.tree.map(put, self.cache, cache)
         self.next_tok[slot] = req.output_tokens[-1]
         # resident context = prompt + tokens regenerated before a
         # preemption (fresh requests: tokens_out == 0)
@@ -139,14 +336,43 @@ class RealBackend(SimBackend):
     def release(self, req: Request) -> None:
         slot = self.slot_of.pop(req.rid)
         self.free.append(slot)
+        if self.paged:
+            table = self.table_of.pop(req.rid, None)
+            if table is not None:
+                table.release()
+            self.block_tables[slot] = -1
 
     def _real_decode_step(self, reqs: List[Request]) -> None:
-        logits, self.cache = self._decode_jit(
-            self.params,
-            tokens=jnp.asarray(self.next_tok),
-            cache=self.cache,
-            lengths=jnp.asarray(self.pos),
-        )
+        if self.paged:
+            # grow tail pages where the next write crosses a boundary
+            for r in reqs:
+                s = self.slot_of[r.rid]
+                table = self.table_of[r.rid]
+                need = int(self.pos[s]) + 1
+                try:
+                    fresh = table.ensure(need)
+                except PageAllocError:
+                    short = self.pool.pages_for(need) - len(table.pages)
+                    if not self._evict_radix_for(short):
+                        raise
+                    fresh = table.ensure(need)
+                if fresh:
+                    n = len(table.pages)
+                    self.block_tables[s, n - len(fresh): n] = fresh
+            logits, self.kvcache = self._decode_jit(
+                self.params,
+                tokens=jnp.asarray(self.next_tok),
+                cache=self.kvcache,
+                lengths=jnp.asarray(self.pos),
+                block_tables=jnp.asarray(self.block_tables),
+            )
+        else:
+            logits, self.cache = self._decode_jit(
+                self.params,
+                tokens=jnp.asarray(self.next_tok),
+                cache=self.cache,
+                lengths=jnp.asarray(self.pos),
+            )
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         for r in reqs:
             s = self.slot_of[r.rid]
@@ -179,18 +405,18 @@ def make_real_backend_factory(
     *,
     slots: int = 8,
     max_len: int = 256,
+    paged: bool = False,
+    page_size: int = 16,
+    pool_pages: Optional[int] = None,
 ):
     """Factory for ClusterConfig.backend_factory: every instance gets its
-    own slot state but shares the (read-only) weights."""
+    own slot/pool state but shares the (read-only) weights."""
 
     def factory(kind: str, idx: int, hw: HardwareModel, seed: int):
-        if kind in ("decode", "hybrid"):
-            return RealBackend(
-                hw, cfg, params, slots=slots, max_len=max_len, seed=seed
-            )
-        # prefill instances stash per-request caches; slot state unused
+        n_slots = slots if kind in ("decode", "hybrid") else 1
         return RealBackend(
-            hw, cfg, params, slots=1, max_len=max_len, seed=seed
+            hw, cfg, params, slots=n_slots, max_len=max_len, seed=seed,
+            paged=paged, page_size=page_size, pool_pages=pool_pages,
         )
 
     return factory

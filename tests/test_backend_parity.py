@@ -11,7 +11,11 @@ backend adds token content, never timing drift.  Covered paths:
 * ``hybrid-tiered`` — chunked prefill + a hybrid (decode+chunk)
   instance under SLO-tiered traffic: EDF/priority queues, tier-aware
   EcoFreq budgets and the tier-aware decode router must make identical
-  decisions over identical virtual clocks.
+  decisions over identical virtual clocks;
+* ``paged-pd``      — the paged KV path: page-padded decode admission/
+  headroom, per-page migration pricing and (real side) a block-pool
+  allocator + block-table decode must leave the virtual clock exactly
+  where the Sim backend's page-granular accounting puts it.
 """
 import dataclasses
 
@@ -69,6 +73,15 @@ SCENARIOS = {
     "hybrid-tiered": dict(
         prefill_chunk_tokens=32, n_hybrid=1, slo_tiers=DEFAULT_TIERS
     ),
+    # n_hybrid=1 also exercises the paged local decode join (prefill
+    # chunk -> same instance's pool, no migration)
+    "paged-pd": dict(prefill_chunk_tokens=32, paged=True, kv_page_size=16,
+                     n_hybrid=1),
+}
+
+# backend-side knobs matching each scenario's memory model
+BACKEND_KW = {
+    "paged-pd": dict(paged=True, page_size=16),
 }
 
 
@@ -93,7 +106,8 @@ def test_sim_and_real_backends_agree(rc, rparams, pred, scenario):
     m_real = PDCluster(_cfg(
         pred, scenario,
         backend_factory=make_real_backend_factory(
-            rc, rparams, slots=8, max_len=128
+            rc, rparams, slots=8, max_len=128,
+            **BACKEND_KW.get(scenario, {}),
         ),
     )).run(reqs_real)
 
@@ -157,19 +171,23 @@ def _pressure_cfg(pred, **kw):
     return ClusterConfig(**base)
 
 
-def test_real_backend_preemption_resume(rc, rparams, pred):
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_real_backend_preemption_resume(rc, rparams, pred, paged):
     """The recompute-on-resume path must run over *real* compute: the
     resume prefill rebuilds KV from prompt + already-delivered ids, the
     first token is not re-emitted, and Sim/Real timing parity holds
-    through preempt/resume."""
+    through preempt/resume.  On the paged path an eviction must also
+    return the victim's pages to the pool (admission re-fits by pages)."""
     reqs_sim = _pressure_workload(rc)
     reqs_real = _pressure_workload(rc)
 
-    m_sim = PDCluster(_pressure_cfg(pred)).run(reqs_sim)
+    kw = dict(paged=True, kv_page_size=16) if paged else {}
+    bkw = dict(paged=True, page_size=16) if paged else {}
+    m_sim = PDCluster(_pressure_cfg(pred, **kw)).run(reqs_sim)
     m_real = PDCluster(_pressure_cfg(
-        pred,
+        pred, **kw,
         backend_factory=make_real_backend_factory(
-            rc, rparams, slots=8, max_len=128
+            rc, rparams, slots=8, max_len=128, **bkw
         ),
     )).run(reqs_real)
 
@@ -182,6 +200,126 @@ def test_real_backend_preemption_resume(rc, rparams, pred):
         # delivered exactly decode_len + 1 ids, across preempt/resume
         assert len(rr.output_tokens) == rr.decode_len + 1
     assert m_sim.energy_j() == pytest.approx(m_real.energy_j(), rel=1e-9)
+
+
+def _multiturn_reqs(rc, n_convs=2, n_turns=3, system_len=48):
+    """Conversations sharing a system prompt, each turn a strict
+    extension of the last — the zero-copy prefix-sharing workload."""
+    import numpy as np
+
+    from repro.serving import Request
+
+    rng = np.random.default_rng(11)
+    system = rng.integers(0, rc.vocab_size, system_len).tolist()
+    hist = {c: list(system) for c in range(n_convs)}
+    reqs, rid = [], 0
+    for turn in range(n_turns):
+        for c in range(n_convs):
+            prompt = hist[c] + rng.integers(0, rc.vocab_size, 8).tolist()
+            r = Request(rid, 2.0 * turn + 0.3 * c, prompt_len=len(prompt),
+                        decode_len=4, conv_id=c, turn=turn)
+            r.prompt_tokens = list(prompt)
+            reqs.append(r)
+            rid += 1
+            hist[c] = prompt + [0] * 4  # prompt + synthetic outputs
+    return reqs
+
+
+def test_paged_real_multiturn_prefix_reuse_is_zero_copy(rc, rparams, pred):
+    """Acceptance: a real multi-turn run over the paged backend reuses
+    prefix KV *pages* — shared pages show refcount > 1 in the pool, the
+    reused tokens never re-enter the forward pass, and the pool balances
+    (no leak) once the run drains."""
+    reqs = _multiturn_reqs(rc)
+    cfg = ClusterConfig(
+        model=MODEL, chip=A100, n_prefill=1, n_decode=1,
+        policy="voltana", predictor=pred, kv_capacity_tokens=400_000,
+        online_adapt=False, decode_max_running=8, seed=4,
+        noise_sigma=0.0, prefill_chunk_tokens=64,
+        prefix_cache=True, prefix_cache_capacity=2_048,
+        paged=True, kv_page_size=16,
+        backend_factory=make_real_backend_factory(
+            rc, rparams, slots=8, max_len=128,
+            paged=True, page_size=16, pool_pages=256,
+        ),
+    )
+    cl = PDCluster(cfg)
+    m = cl.run(reqs)
+    assert m.finished_frac() == 1.0
+    assert m.prefix_hit_rate and m.prefix_hit_rate > 0.3
+
+    pb = cl.prefill[0].backend
+    total_prompt = sum(r.prompt_len for r in reqs)
+    # prefix-hit tokens skipped the forward entirely (zero recompute)
+    assert pb.reused_tokens > 0
+    assert pb.computed_tokens == total_prompt - pb.reused_tokens
+    # sharing showed up as refcount > 1 (request + radix / two turns)
+    assert pb.pool.stats.max_refcount > 1
+    # every delivered stream is complete and real
+    for r in reqs:
+        assert len(r.output_tokens) == r.decode_len + 1
+    # pool hygiene after drain: only radix-held pages remain, and the
+    # pool's refcounts match the tree exactly (no leaked request refs)
+    radix_pages = _radix_pages(cl.prefill[0].cache)
+    assert pb.pool.in_use == len(set(radix_pages))
+    assert all(pb.pool.refcount(p) == 1 for p in radix_pages)
+    # decode side released everything
+    db = cl.decode[0].backend
+    db.pool.assert_empty()
+
+
+def _radix_pages(cache):
+    pages = []
+    stack = [cache.root]
+    while stack:
+        n = stack.pop()
+        stack.extend(n.children.values())
+        pages.extend(n.pages)
+    return pages
+
+
+def test_paged_prefill_failure_releases_stashed_pages(rc, rparams, pred):
+    """A prefill instance dying with work in flight must release the
+    page references stashed for the radix attach (abort_prefill), and
+    the survivors must still drain the trace with balanced pools."""
+    reqs = _pressure_workload(rc)
+    cfg = _pressure_cfg(
+        pred, n_prefill=2, n_decode=2, kv_capacity_tokens=400_000,
+        prefix_cache=True, prefix_cache_capacity=1_024,
+        paged=True, kv_page_size=16,
+        backend_factory=make_real_backend_factory(
+            rc, rparams, slots=8, max_len=128, paged=True, page_size=16,
+        ),
+    )
+    cl = PDCluster(cfg)
+    cl.schedule_failure(0.05, "prefill", 0)
+    m = cl.run(reqs)
+    assert m.finished_frac() == 1.0
+    for r in reqs:
+        assert len(r.output_tokens) == r.decode_len + 1
+    # the dead instance's stash was aborted; its pool refcounts reduce
+    # to exactly what its radix tree still holds
+    dead = cl.prefill[0].backend
+    assert not dead._pstash
+    assert dead.pool.in_use == len(set(_radix_pages(cl.prefill[0].cache)))
+    # decode pools fully drained
+    for e in cl.decode:
+        e.backend.pool.assert_empty()
+
+
+def test_paged_off_is_default_and_token_granular():
+    """paged=False (the default) keeps token-granular accounting: the
+    page-padding helpers must be inert so pre-paged runs stay
+    bit-exact."""
+    from repro.serving.engine import DecodeEngine
+
+    assert ClusterConfig.__dataclass_fields__["paged"].default is False
+    assert DecodeEngine.__dataclass_fields__["page_size"].default == 0
+    eng = DecodeEngine.__new__(DecodeEngine)
+    eng.page_size = 0
+    assert eng._kv_footprint(37) == 37
+    eng.page_size = 16
+    assert eng._kv_footprint(37) == 48
 
 
 def test_real_backend_failure_restart_token_hygiene(rc, rparams, pred):

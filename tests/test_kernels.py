@@ -4,7 +4,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.decode_attention import decode_attention, decode_attention_ref
+from repro.kernels.decode_attention import (
+    decode_attention,
+    decode_attention_ref,
+    paged_decode_attention,
+    paged_decode_attention_ref,
+)
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.ssd import ssd_ref, ssd_scan
 
@@ -57,6 +62,86 @@ def test_decode_attention_sweep(B, C, Hq, Hkv, Dh, block_c, dtype):
         np.asarray(out, np.float32), np.asarray(ref, np.float32),
         atol=TOL[dtype], rtol=TOL[dtype],
     )
+
+
+@pytest.mark.parametrize("P,ps,Hq,Hkv,Dh,Pmax", [
+    (24, 16, 4, 4, 64, 4),    # MHA
+    (32, 8, 8, 2, 64, 6),     # GQA 4:1
+    (16, 16, 6, 2, 128, 3),   # GQA 3:1, 128-dim heads
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window,softcap", [
+    (None, None), (24, None), (None, 30.0),
+])
+def test_paged_decode_attention_sweep(P, ps, Hq, Hkv, Dh, Pmax, dtype,
+                                      window, softcap):
+    """Block-table gather vs the dense oracle, ragged lengths."""
+    B = 3
+    ks = jax.random.split(jax.random.key(5), 4)
+    q = jax.random.normal(ks[0], (B, Hq, Dh), dtype)
+    kp = jax.random.normal(ks[1], (P, ps, Hkv, Dh), dtype)
+    vp = jax.random.normal(ks[2], (P, ps, Hkv, Dh), dtype)
+    # distinct pages per sequence, -1 padding past each table's end
+    perm = np.asarray(jax.random.permutation(ks[3], P))
+    lengths = np.array([1 + (ps * Pmax) // 3, ps * Pmax - 1, ps + 1])
+    bt = np.full((B, Pmax), -1, np.int32)
+    for b in range(B):
+        n = -(-int(lengths[b]) // ps)
+        bt[b, :n] = perm[b * Pmax: b * Pmax + n]
+    bt, lengths = jnp.asarray(bt), jnp.asarray(lengths, jnp.int32)
+    out = paged_decode_attention(q, kp, vp, bt, lengths,
+                                 window=window, softcap=softcap)
+    ref = paged_decode_attention_ref(q, kp, vp, bt, lengths,
+                                     window=window, softcap=softcap)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+@pytest.mark.parametrize("extra", [0, 1])
+def test_paged_decode_attention_page_boundary(extra):
+    """len % page_size == 0 (full tail page) and == 1 (one token on a
+    fresh page) — the classic off-by-one corners of paged layouts."""
+    P, ps, Hkv, Dh, Hq, B, Pmax = 12, 8, 2, 32, 4, 2, 3
+    ks = jax.random.split(jax.random.key(6), 3)
+    q = jax.random.normal(ks[0], (B, Hq, Dh))
+    kp = jax.random.normal(ks[1], (P, ps, Hkv, Dh))
+    vp = jax.random.normal(ks[2], (P, ps, Hkv, Dh))
+    L = 2 * ps + extra
+    n = -(-L // ps)
+    bt = np.full((B, Pmax), -1, np.int32)
+    bt[0, :n] = np.arange(n)
+    bt[1, :n] = np.arange(n) + 4
+    lengths = jnp.asarray([L, L], jnp.int32)
+    bt = jnp.asarray(bt)
+    out = paged_decode_attention(q, kp, vp, bt, lengths)
+    ref = paged_decode_attention_ref(q, kp, vp, bt, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_paged_matches_ring_decode_attention():
+    """The paged layout and the ring-buffer layout are two views of the
+    same cache: identical K/V content must produce identical outputs."""
+    ps, n_pages, Hkv, Dh, Hq = 8, 4, 2, 32, 4
+    C = ps * n_pages
+    ks = jax.random.split(jax.random.key(7), 3)
+    q = jax.random.normal(ks[0], (1, Hq, Dh))
+    k = jax.random.normal(ks[1], (1, C, Hkv, Dh))
+    v = jax.random.normal(ks[2], (1, C, Hkv, Dh))
+    L = 19
+    # ring view: slot i holds position i (no wrap), -1 beyond L
+    slot_pos = jnp.where(jnp.arange(C) < L, jnp.arange(C), -1)[None]
+    ring = decode_attention(q, k, v, slot_pos.astype(jnp.int32),
+                            jnp.asarray([L - 1], jnp.int32), block_c=C)
+    # paged view: the same contiguous KV chopped into pages 0..n-1
+    kp = k.reshape(n_pages, ps, Hkv, Dh)
+    vp = v.reshape(n_pages, ps, Hkv, Dh)
+    bt = jnp.arange(n_pages, dtype=jnp.int32)[None]
+    paged = paged_decode_attention(q, kp, vp, bt,
+                                   jnp.asarray([L], jnp.int32))
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(ring),
+                               atol=2e-5)
 
 
 def test_decode_attention_ring_buffer_wraparound():

@@ -1,0 +1,295 @@
+"""Paged KV memory invariants: the block-pool allocator and the
+page-granular radix cache must never leak, double-free or alias pages
+across the full request lifecycle (admit → preempt/resume → release),
+and radix-pinned pages must survive eviction while referenced.
+
+The hypothesis sweep drives a random lifecycle and checks the *exact*
+refcount equation at every step:
+
+    pool.refcount(p) == (# live request tables holding p)
+                        + (# radix nodes holding p)
+
+which simultaneously rules out leaks (count too high), double frees
+(count too low ⇒ the pool's own assertions fire), and aliasing (a page
+handed to two owners without the refs to show for it).  A fixed grid of
+seeds keeps real coverage when hypothesis isn't installed.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.kvpool import BlockTable, KVPool, PageAllocError
+from repro.serving.radixcache import PagedRadixCache
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# KVPool unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_pool_alloc_free_roundtrip():
+    pool = KVPool(8, 4)
+    a = pool.alloc(3)
+    assert pool.in_use == 3 and pool.free_pages == 5
+    assert all(pool.refcount(p) == 1 for p in a)
+    pool.decref(a)
+    pool.assert_empty()
+    assert pool.stats.allocs == 3 and pool.stats.frees == 3
+
+
+def test_pool_exhaustion_is_all_or_nothing():
+    pool = KVPool(4, 4)
+    a = pool.alloc(3)
+    with pytest.raises(PageAllocError):
+        pool.alloc(2)
+    assert pool.free_pages == 1  # the failed alloc took nothing
+    pool.decref(a)
+    pool.assert_empty()
+
+
+def test_pool_double_free_asserts():
+    pool = KVPool(4, 4)
+    (p,) = pool.alloc(1)
+    pool.decref([p])
+    with pytest.raises(AssertionError):
+        pool.decref([p])
+
+
+def test_pool_foreign_id_asserts():
+    pool = KVPool(4, 4)
+    with pytest.raises(AssertionError):
+        pool.incref([7])
+
+
+def test_pool_sharing_and_cow():
+    pool = KVPool(8, 4)
+    (p,) = pool.alloc(1)
+    pool.incref([p])  # a second holder: page is now shared
+    assert pool.shared_pages == 1
+    assert pool.stats.max_refcount == 2
+    q, copied = pool.cow(p)
+    assert copied and q != p, "shared page must copy on write"
+    assert pool.refcount(p) == 1 and pool.refcount(q) == 1
+    q2, copied2 = pool.cow(q)
+    assert not copied2 and q2 == q, "exclusive page writes in place"
+    pool.decref([p, q])
+    pool.assert_empty()
+
+
+def test_pool_arithmetic():
+    pool = KVPool(8, 16)
+    assert pool.pages_for(0) == 0
+    assert pool.pages_for(1) == 1
+    assert pool.pages_for(16) == 1
+    assert pool.pages_for(17) == 2
+    assert pool.padded(17) == 32
+
+
+def test_block_table_grow_release():
+    pool = KVPool(8, 4)
+    bt = BlockTable(pool)
+    fresh = bt.ensure(6)  # 2 pages
+    assert len(fresh) == 2 and len(bt.pages) == 2
+    assert bt.ensure(8) == []  # tail page still has room
+    assert len(bt.ensure(9)) == 1
+    bt.release()
+    pool.assert_empty()
+
+
+# ---------------------------------------------------------------------------
+# PagedRadixCache: page-quantized matching + page payloads
+# ---------------------------------------------------------------------------
+
+
+def _node_pages(cache):
+    """Every (node, pages) pair currently attached in the tree."""
+    out = []
+    stack = [cache.root]
+    while stack:
+        n = stack.pop()
+        stack.extend(n.children.values())
+        if n.pages:
+            out.append(n)
+    return out
+
+
+def test_paged_radix_quantizes_matches():
+    ps = 4
+    cache = PagedRadixCache(page_size=ps)
+    toks = list(range(11))  # 2 full pages + a 3-token tail
+    cache.insert(toks, now=0.0)
+    assert cache.size_tokens == 8, "sub-page tail is never cached"
+    assert cache.match_len(toks) == 8
+    assert cache.match_len(toks[:9]) == 8
+    # full page-aligned match still computes the last token => one page
+    # is given back
+    assert cache.match_len(toks[:8]) == 4
+    # divergence inside a page shares nothing from that page on
+    div = toks[:6] + [99, 98]
+    cache.insert(div, now=1.0)
+    assert cache.match_len(div) == 4
+
+
+def test_paged_radix_pages_follow_splits():
+    ps, pool = 4, KVPool(16, 4)
+    cache = PagedRadixCache(page_size=ps, pool=pool)
+    a = list(range(12))  # 3 pages
+    pa = pool.alloc(3)
+    cache.insert(a, now=0.0)
+    cache.attach_pages(a, pa)
+    assert pool.refcount(pa[0]) == 2  # cache ref + ours
+    # a sibling that shares the first 2 pages splits the edge
+    b = a[:8] + [77, 78, 79, 80]
+    pb = pool.alloc(3)
+    cache.insert(b, now=1.0)
+    cache.attach_pages(b, pb)
+    n, pages = cache.match_pages(a + [5])
+    assert n == 12 and pages == pa
+    n, pages = cache.match_pages(b + [5])
+    assert n == 12 and pages == pa[:2] + pb[2:]
+    # shared prefix pages were NOT double-attached (first wins)
+    assert pool.refcount(pa[0]) == 2
+    assert pool.refcount(pb[0]) == 1  # ours only; cache kept pa's
+    pool.decref(pa)
+    pool.decref(pb)
+    # the cache still owns its attached refs
+    for node in _node_pages(cache):
+        for p in node.pages:
+            assert pool.refcount(p) == 1
+
+
+def test_paged_radix_eviction_releases_pages_but_not_shared_ones():
+    ps = 4
+    pool = KVPool(16, ps)
+    cache = PagedRadixCache(capacity_tokens=2 * ps, page_size=ps, pool=pool)
+    a = list(np.arange(8))
+    pa = pool.alloc(2)
+    cache.insert(a, now=0.0)
+    cache.attach_pages(a, pa)
+    pool.decref(pa[1:])  # we keep a reference to page pa[0] only
+    b = [50, 51, 52, 53, 54, 55, 56, 57]
+    pb = pool.alloc(2)
+    cache.insert(b, now=1.0)  # over capacity: a's cold path evicts
+    cache.attach_pages(b, pb)
+    assert cache.size_tokens <= cache.capacity_tokens
+    # the evicted path released the cache's refs; pa[1] is gone but our
+    # pinned pa[0] survived with exactly our reference
+    assert pool.refcount(pa[0]) == 1
+    pool.decref([pa[0]])
+    pool.decref(pb)
+    cache.capacity_tokens = 0
+    cache._evict_to_fit()
+    pool.assert_empty()
+
+
+def test_paged_radix_locked_path_never_evicted():
+    ps = 4
+    pool = KVPool(16, ps)
+    cache = PagedRadixCache(capacity_tokens=2 * ps, page_size=ps, pool=pool)
+    a = [1, 2, 3, 4, 5, 6, 7, 8]
+    pa = pool.alloc(2)
+    cache.insert(a, now=0.0)
+    cache.attach_pages(a, pa)
+    pool.decref(pa)
+    handle = cache.lock(a)  # in-flight prefill pins the path
+    for i in range(3):  # hammer capacity with other prompts
+        cache.insert([100 + 10 * i + j for j in range(8)], now=1.0 + i)
+    n, pages = cache.match_pages(a + [9])
+    assert n == 8 and pages == pa, "locked path must survive eviction"
+    cache.unlock(handle)
+    cache.capacity_tokens = 0
+    cache._evict_to_fit()
+    pool.assert_empty()
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle property sweep: admit -> (abort|finish) -> evict, exact refs
+# ---------------------------------------------------------------------------
+
+
+def _check_refcounts(pool, cache, live):
+    """The exact refcount equation (docstring above)."""
+    expected = {p: 0 for p in range(pool.num_pages)}
+    for _, table, _ in live.values():
+        for p in table:
+            expected[p] += 1
+    for node in _node_pages(cache):
+        for p in node.pages:
+            expected[p] += 1
+    for p in range(pool.num_pages):
+        assert pool.refcount(p) == expected[p], (
+            f"page {p}: refcount {pool.refcount(p)} != "
+            f"{expected[p]} owners"
+        )
+
+
+def _run_lifecycle(seed: int, ps: int) -> None:
+    rng = np.random.default_rng(seed)
+    pool = KVPool(48, ps)
+    cache = PagedRadixCache(
+        capacity_tokens=12 * ps, page_size=ps, pool=pool
+    )
+    # a small prompt family with genuinely shared prefixes
+    base = rng.integers(0, 5, size=8 * ps).tolist()
+    prompts = []
+    for _ in range(6):
+        cut = int(rng.integers(1, 7)) * ps
+        tail = rng.integers(0, 5, size=int(rng.integers(1, 3 * ps))).tolist()
+        prompts.append(tuple(base[:cut] + tail))
+    live = {}  # rid -> (prompt, table, lock_handle)
+    rid = 0
+    now = 0.0
+    for _ in range(60):
+        now += 1.0
+        action = rng.choice(["admit", "finish", "abort"])
+        if action == "admit" or not live:
+            prompt = list(prompts[int(rng.integers(len(prompts)))])
+            n_ctx, pages = cache.match_pages(prompt)
+            pool.incref(pages)
+            try:
+                fresh = pool.alloc(pool.pages_for(len(prompt)) - len(pages))
+            except PageAllocError:
+                pool.decref(pages)
+                continue
+            live[rid] = (prompt, list(pages) + fresh, cache.lock(prompt))
+            rid += 1
+        else:
+            victim = int(rng.choice(list(live.keys())))
+            prompt, table, handle = live.pop(victim)
+            cache.unlock(handle)
+            if action == "finish":
+                # completed prefill: path enters the cache, pages attach
+                cache.insert(prompt, now)
+                cache.attach_pages(prompt, table)
+            # abort (failure/preemption): nothing enters the cache
+            pool.decref(table)
+        _check_refcounts(pool, cache, live)
+        assert cache.size_tokens <= cache.capacity_tokens
+    # drain: everything released, cache emptied => zero leaked pages
+    for prompt, table, handle in live.values():
+        cache.unlock(handle)
+        pool.decref(table)
+    cache.capacity_tokens = 0
+    cache._evict_to_fit()
+    pool.assert_empty()
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("ps", [2, 4, 16])
+def test_lifecycle_grid_no_leak_no_alias(seed, ps):
+    _run_lifecycle(seed, ps)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 10_000), st.sampled_from([2, 3, 4, 8, 16]))
+    def test_lifecycle_property_no_leak_no_alias(seed, ps):
+        _run_lifecycle(seed, ps)
+
+else:  # pragma: no cover - exercised only without the [dev] extra
+
+    @given(st.integers(), st.integers())
+    def test_lifecycle_property_no_leak_no_alias():
+        pass

@@ -94,6 +94,48 @@ def test_real_tokens_match_direct_model_loop(rc, rparams, pred):
         assert r.output_tokens == want, f"req {r.rid} diverged"
 
 
+def test_prefill_bucket_clamps_to_capacity(rc, rparams):
+    """A prompt that *fits* the cache must never be rejected just
+    because its power-of-two bucket overshoots ``max_len`` (70 tokens at
+    max_len=96 used to raise: bucket 128 > 96)."""
+    from repro.core.hwmodel import HardwareModel
+    from repro.serving.request import Request
+
+    hw = HardwareModel(MODEL, A100)
+    be = RealBackend(hw, rc, rparams, slots=2, max_len=96)
+    r = Request(0, 0.0, prompt_len=70, decode_len=2,
+                prompt_tokens=list(np.arange(70) % rc.vocab_size))
+    be.prefill_iter([r], 70, 1410.0)  # must not raise
+    assert len(r.output_tokens) == 1
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_prefill_rejects_oversized_prompt(rc, rparams, paged):
+    """A prompt larger than the cache capacity must fail loudly at
+    admission instead of silently wrapping (and corrupting) the ring
+    cache / overflowing the page pool."""
+    from repro.core.hwmodel import HardwareModel
+    from repro.serving.request import Request
+
+    hw = HardwareModel(MODEL, A100)
+    be = RealBackend(hw, rc, rparams, slots=2, max_len=96 if not paged
+                     else 96 + 32, paged=paged, page_size=16)
+    n = be.max_len + 1
+    r = Request(0, 0.0, prompt_len=n, decode_len=2,
+                prompt_tokens=list(np.arange(n) % rc.vocab_size))
+    with pytest.raises(ValueError, match="exceeds the decode cache"):
+        be.prefill_iter([r], n, 1410.0)
+
+
+def test_bucket_helper():
+    from repro.serving.realengine import _bucket
+
+    assert _bucket(10) == 16
+    assert _bucket(17) == 32
+    assert _bucket(70, hi=96) == 96
+    assert _bucket(5, hi=96) == 16
+
+
 def test_real_backend_slot_reuse(rc, rparams):
     from repro.core.hwmodel import HardwareModel
     from repro.serving.request import Request

@@ -79,8 +79,11 @@ def run(out_dir=None):
         rows.append({
             "policy": f"delta_vs_base[{label}]",
             "model": MODEL_NAME,
-            "epot_saving_frac": round(1.0 - m.epot_j() / b_epot, 4),
+            "epot_saving_frac": round(
+                1.0 - m.energy_per_token_j() / b_epot, 4
+            ),
             "energy_saving_frac": round(1.0 - m.energy_j() / b_energy, 4),
+            "tok_per_j": round(m.tokens_per_joule(), 3),
             "ttft_attain_delta": round(m.ttft_attainment() - b_ttft, 4),
             "itl_attain_delta": round(m.itl_attainment() - b_itl, 4),
             "prefix_hit_rate": row.get("prefix_hit_rate", 0.0),

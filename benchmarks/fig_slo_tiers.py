@@ -113,8 +113,11 @@ def run(out_dir=None):
         rows.append({
             "policy": f"delta_vs_single-tier[{label}]",
             "model": MODEL_NAME,
-            "epot_saving_frac": round(1.0 - m.epot_j() / b_epot, 4),
+            "epot_saving_frac": round(
+                1.0 - m.energy_per_token_j() / b_epot, 4
+            ),
             "energy_saving_frac": round(1.0 - m.energy_j() / b_energy, 4),
+            "tok_per_j": round(m.tokens_per_joule(), 3),
             "int_ttft_attain_delta": round(
                 m.ttft_attainment("interactive") - b_int_ttft, 4
             ),

@@ -1,0 +1,116 @@
+"""Speculative draft–verify decoding vs single-token decode.
+
+One iteration of the target model that *verifies* a k-token draft emits
+several accepted tokens for one pass over the weight/KV streams, so the
+energy per emitted token — the quantity VoltanaLLM's U-curve sweet spots
+actually optimize — drops wherever drafts verify well.  This benchmark
+serves one acceptance-heterogeneous trace (``templated`` code-like
+traffic that drafts well + ``chat`` traffic that doesn't —
+``spec_heterogeneity_workload``) on the same 2P2D A100 fleet under:
+
+* ``baseline``    — ``spec_decode=False``: the legacy single-token
+  decode path (bit-exact with pre-speculation main);
+* ``specdec-k4``  — draft–verify speculation (``spec_k=4``): variable-
+  yield decode iterations, EcoFreq pacing against ITL per *emitted*
+  token via the per-instance acceptance EWMA, acceptance-aware EcoRoute
+  pricing J per emitted token;
+* ``specdec-k4[uniform-route]`` — ablation (full run only): speculation
+  on but acceptance hidden from the router (round-robin placement), so
+  the delta to ``specdec-k4`` isolates the acceptance state-space
+  dimension.
+
+Acceptance (pinned by tests/test_golden_smoke.py): lower energy per
+emitted token than ``baseline`` at equal-or-better TTFT/ITL attainment.
+
+    PYTHONPATH=src python -m benchmarks.run fig_specdec
+    BENCH_SMOKE=1 ... (or --smoke)  -> shortened trace for CI
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import write_csv
+from repro.configs.registry import REGISTRY
+from repro.core.power import A100
+from repro.serving import (
+    ClusterConfig,
+    PDCluster,
+    spec_heterogeneity_workload,
+)
+
+MODEL_NAME = "llama-3.1-8b"
+SLO_TTFT_S, SLO_ITL_S = 0.6, 0.06
+
+
+def _run_one(label, reqs, bank, **cfg_kw):
+    cfg = ClusterConfig(
+        model=REGISTRY[MODEL_NAME],
+        chip=A100,
+        n_prefill=2,
+        n_decode=2,
+        slo_ttft_s=SLO_TTFT_S,
+        slo_itl_s=SLO_ITL_S,
+        policy="voltana",
+        online_adapt=False,
+        predictor_bank=bank,
+        seed=0,
+        paged=True,
+        **cfg_kw,
+    )
+    m = PDCluster(cfg).run(reqs)
+    return {"policy": label, "model": MODEL_NAME, **m.summary()}, m
+
+
+def run(out_dir=None):
+    smoke = os.environ.get("BENCH_SMOKE") == "1"
+    base_rps = 10.0 if smoke else 12.0
+    duration = 90.0 if smoke else 240.0
+    reqs = spec_heterogeneity_workload(base_rps, duration, seed=11)
+
+    bank = {}
+    rows = []
+    base_row, base = _run_one("baseline", reqs, bank, spec_decode=False)
+    rows.append(base_row)
+    # snapshot base scalars NOW: RunMetrics aliases the Request objects,
+    # which the next arm resets and re-runs
+    b_epot, b_energy = base.energy_per_token_j(), base.energy_j()
+    b_ttft, b_itl = base.ttft_attainment(), base.itl_attainment()
+
+    arms = [("specdec-k4", dict(spec_decode=True, spec_k=4))]
+    if not smoke:
+        arms.append((
+            "specdec-k4[uniform-route]",
+            dict(spec_decode=True, spec_k=4, policy="ecofreq-only"),
+        ))
+    for label, kw in arms:
+        row, m = _run_one(label, reqs, bank, **kw)
+        rows.append(row)
+        assert m.finished_frac() == 1.0, (
+            f"{label}: requests lost (finished_frac={m.finished_frac()})"
+        )
+        rows.append({
+            "policy": f"delta_vs_baseline[{label}]",
+            "model": MODEL_NAME,
+            "epot_saving_frac": round(
+                1.0 - m.energy_per_token_j() / b_epot, 4
+            ),
+            "energy_saving_frac": round(1.0 - m.energy_j() / b_energy, 4),
+            "tok_per_j": round(m.tokens_per_joule(), 3),
+            "ttft_attain_delta": round(m.ttft_attainment() - b_ttft, 4),
+            "itl_attain_delta": round(m.itl_attainment() - b_itl, 4),
+            "accept_rate": round(m.acceptance_rate() or 0.0, 4),
+            "spec_yield": round(m.spec_yield() or 0.0, 4),
+        })
+        print(
+            f"  {label:26s} vs baseline: "
+            f"energy/tok {m.energy_per_token_j()*1e3:7.2f} mJ vs "
+            f"{b_epot*1e3:7.2f} mJ "
+            f"({100 * (1 - m.energy_per_token_j() / b_epot):+.1f}%)  "
+            f"ttft {m.ttft_attainment():.3f} vs {b_ttft:.3f}  "
+            f"itl {m.itl_attainment():.3f} vs {b_itl:.3f}  "
+            f"yield {m.spec_yield() or 0.0:.2f} "
+            f"accept {m.acceptance_rate() or 0.0:.2f}"
+        )
+
+    write_csv("fig_specdec", rows, out_dir)
+    return rows

@@ -63,6 +63,7 @@ ITERATIONS = [
 
 def event_loop_benchmark(rate_rps: float = 6.0, duration_s: float = 60.0,
                          seed: int = 0, paged: bool = False,
+                         spec: bool = False,
                          predictor_bank: dict = None) -> dict:
     """Wall-clock the pure-Sim serving event loop on a fixed reference
     scenario (2P/2D SHAREGPT on A100) — the control-plane overhead the
@@ -84,24 +85,30 @@ def event_loop_benchmark(rate_rps: float = 6.0, duration_s: float = 60.0,
         model=model, chip=A100, n_prefill=2, n_decode=2,
         policy="voltana", online_adapt=False,
         predictor_bank=predictor_bank if predictor_bank is not None else {},
-        seed=seed, paged=paged,
+        seed=seed, paged=paged, spec_decode=spec,
     )
     cluster = PDCluster(cfg)
     t0 = time.perf_counter()
     m = cluster.run(reqs)
     wall_s = time.perf_counter() - t0
     toks = m.output_tokens()
-    return {
+    out = {
         "paged": paged,
+        "spec_decode": spec,
         "requests": len(reqs),
         "output_tokens": toks,
         "event_loop_wall_s": round(wall_s, 4),
         "tokens_per_wall_s": round(toks / wall_s, 1) if wall_s else None,
-        "energy_per_token_j": round(m.epot_j(), 6),
+        "energy_per_token_j": round(m.energy_per_token_j(), 6),
+        "tokens_per_joule": round(m.tokens_per_joule(), 4),
         "ttft_attainment": round(m.ttft_attainment(), 4),
         "itl_attainment": round(m.itl_attainment(), 4),
         "finished_frac": round(m.finished_frac(), 4),
     }
+    if spec:
+        out["accept_rate"] = round(m.acceptance_rate() or 0.0, 4)
+        out["spec_yield"] = round(m.spec_yield() or 0.0, 4)
+    return out
 
 
 def run(out_dir=None, results_path=None):

@@ -44,6 +44,7 @@ MODULES = [
     ("fig_hetero_autoscale", "EcoScale hetero fleet + autoscale vs static"),
     ("fig_prefix_cache", "Chunked prefill + radix prefix cache (multi-turn)"),
     ("fig_slo_tiers", "Multi-tenant SLO tiers vs single-tier baseline"),
+    ("fig_specdec", "Speculative draft-verify decode vs single-token"),
     ("roofline", "§Roofline table from dry-run records"),
     ("perf_iterations", "§Perf    hillclimb log from perf records"),
 ]
@@ -55,7 +56,7 @@ QUICK = {"fig1_5_ucurve", "fig4_itl_sensitivity", "fig6_staircase",
 # prefix-cache + SLO-tier scenarios (all read BENCH_SMOKE=1 and shrink
 # their traces)
 SMOKE = {"fig1_5_ucurve", "fig6_staircase", "fig_hetero_autoscale",
-         "fig_prefix_cache", "fig_slo_tiers"}
+         "fig_prefix_cache", "fig_slo_tiers", "fig_specdec"}
 
 
 def _write_bench_serving(module_status: dict) -> str:
@@ -71,6 +72,9 @@ def _write_bench_serving(module_status: dict) -> str:
         "event_loop": {
             "dense": event_loop_benchmark(paged=False, predictor_bank=bank),
             "paged": event_loop_benchmark(paged=True, predictor_bank=bank),
+            "spec_decode": event_loop_benchmark(
+                paged=True, spec=True, predictor_bank=bank
+            ),
         },
         "modules": module_status,
     }

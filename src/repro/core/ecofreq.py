@@ -29,6 +29,25 @@ from repro.core.ecopred import EcoPred
 from repro.core.power import ChipSpec
 
 
+def expected_emitted(accept_rate: float, k: int) -> float:
+    """Expected tokens emitted by one speculative iteration.
+
+    With per-token acceptance probability ``p`` and a ``k``-token draft,
+    the accepted prefix length is geometric-truncated and the iteration
+    always emits the bonus/correction token, so
+
+        E[emitted] = 1 + p + p² + … + p^k.
+
+    ``k == 0`` (speculation off) is exactly 1 — the legacy one token per
+    iteration."""
+    p = min(max(accept_rate, 0.0), 1.0)
+    out, pw = 1.0, 1.0
+    for _ in range(k):
+        pw *= p
+        out += pw
+    return out
+
+
 @dataclass
 class BatchInfo:
     """What the engine sends the controller when scheduling a batch (B)."""
@@ -46,6 +65,14 @@ class BatchInfo:
     # target over the running requests.
     budget_s: Optional[float] = None  # prefill: tightest remaining budget
     itl_slo_s: Optional[float] = None  # decode: binding ITL target
+    # speculative decode (multi-token iterations): k > 0 switches the
+    # latency query to the verify model and paces against the ITL target
+    # per *emitted* token — one iteration may deliver several accepted
+    # tokens, so its wall-time budget is itl_slo × E[emitted], with
+    # E[emitted] fed from the engine's per-instance acceptance EWMA.
+    # Defaults (0, 1.0) are the exact legacy single-token behavior.
+    spec_k: int = 0
+    emitted_per_iter: float = 1.0
 
 
 @dataclass
@@ -98,13 +125,24 @@ class EcoFreq:
             if batch.budget_s is not None:  # tiered: tightest deadline
                 return batch.budget_s * self.slo_margin
             return (self.slo_ttft_s - batch.max_waiting_s) * self.slo_margin
-        if batch.itl_slo_s is not None:  # tiered: binding ITL in the batch
-            return batch.itl_slo_s * self.slo_margin
-        return self.slo_itl_s * self.slo_margin
+        itl = (
+            batch.itl_slo_s if batch.itl_slo_s is not None  # tiered
+            else self.slo_itl_s
+        )
+        if batch.spec_k > 0:
+            # multi-token iterations: the SLO binds per *emitted* token,
+            # so one iteration's wall-time budget is the binding ITL
+            # times the expected yield (acceptance-EWMA-fed)
+            itl = itl * max(1.0, batch.emitted_per_iter)
+        return itl * self.slo_margin
 
     def predict(self, f, batch: BatchInfo) -> np.ndarray:
         if batch.phase == "prefill":
             t = self.predictor.predict_prefill(f, batch.n_tok, batch.n_cached)
+        elif batch.spec_k > 0:
+            t = self.predictor.predict_verify(
+                f, batch.n_req, batch.n_kv, batch.spec_k
+            )
         else:
             t = self.predictor.predict_decode(f, batch.n_req, batch.n_kv)
         return t + self.latency_bias_s

@@ -64,10 +64,17 @@ class EcoPred:
         )
         self._buf_p: List[np.ndarray] = []
         self._buf_d: List[np.ndarray] = []
+        self._buf_v: List[np.ndarray] = []
         self._since_p = 0
         self._since_d = 0
+        self._since_v = 0
         self.n_adaptations = 0
         self.online_enabled = True
+        # speculative-verify latency model over (f, N_req, N_kv, k):
+        # fitted lazily (ensure_verify_profile) so legacy clusters never
+        # pay for — or observe — the extra model
+        self.verify_model: Optional[GBTree] = None
+        self._verify_seed = seed
 
     # ------------------------------------------------------------------
     # Offline profiling (paper: measured profiles; here: hwmodel + noise)
@@ -128,6 +135,61 @@ class EcoPred:
         return self
 
     # ------------------------------------------------------------------
+    # Speculative-verify profiling (lazy; only spec-decode clusters pay)
+    # ------------------------------------------------------------------
+    def ensure_verify_profile(
+        self,
+        hw: HardwareModel,
+        k_options: Sequence[int] = (1, 2, 4, 8),
+        draft_frac: float = 0.05,
+        ranges: Optional[ProfileRanges] = None,
+        n_samples: int = 6_000,
+        noise_sigma: float = 0.03,
+    ) -> "EcoPred":
+        """Fit the verify-iteration model ``T_V(f, N_req, N_kv, k)``
+        against the hardware oracle's full speculative iteration cost
+        (draft steps + multi-token verify).  Idempotent: a bank-shared
+        predictor is profiled once and reused across runs; the legacy
+        prefill/decode models are untouched, so ``spec_decode=False``
+        behavior stays bit-exact."""
+        if self.verify_model is not None:
+            return self
+        r = ranges or ProfileRanges()
+        rng = np.random.default_rng(self._verify_seed + 17)
+        freqs = np.asarray(self.freq_options)
+        ks = np.asarray(sorted(set(int(k) for k in k_options)))
+        n_req = rng.integers(1, r.max_requests + 1, n_samples)
+        n_kv = np.minimum(
+            r.max_kv_tokens,
+            n_req * rng.uniform(1.0, r.max_kv_tokens /
+                                np.maximum(n_req, 1), n_samples),
+        ).astype(int)
+        f_v = freqs[rng.integers(0, len(freqs), n_samples)]
+        k_v = ks[rng.integers(0, len(ks), n_samples)]
+        y = np.array(
+            [
+                hw.spec_decode_time(int(q), int(c), int(k), float(f),
+                                    draft_frac)
+                for q, c, k, f in zip(n_req, n_kv, k_v, f_v)
+            ]
+        )
+        y *= np.exp(rng.normal(0.0, noise_sigma, n_samples))
+        X = np.stack(
+            [f_v, n_req.astype(float), n_kv.astype(float),
+             k_v.astype(float)], axis=1,
+        )
+        self.verify_model = GBTree(
+            n_estimators=300, learning_rate=0.1, max_depth=6,
+            subsample=0.8, colsample=1.0, objective="mae",
+            early_stopping_rounds=50, seed=self._verify_seed,
+        )
+        cut = int(0.9 * n_samples)
+        self.verify_model.fit(
+            X[:cut], y[:cut], eval_set=(X[cut:], y[cut:])
+        )
+        return self
+
+    # ------------------------------------------------------------------
     # Prediction (vectorized; <0.5 ms per batched query in the paper)
     # ------------------------------------------------------------------
     @staticmethod
@@ -166,6 +228,29 @@ class EcoPred:
         X = np.stack([f, q, k], axis=-1).reshape(-1, 3)
         return np.maximum(self.decode_model.predict(X), 0.0)
 
+    def predict_verify(self, f, n_req, n_kv, k) -> np.ndarray:
+        """Predicted wall time of one speculative iteration (draft +
+        k-token verify).  ``k == 0`` rows fall back to the plain decode
+        model — the verify model is trained on real speculation windows
+        only, and extrapolating it to k=0 would bypass the calibrated
+        decode fit."""
+        assert self.verify_model is not None, (
+            "verify model not profiled — call ensure_verify_profile() "
+            "(the cluster does this when spec_decode=True)"
+        )
+        f, q, c, kk = np.broadcast_arrays(
+            np.asarray(f, float), np.asarray(n_req, float),
+            np.asarray(n_kv, float), np.asarray(k, float),
+        )
+        X = np.stack([f, q, c, kk], axis=-1).reshape(-1, 4)
+        out = np.maximum(self.verify_model.predict(X), 0.0)
+        plain = X[:, 3] == 0.0
+        if plain.any():
+            out[plain] = np.maximum(
+                self.decode_model.predict(X[plain, :3]), 0.0
+            )
+        return out
+
     # ------------------------------------------------------------------
     # Online adaptation
     # ------------------------------------------------------------------
@@ -189,6 +274,22 @@ class EcoPred:
         if self._since_d >= self.adapt_every:
             self._adapt_decode()
 
+    def record_verify(
+        self, f: float, n_req: int, n_kv: int, k: int, t_s: float
+    ) -> None:
+        if not self.online_enabled or self.verify_model is None:
+            return
+        self._buf_v.append(np.array([f, n_req, n_kv, k, t_s]))
+        self._since_v += 1
+        if self._since_v >= self.adapt_every:
+            self._adapt_verify()
+
+    def _adapt_verify(self) -> None:
+        self._since_v = 0
+        buf = np.stack(self._buf_v[-self.replay_window:])
+        self.verify_model.continue_fit(buf[:, :4], buf[:, 4], n_more=25)
+        self.n_adaptations += 1
+
     def _adapt_prefill(self) -> None:
         self._since_p = 0
         buf = np.stack(self._buf_p[-self.replay_window:])
@@ -209,6 +310,8 @@ class EcoPred:
             self._adapt_prefill()
         if self._buf_d and self._since_d:
             self._adapt_decode()
+        if self._buf_v and self._since_v:
+            self._adapt_verify()
 
     # ------------------------------------------------------------------
     def mae(

@@ -26,11 +26,40 @@ from typing import TYPE_CHECKING, Dict, List, Optional, Protocol, Sequence
 
 import numpy as np
 
-from repro.core.ecofreq import BatchInfo, EcoFreq, SystemState
+from repro.core.ecofreq import (
+    BatchInfo,
+    EcoFreq,
+    SystemState,
+    expected_emitted,
+)
 
 if TYPE_CHECKING:  # identity-only imports (avoid heavy deps at runtime)
     from repro.core.hwmodel import HardwareModel
     from repro.core.power import ChipSpec
+
+
+def _view_emitted(v: "InstanceView") -> float:
+    """Expected tokens per iteration at the instance's current
+    acceptance EWMA (1.0 when speculation is off)."""
+    if v.spec_k <= 0:
+        return 1.0
+    return expected_emitted(
+        v.accept_ewma if v.accept_ewma is not None else 0.0, v.spec_k
+    )
+
+
+def _hyp_emitted(v: "InstanceView", req: "RouteRequest") -> float:
+    """Expected tokens per iteration *after* hypothetically placing
+    ``req``: the request's own acceptance propensity shifts the
+    instance's mean — this is the acceptance axis of the what-if (a
+    low-acceptance request landing on a high-acceptance instance dilutes
+    everyone's yield and the router prices exactly that)."""
+    if v.spec_k <= 0:
+        return 1.0
+    p = v.accept_ewma if v.accept_ewma is not None else 0.0
+    if req.accept_rate is not None:
+        p = (p * v.n_req + req.accept_rate) / (v.n_req + 1)
+    return expected_emitted(p, v.spec_k)
 
 
 @dataclass
@@ -50,6 +79,12 @@ class InstanceView:
     # SLO-tier coordinate: the binding (minimum) resolved ITL target of
     # the instance's resident requests — None when empty or untiered
     binding_itl_s: Optional[float] = None
+    # speculative-decode coordinates: the instance's draft window and its
+    # per-instance acceptance-rate EWMA — together they set the expected
+    # tokens emitted per iteration, which is what converts an iteration's
+    # joules into J per *emitted* token.  (0, None) = speculation off.
+    spec_k: int = 0
+    accept_ewma: Optional[float] = None
 
 
 @dataclass
@@ -60,6 +95,9 @@ class RouteRequest:
     # resolved ITL target of the request's SLO tier (None = untiered:
     # cluster-default SLOs)
     itl_slo_s: Optional[float] = None
+    # the request's own draft-acceptance propensity (None = unknown:
+    # the instance EWMA stands unshifted in the what-if)
+    accept_rate: Optional[float] = None
 
 
 class Router(Protocol):
@@ -114,26 +152,55 @@ class EcoRoute:
 
     # -- frequency decision for a hypothetical decode state ---------------
     def _freqs(
-        self, states: np.ndarray, bias: Optional[np.ndarray] = None
+        self,
+        states: np.ndarray,
+        bias: Optional[np.ndarray] = None,
+        spec_k: Optional[np.ndarray] = None,
+        emit: Optional[np.ndarray] = None,
     ) -> np.ndarray:
         """states: (n, 2) of (n_req, n_kv) -> chosen frequency per row.
 
         Vectorized Alg. 1 step-3 (no waiting queue in the what-if): for
         every (instance, frequency-option) pair predict T_D and take the
         lowest option meeting the ITL SLO. ``bias`` adds a per-row latency
-        offset (straggler signal from EcoPred residuals).
+        offset (straggler signal from EcoPred residuals).  Rows with
+        ``spec_k > 0`` query the verify model instead and compare against
+        a budget scaled by ``emit`` (expected tokens per iteration) — the
+        per-emitted-token pacing mirror of EcoFreq's step 3.
         """
         opts = np.asarray(self.ecofreq.freq_options)
         n = states.shape[0]
         ff = np.repeat(opts[None, :], n, axis=0)  # (n, k)
         qq = np.repeat(states[:, 0:1], len(opts), axis=1)
         kk = np.repeat(states[:, 1:2], len(opts), axis=1)
-        t = self.ecofreq.predictor.predict_decode(
-            ff.ravel(), qq.ravel(), kk.ravel()
-        ).reshape(n, len(opts))
+        spec_rows = (
+            np.flatnonzero(spec_k > 0)
+            if spec_k is not None else np.empty(0, int)
+        )
+        plain_rows = (
+            np.flatnonzero(spec_k <= 0)
+            if spec_k is not None else np.arange(n)
+        )
+        t = np.empty((n, len(opts)))
+        if plain_rows.size:  # each model queried only for its own rows
+            t[plain_rows] = self.ecofreq.predictor.predict_decode(
+                ff[plain_rows].ravel(), qq[plain_rows].ravel(),
+                kk[plain_rows].ravel(),
+            ).reshape(len(plain_rows), len(opts))
+        if spec_rows.size:
+            kv = np.repeat(
+                spec_k[spec_rows, None].astype(float), len(opts), axis=1
+            )
+            t[spec_rows] = self.ecofreq.predictor.predict_verify(
+                ff[spec_rows].ravel(), qq[spec_rows].ravel(),
+                kk[spec_rows].ravel(), kv.ravel(),
+            ).reshape(len(spec_rows), len(opts))
         if bias is not None:
             t = t + bias[:, None]
-        ok = t <= self.ecofreq.slo_itl_s
+        slo = self.ecofreq.slo_itl_s
+        if emit is not None:
+            slo = slo * np.maximum(emit, 1.0)[:, None]
+        ok = t <= slo
         # first qualifying option; none -> max
         first = np.where(ok.any(axis=1), ok.argmax(axis=1), len(opts) - 1)
         return opts[first]
@@ -143,8 +210,17 @@ class EcoRoute:
         cur = np.array([[v.n_req, v.n_kv] for v in cands], float)
         hyp = cur + np.array([[1.0, float(req.prompt_len)]])
         bias = np.array([v.latency_bias_s for v in cands] * 2)
+        spec = np.array([v.spec_k for v in cands] * 2, int)
+        emit = None
+        if (spec > 0).any():
+            emit = np.array(
+                [_view_emitted(v) for v in cands]
+                + [_hyp_emitted(v, req) for v in cands]
+            )
         # one batched EcoPred pass for current + hypothetical states
-        both = self._freqs(np.concatenate([cur, hyp], axis=0), bias)
+        both = self._freqs(
+            np.concatenate([cur, hyp], axis=0), bias, spec, emit
+        )
         f_cur, f_hyp = both[: len(cands)], both[len(cands):]
 
         raised = f_hyp > f_cur
@@ -205,26 +281,48 @@ class EnergyAwareEcoRoute:
         profiles: Dict[int, InstanceProfile],
         slo_itl_s: float,
         tol: float = 0.05,
+        spec_draft_frac: float = 0.05,
     ):
         self.profiles = profiles
         self.slo_itl_s = slo_itl_s
         self.tol = tol
+        self.spec_draft_frac = spec_draft_frac
         self._rr = 0
 
     def _whatif(
         self, p: InstanceProfile, n_req: int, n_kv: int, bias: float,
-        slo_s: Optional[float] = None,
+        slo_s: Optional[float] = None, spec_k: int = 0, emit: float = 1.0,
     ) -> tuple:
-        """Lowest SLO-meeting (f, predicted ITL) on p's own ladder."""
+        """Lowest SLO-meeting (f, predicted ITL) on p's own ladder.
+        Speculative instances query the verify model and pace against
+        the per-emitted-token budget ``slo × E[emitted]``."""
         slo = self.slo_itl_s if slo_s is None else slo_s
+        slo = slo * max(1.0, emit)
         opts = np.asarray(p.ecofreq.freq_options)
-        t = p.ecofreq.predictor.predict_decode(
-            opts, np.full(len(opts), float(n_req)),
-            np.full(len(opts), float(n_kv)),
-        ) + bias
+        if spec_k > 0:
+            t = p.ecofreq.predictor.predict_verify(
+                opts, np.full(len(opts), float(n_req)),
+                np.full(len(opts), float(n_kv)),
+                np.full(len(opts), float(spec_k)),
+            ) + bias
+        else:
+            t = p.ecofreq.predictor.predict_decode(
+                opts, np.full(len(opts), float(n_req)),
+                np.full(len(opts), float(n_kv)),
+            ) + bias
         ok = t <= slo
         j = int(ok.argmax()) if ok.any() else len(opts) - 1
         return float(opts[j]), float(t[j])
+
+    def _iter_energy(
+        self, p: InstanceProfile, n_req: int, n_kv: int, f: float,
+        spec_k: int,
+    ) -> float:
+        if spec_k > 0:
+            return p.hw.spec_decode_iter(
+                n_req, n_kv, spec_k, self.spec_draft_frac, f
+            ).energy_j
+        return p.hw.decode_iter(n_req, n_kv, f).energy_j
 
     def _slos(
         self, v: InstanceView, req: RouteRequest
@@ -239,20 +337,32 @@ class EnergyAwareEcoRoute:
         for v in cands:
             p = self.profiles[v.idx]
             cur_slo, hyp_slo = self._slos(v, req)
+            # acceptance axis of the what-if: expected yield before and
+            # after the placement (1.0 when speculation is off), so
+            # candidates compete on J per *emitted* token, not per
+            # iteration — the tokens-per-joule pricing
+            em_cur = _view_emitted(v)
+            em_hyp = _hyp_emitted(v, req)
             f_hyp, t_hyp = self._whatif(
                 p, v.n_req + 1, v.n_kv + req.prompt_len,
-                v.latency_bias_s, hyp_slo,
+                v.latency_bias_s, hyp_slo, v.spec_k, em_hyp,
             )
-            e_hyp = p.hw.decode_iter(
-                v.n_req + 1, v.n_kv + req.prompt_len, f_hyp
-            ).energy_j
+            e_hyp = self._iter_energy(
+                p, v.n_req + 1, v.n_kv + req.prompt_len, f_hyp, v.spec_k
+            ) / em_hyp
             e_cur = 0.0
             if v.n_req > 0:
                 f_cur, _ = self._whatif(
-                    p, v.n_req, v.n_kv, v.latency_bias_s, cur_slo
+                    p, v.n_req, v.n_kv, v.latency_bias_s, cur_slo,
+                    v.spec_k, em_cur,
                 )
-                e_cur = p.hw.decode_iter(v.n_req, v.n_kv, f_cur).energy_j
-            scored.append((t_hyp <= hyp_slo, e_hyp - e_cur, t_hyp, v))
+                e_cur = self._iter_energy(
+                    p, v.n_req, v.n_kv, f_cur, v.spec_k
+                ) / em_cur
+            scored.append(
+                (t_hyp <= hyp_slo * max(1.0, em_hyp), e_hyp - e_cur,
+                 t_hyp, v)
+            )
         pick = _select(scored, self._rr, self.tol)
         self._rr += 1
         return pick.idx

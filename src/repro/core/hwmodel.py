@@ -261,6 +261,107 @@ def prefill_chunk_work(
     )
 
 
+def verify_work(
+    cfg: ModelConfig,
+    chip: ChipSpec,
+    n_req: int,
+    n_kv: int,
+    k: int,
+    tp: int = 1,
+) -> IterWork:
+    """Work of one speculative *verify* iteration: ``n_req`` running
+    requests each forward ``k + 1`` query rows (the pending token plus
+    ``k`` draft proposals) against ``n_kv`` resident KV tokens.
+
+    What changes vs :func:`decode_work` — and why the energy sweet spot
+    moves — is the asymmetry between compute and memory:
+
+    * the **byte** streams barely grow: weights and the resident KV are
+      read once and shared by all ``k+1`` rows (only the k extra KV
+      writes and activations add).  That amortization is the whole
+      point of speculative decoding;
+    * the **FLOPs** multiply by ``k+1`` — but the *incremental* rows'
+      GEMM and attention MACs ride the very streams they share, so
+      like MXU tile padding they only cost wall time to the extent the
+      iteration is compute-limited.  They are accounted in
+      ``pad_flops`` (the ``kappa``-hidden term of :func:`iter_cost`):
+      free while memory-bound, priced as the batch drives the GEMM
+      compute-bound — which is exactly when speculation stops paying;
+    * the GEMM M-dim staircases on ``n_req * (k+1)``, shifting the
+      Fig. 6 cliffs left in ``n_req``.
+
+    With ``k == 0`` this reduces to :func:`decode_work` modulo the
+    single-token KV write the legacy decode model omits.
+    """
+    if n_req <= 0:
+        return IterWork(0.0, 0.0, 0.0, 0)
+    total, active, expert_p, n_moe, kv_b, st_b, non_moe = _body_params(cfg)
+    rows = n_req * (k + 1)
+
+    m_pad = _pad_up(rows, chip.mxu_tile)
+    gemm_base = 2.0 * active * n_req  # the non-speculative row per req
+    gemm_spec = 2.0 * active * n_req * k  # extra rows: stream-hidden
+    gemm_pad = 2.0 * active * (m_pad - rows)
+    attn_base = attn_spec = 0.0
+    if cfg.has_attention:
+        attn_base = 4.0 * cfg.q_dim * cfg.n_attn_layers * n_kv
+        # k extra context reads + the causal triangle over the freshly
+        # written speculation window — all riding the single KV stream
+        attn_spec = 4.0 * cfg.q_dim * cfg.n_attn_layers * (
+            k * n_kv + n_req * (k + 1) * k / 2.0
+        )
+    ssd = 0.0
+    if cfg.has_mamba:
+        m = cfg.mamba
+        n_mamba = (
+            sum(1 for s in cfg.block_pattern if s.mixer == "mamba")
+            * cfg.n_blocks
+        )
+        ssd = 6.0 * m.d_inner(cfg.d_model) * m.d_state * rows * n_mamba
+
+    touched = _experts_touched(cfg, rows)
+    w_itemsize = 1.02 if cfg.weight_dtype == "int8" else BF16
+    w_bytes = (non_moe + n_moe * touched * expert_p) * w_itemsize
+    kv_read = kv_b * n_kv  # streamed ONCE, shared by all k+1 rows
+    kv_write = kv_b * rows
+    st_rw = 2 * st_b * n_req
+    act_bytes = 12.0 * cfg.d_model * rows * BF16
+    flops = (gemm_base + attn_base + ssd) / tp
+    return IterWork(
+        flops=flops,
+        useful_flops=flops,
+        hbm_bytes=(w_bytes + kv_read + kv_write + st_rw + act_bytes) / tp,
+        gemm_m=rows,
+        pad_flops=(gemm_spec + attn_spec + gemm_pad) / tp,
+    )
+
+
+def draft_work(
+    cfg: ModelConfig,
+    chip: ChipSpec,
+    n_req: int,
+    n_kv: int,
+    frac: float,
+    tp: int = 1,
+) -> IterWork:
+    """Work of one *draft-model* decode step for ``n_req`` requests.
+
+    The draft model is priced as a ``frac``-scaled shadow of the target:
+    its weight stream, GEMM FLOPs and (proportionally smaller) KV read
+    all shrink by ``frac`` — the standard small-draft regime (a ~10%
+    drafter).  The M-dim staircase is computed on the *scaled* pad
+    FLOPs so tiny drafters do not inherit the target's tile waste.
+    """
+    w = decode_work(cfg, chip, n_req, n_kv, tp)
+    return IterWork(
+        flops=w.flops * frac,
+        useful_flops=w.useful_flops * frac,
+        hbm_bytes=w.hbm_bytes * frac,
+        gemm_m=w.gemm_m,
+        pad_flops=w.pad_flops * frac,
+    )
+
+
 def decode_work(
     cfg: ModelConfig,
     chip: ChipSpec,
@@ -409,6 +510,55 @@ class HardwareModel:
         return IterCost(c.time_s, c.power_w * self.tp,
                         c.energy_j * self.tp, c.f_effective, c.theta)
 
+    def verify_iter(
+        self, n_req: int, n_kv: int, k: int, f: float = None
+    ) -> IterCost:
+        """Cost of one speculative verify forward: ``k + 1`` query rows
+        per request against the resident cache (KV streamed once)."""
+        f = f if f is not None else self.chip.f_max
+        w = verify_work(self.cfg, self.chip, n_req, n_kv, k, self.tp)
+        c = iter_cost(self.chip, w, f)
+        return IterCost(c.time_s, c.power_w * self.tp,
+                        c.energy_j * self.tp, c.f_effective, c.theta)
+
+    def draft_iter(
+        self, n_req: int, n_kv: int, frac: float, f: float = None
+    ) -> IterCost:
+        """Cost of one draft-model decode step (a ``frac``-scaled shadow
+        of the target's decode work)."""
+        f = f if f is not None else self.chip.f_max
+        w = draft_work(self.cfg, self.chip, n_req, n_kv, frac, self.tp)
+        c = iter_cost(self.chip, w, f)
+        return IterCost(c.time_s, c.power_w * self.tp,
+                        c.energy_j * self.tp, c.f_effective, c.theta)
+
+    def spec_decode_iter(
+        self,
+        n_req: int,
+        n_kv: int,
+        k: int,
+        draft_frac: float = 0.05,
+        f: float = None,
+    ) -> IterCost:
+        """One full speculative iteration: ``k + 1`` draft steps (the
+        sync step plus ``k`` proposals) serially composed with the
+        target's verify forward.  Times and joules add; the reported
+        power is the energy-weighted mean and ``f_effective``/``theta``
+        are the verify forward's (it dominates both)."""
+        f = f if f is not None else self.chip.f_max
+        v = self.verify_iter(n_req, n_kv, k, f)
+        d = self.draft_iter(n_req, n_kv, draft_frac, f)
+        time_s = v.time_s + (k + 1) * d.time_s
+        energy = v.energy_j + (k + 1) * d.energy_j
+        power = energy / time_s if time_s > 0 else v.power_w
+        return IterCost(time_s, power, energy, v.f_effective, v.theta)
+
+    def spec_decode_time(
+        self, n_req: int, n_kv: int, k: int, f: float,
+        draft_frac: float = 0.05,
+    ) -> float:
+        return self.spec_decode_iter(n_req, n_kv, k, draft_frac, f).time_s
+
     def hybrid_iter(
         self,
         n_req: int,
@@ -537,15 +687,23 @@ def energy_frequency_curve(
 ):
     """[(f, time_s, energy_j)] across the chip's frequency range.
 
-    ``state``: prefill -> n_tok (and optional avg_ctx); decode -> n_req, n_kv.
+    ``state``: prefill -> n_tok (and optional avg_ctx); decode -> n_req,
+    n_kv; verify -> n_req, n_kv, k (and optional draft_frac) for the
+    speculative multi-token iteration — its U-curve sits at a higher
+    sweet-spot frequency than plain decode because the shared KV stream
+    amortizes over k+1 query rows.
     """
     out = []
     for f in hw.chip.freq_grid(n_grid):
-        c = (
-            hw.prefill_iter(state["n_tok"], state.get("avg_ctx"), f)
-            if phase == "prefill"
-            else hw.decode_iter(state["n_req"], state["n_kv"], f)
-        )
+        if phase == "prefill":
+            c = hw.prefill_iter(state["n_tok"], state.get("avg_ctx"), f)
+        elif phase == "verify":
+            c = hw.spec_decode_iter(
+                state["n_req"], state["n_kv"], state["k"],
+                state.get("draft_frac", 0.05), f,
+            )
+        else:
+            c = hw.decode_iter(state["n_req"], state["n_kv"], f)
         out.append((f, c.time_s, c.energy_j))
     return out
 

@@ -18,7 +18,12 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.ecofreq import BatchInfo, EcoFreq, SystemState
+from repro.core.ecofreq import (
+    BatchInfo,
+    EcoFreq,
+    SystemState,
+    expected_emitted,
+)
 from repro.core.power import ChipSpec
 
 
@@ -70,6 +75,71 @@ def tier_frequency_fields(
         name: frequency_field(ecofreq, n_req_grid, n_kv_grid, slo)
         for name, slo in tier_slo_itl_s.items()
     }
+
+
+def spec_frequency_field(
+    ecofreq: EcoFreq,
+    n_req_grid: Sequence[int],
+    n_kv_grid: Sequence[int],
+    accept_grid: Sequence[float],
+    spec_k: int,
+    itl_slo_s: Optional[float] = None,
+) -> np.ndarray:
+    """Chosen frequency over the *speculative* decode state space
+    ``(N_req, N_kv, acceptance)``.
+
+    Speculative decoding adds the acceptance rate as a third coordinate:
+    the per-emitted-token budget is ``ITL × E[emitted](p, k)``, so the
+    same ``(N_req, N_kv)`` point maps to different frequencies as the
+    batch's acceptance EWMA moves — high-acceptance instances can run
+    colder clocks per joule-efficient emitted token, low-acceptance ones
+    snap back toward the plain-decode field.  Returns
+    ``(len(accept_grid), len(n_req_grid), len(n_kv_grid))``.
+    """
+    state = SystemState(has_waiting=False)
+    out = np.empty((len(accept_grid), len(n_req_grid), len(n_kv_grid)))
+    for a, p in enumerate(accept_grid):
+        emit = expected_emitted(float(p), spec_k)
+        for i, q in enumerate(n_req_grid):
+            for j, k in enumerate(n_kv_grid):
+                out[a, i, j] = ecofreq.select(
+                    state,
+                    BatchInfo(
+                        phase="decode", n_req=int(q), n_kv=int(k),
+                        itl_slo_s=itl_slo_s, spec_k=spec_k,
+                        emitted_per_iter=emit,
+                    ),
+                )
+    return out
+
+
+def acceptance_cliffs(
+    ecofreq: EcoFreq,
+    n_req: int,
+    n_kv: int,
+    spec_k: int,
+    n_grid: int = 101,
+    itl_slo_s: Optional[float] = None,
+) -> List[Tuple[float, float, float]]:
+    """(acceptance, f_before, f_after) where the chosen frequency jumps
+    as the acceptance EWMA sweeps 0 → 1 at a fixed ``(n_req, n_kv)`` —
+    the acceptance-axis analogue of :func:`frequency_cliffs`."""
+    state = SystemState(has_waiting=False)
+    cliffs = []
+    prev = None
+    for p in np.linspace(0.0, 1.0, n_grid):
+        f = ecofreq.select(
+            state,
+            BatchInfo(
+                phase="decode", n_req=n_req, n_kv=n_kv,
+                itl_slo_s=itl_slo_s, spec_k=spec_k,
+                emitted_per_iter=expected_emitted(float(p), spec_k),
+            ),
+        )
+        if prev is not None and f != prev:
+            cliffs.append((float(p), prev, f))
+        prev = f
+    return cliffs
 
 
 def frequency_cliffs(

@@ -88,23 +88,35 @@ def _decode_kernel(
         o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
 
 
-def _paged_decode_kernel(
+def _paged_verify_kernel(
     bt_ref,  # SMEM (B, Pmax) int32 block tables (-1 = unused)
-    len_ref,  # SMEM (B,) int32 valid tokens incl. the current one
-    q_ref,  # (1, 1, G, Dh)
+    len_ref,  # SMEM (B,) int32 valid tokens incl. the T new ones
+    q_ref,  # (1, 1, R, Dh) — R = T*G query rows (T tokens × G heads)
     k_ref,  # (1, 1, page, Dh) — the page bt[b, p] points at
     v_ref,  # (1, 1, page, Dh)
-    o_ref,  # (1, 1, G, Dh)
-    m_scr,  # VMEM (G,) f32
-    l_scr,  # VMEM (G,) f32
-    acc_scr,  # VMEM (G, Dh) f32
+    o_ref,  # (1, 1, R, Dh)
+    m_scr,  # VMEM (R,) f32
+    l_scr,  # VMEM (R,) f32
+    acc_scr,  # VMEM (R, Dh) f32
     *,
     window: Optional[int],
     softcap: Optional[float],
     page_size: int,
     num_pages_max: int,
+    n_tokens: int,  # T — speculation window (k draft tokens + 1)
+    group: int,  # G — grouped query heads per KV head
     scale: float,
 ):
+    """Multi-token paged flash-decode: the speculative *verify* pass.
+
+    Each sequence forwards ``T`` fresh query tokens at positions
+    ``length - T .. length - 1`` against its paged KV (which already
+    holds their K/V — the model scatters before attending, exactly like
+    the single-token path).  Causality *within the speculation window*
+    falls out of per-row query positions: row ``r`` carries token offset
+    ``r // G``, masking pages positions beyond its own token.  With
+    ``T == 1`` this degenerates to ``_paged_decode_kernel``.
+    """
     b = pl.program_id(0)
     pi = pl.program_id(2)
 
@@ -115,29 +127,34 @@ def _paged_decode_kernel(
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     length = len_ref[b]
-    q_pos = length - 1
+    base = length - n_tokens  # position of the first new token
 
     @pl.when(pi * page_size < length)
     def _page():
-        q = q_ref[0, 0].astype(jnp.float32)  # (G, Dh)
+        q = q_ref[0, 0].astype(jnp.float32)  # (R, Dh)
         k = k_ref[0, 0].astype(jnp.float32)  # (page, Dh)
         v = v_ref[0, 0].astype(jnp.float32)
 
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
-        ) * scale  # (G, page)
+        ) * scale  # (R, page)
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)
 
-        # token position of slot j in this page is pi * page_size + j
+        # token position of slot j in this page is pi * page_size + j;
+        # query row r is token base + r // G
+        rows = n_tokens * group
         pos = pi * page_size + jax.lax.broadcasted_iota(
-            jnp.int32, (page_size,), 0
+            jnp.int32, (rows, page_size), 1
         )
-        valid = pos < length
+        q_pos = base + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, page_size), 0
+        ) // group
+        valid = (pos < length) & (pos <= q_pos)
         if window is not None:
             valid &= q_pos - pos < window
-        s = jnp.where(valid[None, :], s, NEG_INF)
+        s = jnp.where(valid, s, NEG_INF)
 
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, s.max(axis=1))
@@ -155,6 +172,93 @@ def _paged_decode_kernel(
     def _finish():
         l = jnp.maximum(l_scr[...], 1e-37)
         o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "interpret"),
+)
+def paged_verify_attention(
+    q: jax.Array,  # (B, T, Hq, Dh) — T query tokens per sequence
+    k_pages: jax.Array,  # (P, page_size, Hkv, Dh) — the whole pool
+    v_pages: jax.Array,  # (P, page_size, Hkv, Dh)
+    block_tables: jax.Array,  # (B, Pmax) int32 page ids, -1 = unused
+    lengths: jax.Array,  # (B,) int32 valid tokens incl. the T new ones
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Speculative verify over a paged KV pool: ``T`` query tokens per
+    sequence in one fused pass.
+
+    The sequence's K/V — including the ``T`` new positions — must
+    already sit in the pages ``block_tables`` maps (callers scatter
+    before attending).  The block table is a scalar-prefetch argument
+    exactly as in :func:`paged_decode_attention`: each grid step's
+    index_map dereferences it so the pipeline DMAs only owned pages,
+    and the resident cache is streamed ONCE for all ``T`` rows — the
+    bandwidth amortization that moves the decode energy sweet spot.
+    Causal within the speculation window; ``T == 1`` is exactly the
+    single-token kernel.
+    """
+    P, page_size, Hkv, Dh = k_pages.shape
+    B, Pmax = block_tables.shape
+    T, Hq = q.shape[1], q.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+
+    # rows grouped per KV head: row t*G + g is (token t, grouped head g)
+    qg = q.reshape(B, T, Hkv, G, Dh).transpose(0, 2, 1, 3, 4)
+    qg = qg.reshape(B, Hkv, T * G, Dh)
+    kt = k_pages.transpose(0, 2, 1, 3)  # (P, Hkv, page, Dh)
+    vt = v_pages.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _paged_verify_kernel,
+        window=window,
+        softcap=softcap,
+        page_size=page_size,
+        num_pages_max=Pmax,
+        n_tokens=T,
+        group=G,
+        scale=scale,
+    )
+
+    def kv_map(b, h, p, bt, ln):
+        return (jnp.maximum(bt[b, p], 0), h, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, Pmax),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, T * G, Dh), lambda b, h, p, bt, ln: (b, h, 0, 0)
+            ),
+            pl.BlockSpec((1, 1, page_size, Dh), kv_map),
+            pl.BlockSpec((1, 1, page_size, Dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, T * G, Dh), lambda b, h, p, bt, ln: (b, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((T * G,), jnp.float32),
+            pltpu.VMEM((T * G,), jnp.float32),
+            pltpu.VMEM((T * G, Dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, T * G, Dh), q.dtype),
+        interpret=interpret,
+    )(
+        block_tables.astype(jnp.int32),
+        lengths.astype(jnp.int32),
+        qg, kt, vt,
+    )
+    out = out.reshape(B, Hkv, T, G, Dh).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, T, Hq, Dh)
 
 
 @functools.partial(
@@ -181,57 +285,15 @@ def paged_decode_attention(
     sequence owns — the gather happens in the pipeline, not the kernel
     body.  Out-of-table entries (-1) clamp to page 0 and are masked by
     the length check; pages past a sequence's count are skipped.
+
+    This is the ``T == 1`` case of :func:`paged_verify_attention`
+    (identical grid, block shapes, and in-kernel ops — the tests pin
+    the two bit-exact), kept as the single-token API.
     """
-    P, page_size, Hkv, Dh = k_pages.shape
-    B, Pmax = block_tables.shape
-    Hq = q.shape[1]
-    G = Hq // Hkv
-    scale = 1.0 / math.sqrt(Dh)
-
-    qg = q.reshape(B, Hkv, G, Dh)
-    kt = k_pages.transpose(0, 2, 1, 3)  # (P, Hkv, page, Dh)
-    vt = v_pages.transpose(0, 2, 1, 3)
-
-    kernel = functools.partial(
-        _paged_decode_kernel,
-        window=window,
-        softcap=softcap,
-        page_size=page_size,
-        num_pages_max=Pmax,
-        scale=scale,
-    )
-
-    def kv_map(b, h, p, bt, ln):
-        return (jnp.maximum(bt[b, p], 0), h, 0, 0)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(B, Hkv, Pmax),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, Dh), lambda b, h, p, bt, ln: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, page_size, Dh), kv_map),
-            pl.BlockSpec((1, 1, page_size, Dh), kv_map),
-        ],
-        out_specs=pl.BlockSpec(
-            (1, 1, G, Dh), lambda b, h, p, bt, ln: (b, h, 0, 0)
-        ),
-        scratch_shapes=[
-            pltpu.VMEM((G,), jnp.float32),
-            pltpu.VMEM((G,), jnp.float32),
-            pltpu.VMEM((G, Dh), jnp.float32),
-        ],
-    )
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
-        interpret=interpret,
-    )(
-        block_tables.astype(jnp.int32),
-        lengths.astype(jnp.int32),
-        qg, kt, vt,
-    )
-    return out.reshape(B, Hq, Dh)
+    return paged_verify_attention(
+        q[:, None], k_pages, v_pages, block_tables, lengths,
+        window=window, softcap=softcap, interpret=interpret,
+    )[:, 0]
 
 
 @functools.partial(

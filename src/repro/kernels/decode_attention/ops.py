@@ -9,6 +9,9 @@ from repro.kernels.decode_attention.kernel import decode_attention as _kernel
 from repro.kernels.decode_attention.kernel import (
     paged_decode_attention as _paged_kernel,
 )
+from repro.kernels.decode_attention.kernel import (
+    paged_verify_attention as _verify_kernel,
+)
 
 
 def decode_attention(
@@ -46,6 +49,25 @@ def paged_decode_attention(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return _paged_kernel(
+        q, k_pages, v_pages, block_tables, lengths,
+        window=window, softcap=softcap, interpret=interpret,
+    )
+
+
+def paged_verify_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _verify_kernel(
         q, k_pages, v_pages, block_tables, lengths,
         window=window, softcap=softcap, interpret=interpret,
     )

@@ -20,31 +20,51 @@ def paged_decode_attention_ref(
     window: Optional[int] = None,
     softcap: Optional[float] = None,
 ) -> jax.Array:
-    """Oracle for the paged kernel: gather every table page into a dense
-    per-sequence cache, then run masked single-token attention."""
+    """Oracle for the paged kernel: the ``T == 1`` case of
+    :func:`paged_verify_attention_ref`, kept as the single-token API."""
+    return paged_verify_attention_ref(
+        q[:, None], k_pages, v_pages, block_tables, lengths,
+        window=window, softcap=softcap,
+    )[:, 0]
+
+
+def paged_verify_attention_ref(
+    q: jax.Array,  # (B, T, Hq, Dh) — T query tokens per sequence
+    k_pages: jax.Array,  # (P, page_size, Hkv, Dh)
+    v_pages: jax.Array,  # (P, page_size, Hkv, Dh)
+    block_tables: jax.Array,  # (B, Pmax) int32 page ids, -1 = unused
+    lengths: jax.Array,  # (B,) int32 valid tokens incl. the T new ones
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Oracle for the multi-token verify kernel: gather every table page
+    into a dense per-sequence cache, then run masked attention with the
+    T query tokens causal within the speculation window."""
     P, page_size, Hkv, Dh = k_pages.shape
     B, Pmax = block_tables.shape
-    Hq = q.shape[1]
+    T, Hq = q.shape[1], q.shape[2]
     G = Hq // Hkv
     bt = jnp.maximum(block_tables, 0)
-    # (B, Pmax, page, Hkv, Dh) -> (B, Pmax*page, Hkv, Dh)
     kc = k_pages[bt].reshape(B, Pmax * page_size, Hkv, Dh)
     vc = v_pages[bt].reshape(B, Pmax * page_size, Hkv, Dh)
-    pos = jnp.arange(Pmax * page_size, dtype=jnp.int32)[None]  # (1, C)
-    q_pos = lengths - 1
-    mask = pos < lengths[:, None]
+    pos = jnp.arange(Pmax * page_size, dtype=jnp.int32)[None, None]  # (1,1,C)
+    q_pos = (
+        lengths[:, None] - T + jnp.arange(T, dtype=jnp.int32)[None]
+    )  # (B, T)
+    mask = (pos < lengths[:, None, None]) & (pos <= q_pos[..., None])
     if window is not None:
-        mask &= q_pos[:, None] - pos < window
-    qr = q.reshape(B, Hkv, G, Dh).astype(jnp.float32)
+        mask &= q_pos[..., None] - pos < window
+    qr = q.reshape(B, T, Hkv, G, Dh).astype(jnp.float32)
     s = jnp.einsum(
-        "bhgd,bchd->bhgc", qr, kc.astype(jnp.float32)
+        "bthgd,bchd->bthgc", qr, kc.astype(jnp.float32)
     ) / math.sqrt(Dh)
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
-    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhgc,bchd->bhgd", p, vc.astype(jnp.float32))
-    return o.reshape(B, Hq, Dh).astype(q.dtype)
+    o = jnp.einsum("bthgc,bchd->bthgd", p, vc.astype(jnp.float32))
+    return o.reshape(B, T, Hq, Dh).astype(q.dtype)
 
 
 def decode_attention_ref(

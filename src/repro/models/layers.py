@@ -302,6 +302,42 @@ def decode_attention(
     return out.reshape(B, Hq, Dh).astype(q.dtype)
 
 
+def verify_attention(
+    q: jax.Array,  # (B, T, Hq, Dh) -- T new tokens per sequence
+    k_cache: jax.Array,  # (B, C, Hkv, Dh)
+    v_cache: jax.Array,  # (B, C, Hkv, Dh)
+    slot_pos: jax.Array,  # (B, C) int32 absolute position per slot (-1 empty)
+    q_pos: jax.Array,  # (B, T) int32 positions of the new tokens
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Attention of ``T`` new tokens over a KV cache that already holds
+    their K/V — the speculative verify pass.  Causality within the
+    speculation window comes from per-token query positions; ``T == 1``
+    is exactly :func:`decode_attention`."""
+    B, C, Hkv, Dh = k_cache.shape
+    T, Hq = q.shape[1], q.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    qr = q.reshape(B, T, Hkv, G, Dh)
+    s = jnp.einsum(
+        "bthgd,bchd->bthgc", qr, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    s = _softcap(s, softcap)
+    mask = (slot_pos[:, None, :] >= 0) & (
+        slot_pos[:, None, :] <= q_pos[:, :, None]
+    )
+    if window is not None:
+        mask = mask & (q_pos[:, :, None] - slot_pos[:, None, :] < window)
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bthgc,bchd->bthgd", p, v_cache, preferred_element_type=jnp.float32
+    )
+    return out.reshape(B, T, Hq, Dh).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # FFN
 # ---------------------------------------------------------------------------

@@ -802,24 +802,62 @@ def decode_step_paged(
     """One decode iteration over the paged pool.  The new token's K/V is
     scattered into its sequence's tail page before attention; sequences
     whose table lacks the page (or empty slots, table all -1) write to
-    the scratch page.  Returns ``(logits (B, V), new_cache)``."""
+    the scratch page.  Returns ``(logits (B, V), new_cache)``.
+
+    This is the ``T == 1`` case of :func:`verify_step_paged` (the tests
+    pin the two bit-identical), kept as the single-token API.
+    """
+    logits, new_cache = verify_step_paged(
+        params, cfg, tokens[:, None], cache, lengths, block_tables
+    )
+    return logits[:, 0], new_cache
+
+
+def verify_step_paged(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, T) int32 — pending token + k draft proposals
+    cache: PyTree,  # paged cache (init_paged_cache)
+    lengths: jax.Array,  # (B,) int32 — resident tokens BEFORE this step
+    block_tables: jax.Array,  # (B, Pmax) page ids covering lengths+T, -1 pad
+):
+    """Speculative *verify*: forward ``T = k + 1`` tokens per sequence in
+    one pass over the paged pool.
+
+    Row 0 is the sequence's pending (already-emitted) token, rows
+    ``1..k`` its draft proposals; K/V for all ``T`` rows scatters into
+    the tail pages ``block_tables`` must already cover, and attention is
+    causal within the speculation window (row ``j`` sees positions
+    ``<= lengths + j``).  Returns ``(logits (B, T, V), new_cache)`` —
+    ``argmax(logits[:, j])`` is the target model's token after position
+    ``lengths + j``, which is what accept-prefix sampling compares the
+    drafts against.  Rollback of rejected rows is the caller's page
+    bookkeeping (:meth:`~repro.serving.kvpool.BlockTable.shrink`): the
+    rejected offsets inside kept pages are masked by ``lengths`` until
+    the next accepted tokens overwrite them.
+
+    With ``T == 1`` this is exactly :func:`decode_step_paged`.
+    """
     _check_paged(cfg)
-    x = jnp.take(params["embed"], tokens, axis=0)  # (B, d)
-    B = x.shape[0]
-    q_pos = lengths
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, T, d)
+    B, T = tokens.shape
     scratch = jax.tree_util.tree_leaves(cache)[0].shape[1] - 1
     ps = jax.tree_util.tree_leaves(cache)[0].shape[2]
     Pmax = block_tables.shape[1]
     C = Pmax * ps
-    bidx = jnp.arange(B)
-    pid = block_tables[bidx, jnp.minimum(q_pos // ps, Pmax - 1)]
-    pid = jnp.where(pid >= 0, pid, scratch)
-    off = q_pos % ps
-    # dense per-slot view: position i sits at gathered index i
+    positions = lengths[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+    bidx = jnp.arange(B)[:, None]
+    pid = block_tables[bidx, jnp.minimum(positions // ps, Pmax - 1)]
+    # rows past the table's coverage (a near-capacity speculation
+    # window) must scatter to scratch, never alias the clamped last
+    # page — only rejected rows can sit there (see the caller's
+    # capacity contract), so their K/V is disposable by construction
+    pid = jnp.where((pid >= 0) & (positions < C), pid, scratch)
+    off = positions % ps
     slot_pos = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (B, C))
 
     def body(carry, xs):
-        xc = carry
+        xc = carry  # (B, T, d)
         bp, cache_in = xs
         bp = _dequant_tree(bp, _dtype(cfg))
         cache_out = {}
@@ -828,29 +866,25 @@ def decode_step_paged(
             ci = cache_in[f"layer_{i}"]
             co = {}
             if spec.mixer == "attn":
-                h = L.rms_norm(xc[:, None, :], lp["attn"]["norm"],
-                               cfg.norm_eps)
-                q, k, v = _attn_qkv(lp["attn"], cfg, h)  # (B, 1, H, Dh)
+                h = L.rms_norm(xc, lp["attn"]["norm"], cfg.norm_eps)
+                q, k, v = _attn_qkv(lp["attn"], cfg, h)  # (B, T, H, Dh)
                 if cfg.use_rope:
                     sin, cos = L.rope_sincos(
-                        q_pos[:, None], cfg.head_dim, cfg.rope_theta
+                        positions, cfg.head_dim, cfg.rope_theta
                     )
                     q = L.apply_rope(q, sin, cos)
                     k = L.apply_rope(k, sin, cos)
-                co["k"] = ci["k"].at[pid, off].set(
-                    k[:, 0].astype(ci["k"].dtype)
-                )
-                co["v"] = ci["v"].at[pid, off].set(
-                    v[:, 0].astype(ci["v"].dtype)
-                )
+                co["k"] = ci["k"].at[pid, off].set(k.astype(ci["k"].dtype))
+                co["v"] = ci["v"].at[pid, off].set(v.astype(ci["v"].dtype))
                 kg = _gather_pages(co["k"], block_tables).astype(q.dtype)
                 vg = _gather_pages(co["v"], block_tables).astype(q.dtype)
-                o = L.decode_attention(
-                    q[:, 0], kg, vg, slot_pos, q_pos,
+                o = L.verify_attention(
+                    q, kg, vg, slot_pos, positions,
                     window=spec.window, softcap=cfg.attn_softcap,
                 )
                 xc = xc + jnp.einsum(
-                    "be,ed->bd", o.reshape(B, cfg.q_dim), lp["attn"]["wo"]
+                    "bte,ed->btd", o.reshape(B, T, cfg.q_dim),
+                    lp["attn"]["wo"],
                 )
             if spec.ffn != "none":
                 out, _ = _ffn(lp, cfg, xc)
@@ -862,8 +896,35 @@ def decode_step_paged(
         body, x, (params["blocks"], cache), unroll=L.in_analysis_mode()
     )
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = lm_logits(params, cfg, x)
+    logits = lm_logits(params, cfg, x)  # (B, T, V)
     return logits, new_cache
+
+
+def draft_step(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B,) int32
+    cache: PyTree,
+    lengths: jax.Array,  # (B,) int32 — write position per sequence
+):
+    """One draft-model proposal step (greedy): a thin wrapper over
+    :func:`decode_step` that also returns the argmax proposals, so the
+    drafting loop reads ``(proposal, logits, cache)`` per step."""
+    logits, cache = decode_step(params, cfg, tokens, cache, lengths)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits, cache
+
+
+def accept_prefix(
+    draft_tokens: jax.Array,  # (B, k) int32 — the k proposals
+    target_tokens: jax.Array,  # (B, k+1) int32 — verify-pass argmaxes
+) -> jax.Array:
+    """Greedy accept-prefix sampling: accepted count per sequence is the
+    longest prefix where the draft's proposal matches the target's
+    argmax (``target_tokens[:, j]`` is the target's choice after
+    position ``j``; ``target_tokens[:, a]`` is the bonus/correction
+    token).  Returns (B,) int32 in ``[0, k]``."""
+    match = (draft_tokens == target_tokens[:, :-1]).astype(jnp.int32)
+    return jnp.sum(jnp.cumprod(match, axis=1), axis=1)
 
 
 def decode_step(

@@ -40,6 +40,7 @@ from repro.serving.workload import (  # noqa: F401
     azure_like,
     multiturn_workload,
     poisson_workload,
+    spec_heterogeneity_workload,
     step_load,
     synthetic_pd_ratio,
     tiered_workload,

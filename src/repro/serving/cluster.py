@@ -129,6 +129,19 @@ class ClusterConfig:
     # decode steps (local decode join, no KV migration)
     n_hybrid: int = 0
     hybrid_chunk_tokens: int = 2_048
+    # speculative decoding: decode instances run draft–verify iterations
+    # that emit up to spec_k+1 tokens each (variable-yield scheduling,
+    # per-emitted-token EcoFreq pacing, acceptance-aware EcoRoute).  The
+    # acceptance realization is a control-plane draw (per-instance
+    # stream keyed off the run seed), identical across Sim/Real backends
+    # — Real additionally executes the actual draft+verify forwards and
+    # rolls rejected pages back.  False = legacy single-token decode,
+    # bit-exact.  Hybrid instances never speculate (their iterations
+    # already coalesce prefill chunks).
+    spec_decode: bool = False
+    spec_k: int = 4
+    spec_draft_frac: float = 0.05  # draft model cost as a target fraction
+    spec_accept_default: float = 0.7  # for requests without accept_rate
     # physics
     noise_sigma: float = 0.02
     transfer_bw: float = 200e9  # P->D KV migration bytes/s
@@ -158,6 +171,8 @@ def build_predictor(
     max_running: int = 512,
     prefill_tokens: int = 8_192,
     seed: int = 0,
+    spec_k: int = 0,
+    spec_draft_frac: float = 0.05,
 ) -> EcoPred:
     """Offline-profile an EcoPred for (model, chip) — reusable across runs.
 
@@ -165,6 +180,9 @@ def build_predictor(
     budget: FCFS batching admits an oversized prompt whole, so EcoFreq
     consults the predictor there too — extrapolating instead under-
     estimates long-prompt latency and picks clocks that miss TTFT.
+    ``spec_k > 0`` additionally profiles the speculative-verify model
+    (the cluster does this on demand too; pre-profiling here keeps
+    shared predictor fixtures cheap).
     """
     hw = HardwareModel(model, chip, tp)
     cap = kv_cap or max(50_000, hw.kv_capacity_tokens())
@@ -180,6 +198,14 @@ def build_predictor(
             max_cached_tokens=max(prefill_tokens, 32_768),
         ),
     )
+    if spec_k > 0:
+        pred.ensure_verify_profile(
+            hw,
+            k_options=tuple(sorted({1, 2, 4, 8, spec_k})),
+            draft_frac=spec_draft_frac,
+            ranges=ProfileRanges(max_requests=max_running,
+                                 max_kv_tokens=cap),
+        )
     return pred
 
 
@@ -278,13 +304,15 @@ class PDCluster:
                         self._default_spec_d
                     )
                 self.decode_router: Router = TierAwareEcoRoute(
-                    self._profiles_d, cfg.slo_itl_s
+                    self._profiles_d, cfg.slo_itl_s,
+                    spec_draft_frac=cfg.spec_draft_frac,
                 )
             elif self._varied_decode:
                 for i, spec in enumerate(self.decode_specs):
                     self._profiles_d[i] = self._profile(spec)
                 self.decode_router = EnergyAwareEcoRoute(
-                    self._profiles_d, cfg.slo_itl_s
+                    self._profiles_d, cfg.slo_itl_s,
+                    spec_draft_frac=cfg.spec_draft_frac,
                 )
             else:
                 route_ef = EcoFreq(
@@ -369,6 +397,22 @@ class PDCluster:
                 bank[key] = pred
         pred.adapt_every = c.adapt_every
         pred.online_enabled = c.online_adapt
+        if c.spec_decode:
+            # idempotent: bank-shared predictors profile the verify
+            # model once; spec_decode=False never touches it
+            hw = self._hw_for(spec)
+            kv_cap = c.kv_capacity_tokens or max(
+                50_000, hw.kv_capacity_tokens()
+            )
+            pred.ensure_verify_profile(
+                hw,
+                k_options=tuple(sorted({1, 2, 4, 8, c.spec_k})),
+                draft_frac=c.spec_draft_frac,
+                ranges=ProfileRanges(
+                    max_requests=c.decode_max_running,
+                    max_kv_tokens=kv_cap,
+                ),
+            )
         self._preds[key] = pred
         return pred
 
@@ -410,7 +454,7 @@ class PDCluster:
         prefill-i and decode-i shared one stream, so every instance pair
         saw identical measurement noise.  SeedSequence mixing keys each
         (run seed, phase, slot) to an independent stream."""
-        code = {"prefill": 1, "decode": 2, "hybrid": 3}[phase]
+        code = {"prefill": 1, "decode": 2, "hybrid": 3, "spec": 4}[phase]
         ss = np.random.SeedSequence([self.cfg.seed, code, idx])
         return int(ss.generate_state(1, np.uint64)[0])
 
@@ -479,6 +523,10 @@ class PDCluster:
             record_trace=c.record_traces,
             preempt_cap=self._preempt_cap(),
             page_size=c.kv_page_size if c.paged else 0,
+            spec_k=c.spec_k if c.spec_decode else 0,
+            spec_draft_frac=c.spec_draft_frac,
+            spec_accept_default=c.spec_accept_default,
+            spec_seed=self._instance_seed("spec", idx),
         )
 
     def _preempt_cap(self) -> int:
@@ -663,10 +711,16 @@ class PDCluster:
 
     def _route_req(self, req: Request) -> RouteRequest:
         """Router view of the request: KV it brings (prompt + recomputed
-        context after a preemption) and its resolved tier target."""
+        context after a preemption), its resolved tier target, and its
+        draft-acceptance propensity (the acceptance what-if axis)."""
         return RouteRequest(
             req.prompt_len + req.tokens_out,
             itl_slo_s=req.slo_itl_s if req.slo_itl_s > 0 else None,
+            accept_rate=(
+                (req.accept_rate if req.accept_rate >= 0.0
+                 else self.cfg.spec_accept_default)
+                if self.cfg.spec_decode else None
+            ),
         )
 
     def _route_decode(self, req: Request) -> None:
@@ -683,6 +737,8 @@ class PDCluster:
                 kv_headroom=e.kv_headroom,
                 latency_bias_s=self._bias_ewma.get(e.idx, 0.0),
                 binding_itl_s=e.binding_itl_s,
+                spec_k=e.spec_k,
+                accept_ewma=e.accept_ewma if e.spec_k > 0 else None,
             )
             for e in self.decode
         ]
@@ -742,6 +798,11 @@ class PDCluster:
             r.preemptions = 0
             r.preempt_gen_len = 0
             r.resume_pending = False
+            # speculative-decode accounting (accept_rate is workload
+            # identity, not lifecycle — it survives across runs)
+            r.spec_iters = 0
+            r.spec_drafted = 0
+            r.spec_accepted = 0
             self._push(r.arrival_s, _ARRIVAL, r)
         pending = len(requests)
         self._arrived_tokens = 0
@@ -807,9 +868,9 @@ class PDCluster:
                 if not eng.alive:
                     continue
                 measured = eng._iter_cost.time_s
-                pred = eng.predictor.predict_decode(
-                    eng._iter_f, eng.n_req, eng.n_kv
-                )[0] if eng.running else measured
+                pred = eng.predicted_iter_s(
+                    eng._iter_f
+                ) if eng.running else measured
                 self._update_bias(eng.idx, measured, pred)
                 done = eng.finish_iteration(self.now)
                 pending -= len(done)

@@ -12,6 +12,14 @@ backends. Backends provide the iteration's latency/energy ground truth and
   forwards of a reduced model; the virtual clock still advances by the
   hardware model's time (CPU wall time is meaningless for TPU SLOs), so
   controller behavior is identical while tokens are real.
+
+Decode iterations have **variable yield**: with speculative decoding
+(``spec_k > 0``) one draft–verify iteration emits the accepted draft
+prefix plus a bonus token (1..k+1 tokens per request).  The acceptance
+*realization* is drawn by the engine from a seeded stream — a
+control-plane decision shared by both backends, which is what keeps
+Sim==Real parity exact through speculation — while the backends price
+(Sim) or actually execute (Real) the draft steps + multi-token verify.
 """
 from __future__ import annotations
 
@@ -23,7 +31,12 @@ from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.ecofreq import BatchInfo, FreqController, SystemState
+from repro.core.ecofreq import (
+    BatchInfo,
+    FreqController,
+    SystemState,
+    expected_emitted,
+)
 from repro.core.ecopred import EcoPred
 from repro.core.hwmodel import HardwareModel, IterCost
 from repro.serving.metrics import InstanceEnergy
@@ -164,6 +177,18 @@ class SimBackend:
     def decode_iter(self, reqs: List[Request], n_req: int, n_kv: int,
                     f: float) -> IterCost:
         c = self.hw.decode_iter(n_req, n_kv, f)
+        t = c.time_s * self._noise()
+        return IterCost(t, c.power_w, c.power_w * t, c.f_effective, c.theta)
+
+    def spec_decode_iter(self, reqs: List[Request], n_req: int, n_kv: int,
+                         k: int, accepts: List[int], draft_frac: float,
+                         f: float) -> IterCost:
+        """One speculative iteration: k+1 draft-model steps + a k-token
+        verify forward.  ``accepts`` (the engine's acceptance
+        realization) does not change this iteration's cost — drafting
+        and verification run in full either way; acceptance decides the
+        *yield* the engine books in finish_iteration."""
+        c = self.hw.spec_decode_iter(n_req, n_kv, k, draft_frac, f)
         t = c.time_s * self._noise()
         return IterCost(t, c.power_w, c.power_w * t, c.f_effective, c.theta)
 
@@ -427,6 +452,17 @@ class DecodeEngine(ParkableEngine):
     # admission/headroom/cost all see the fragmentation a block-pool
     # allocator actually pays (0 = legacy token granularity, bit-exact)
     page_size: int = 0
+    # speculative decoding: k > 0 turns every iteration into a
+    # draft–verify pass that can emit up to k+1 tokens per request
+    # (0 = legacy single-token decode, bit-exact).  The acceptance
+    # *realization* is a control-plane decision drawn from spec_seed so
+    # Sim and Real backends see identical yields (parity); the mechanics
+    # (k+1-row verify forward, page-exact rollback) are the backend's.
+    spec_k: int = 0
+    spec_draft_frac: float = 0.05
+    spec_accept_default: float = 0.7
+    spec_seed: int = 0
+    spec_ewma_alpha: float = 0.1
 
     waiting: TierQueue = field(default_factory=TierQueue)
     running: List[Request] = field(default_factory=list)
@@ -438,6 +474,10 @@ class DecodeEngine(ParkableEngine):
     _iter_cost: Optional[IterCost] = None
     _iter_f: float = 0.0
     _parked_at: Optional[float] = None
+    # per-instance acceptance-rate EWMA (the controller/router signal)
+    accept_ewma: float = 0.0
+    _iter_accepts: List[int] = field(default_factory=list)
+    _spec_rng: object = None
 
     def __post_init__(self):
         self.energy = InstanceEnergy(
@@ -445,6 +485,8 @@ class DecodeEngine(ParkableEngine):
             idle_power_w=self.backend.hw.idle_power(),
             sleep_power_w=self.backend.hw.sleep_power(),
         )
+        self.accept_ewma = self.spec_accept_default
+        self._spec_rng = np.random.default_rng(self.spec_seed)
 
     @property
     def empty(self) -> bool:
@@ -471,8 +513,19 @@ class DecodeEngine(ParkableEngine):
 
     @property
     def kv_headroom(self) -> int:
-        return self.kv_capacity_tokens - self.n_kv - sum(
-            self._kv_footprint(r.kv_len) for r in self.waiting
+        """Startable KV capacity as the router/admission view it —
+        net of the per-request speculative slack ``_fits`` reserves, so
+        a speculating instance never advertises room it would refuse."""
+        slack = (
+            self._kv_footprint(self.spec_k + 1) if self.spec_k > 0 else 0
+        )
+        return (
+            self.kv_capacity_tokens
+            - self.n_kv - len(self.running) * slack
+            - sum(
+                self._kv_footprint(r.kv_len) + slack
+                for r in self.waiting
+            )
         )
 
     @property
@@ -490,9 +543,17 @@ class DecodeEngine(ParkableEngine):
         self.waiting.append(req)
 
     def _fits(self, r: Request) -> bool:
+        # speculative iterations transiently write k+1 tokens per request
+        # before rollback: admission reserves that slack *page-granular*
+        # (a resident whose tail page is full transiently allocates
+        # whole fresh pages in _grow_for_verify — ceil((k+1)/page) of
+        # them worst-case, which is exactly _kv_footprint(slack)).  The
+        # incoming request's own slack is inside its padded footprint.
+        slack = (self.spec_k + 1) if self.spec_k > 0 else 0
         return (
             len(self.running) < self.max_running
-            and self.n_kv + self._kv_footprint(r.kv_len)
+            and self.n_kv + self._kv_footprint(r.kv_len + slack)
+            + len(self.running) * self._kv_footprint(slack)
             + len(self.running)
             <= self.kv_capacity_tokens
         )
@@ -547,6 +608,52 @@ class DecodeEngine(ParkableEngine):
             if not self._preempt_for(head, now):
                 break
 
+    # -- speculative decode: acceptance realization (control plane) --------
+    def _accept_prob(self, r: Request) -> float:
+        return (
+            r.accept_rate if r.accept_rate >= 0.0
+            else self.spec_accept_default
+        )
+
+    def _draw_accepts(self) -> Tuple[List[int], float]:
+        """Per-request accepted-prefix lengths for this iteration.
+
+        One Bernoulli(p) draw per draft slot, accepted prefix = leading
+        successes — exactly ``k`` uniforms are consumed per request
+        regardless of clipping, so the stream stays aligned between Sim
+        and Real runs (backend-independent parity).  The *clipped* count
+        (emitted = a+1 never exceeds the request's remaining tokens)
+        drives KV growth.
+
+        The EWMA signal is the truncated-geometric MLE of the per-token
+        acceptance probability, ``Σa / Σ(a + 1{a<k})`` — each prefix of
+        length ``a`` observed ``a`` successes and (unless the window was
+        exhausted) one failure.  Feeding the raw accepted *fraction*
+        ``E[a]/k`` instead would systematically understate ``p`` (and
+        hence the per-emitted-token budget) wherever ``p`` is high,
+        since ``expected_emitted`` expects a probability.  Pre-clip
+        values are used so end-of-stream truncation does not read as
+        acceptance collapse.
+        """
+        n, k = len(self.running), self.spec_k
+        # one (n, k) draw consumes the identical bit stream in the
+        # identical order as n sequential k-draws (C-order fill), so
+        # the Sim==Real alignment contract is untouched while the
+        # per-iteration Python overhead drops to O(1)
+        u = self._spec_rng.random((n, k))
+        p = np.fromiter(
+            (self._accept_prob(r) for r in self.running), float, n
+        )
+        raw = (u < p[:, None]).astype(np.int64).cumprod(axis=1).sum(axis=1)
+        succ = int(raw.sum())
+        trials = succ + int((raw < k).sum())
+        p_hat = succ / trials if trials else 1.0
+        accepts = [
+            min(int(a), max(0, r.remaining - 1))
+            for a, r in zip(raw, self.running)
+        ]
+        return accepts, p_hat
+
     def start_iteration(self, now: float) -> Optional[Tuple[float, IterCost]]:
         if not self.alive:
             self.busy = False
@@ -556,13 +663,35 @@ class DecodeEngine(ParkableEngine):
             self.busy = False
             return None
         n_req, n_kv = self.n_req, self.n_kv
-        f = self.controller.select(
-            SystemState(has_waiting=len(self.waiting) > 0, now_s=now,
-                        has_urgent_waiting=self.waiting.has_urgent),
-            BatchInfo("decode", n_req=n_req, n_kv=n_kv,
-                      itl_slo_s=_binding_itl_s(self.running)),
-        )
-        cost = self.backend.decode_iter(self.running, n_req, n_kv, f)
+        state = SystemState(has_waiting=len(self.waiting) > 0, now_s=now,
+                            has_urgent_waiting=self.waiting.has_urgent)
+        if self.spec_k > 0:
+            accepts, p_hat = self._draw_accepts()
+            self._iter_accepts = accepts
+            a = self.spec_ewma_alpha
+            self.accept_ewma = (1 - a) * self.accept_ewma + a * p_hat
+            f = self.controller.select(
+                state,
+                BatchInfo(
+                    "decode", n_req=n_req, n_kv=n_kv,
+                    itl_slo_s=_binding_itl_s(self.running),
+                    spec_k=self.spec_k,
+                    emitted_per_iter=expected_emitted(
+                        self.accept_ewma, self.spec_k
+                    ),
+                ),
+            )
+            cost = self.backend.spec_decode_iter(
+                self.running, n_req, n_kv, self.spec_k, accepts,
+                self.spec_draft_frac, f,
+            )
+        else:
+            f = self.controller.select(
+                state,
+                BatchInfo("decode", n_req=n_req, n_kv=n_kv,
+                          itl_slo_s=_binding_itl_s(self.running)),
+            )
+            cost = self.backend.decode_iter(self.running, n_req, n_kv, f)
         self._iter_cost, self._iter_f = cost, f
         self.busy = True
         self.energy.busy_s += cost.time_s
@@ -570,18 +699,56 @@ class DecodeEngine(ParkableEngine):
         if self.record_trace:
             self.energy.freq_trace.append((now, cost.f_effective, n_req))
         if self.predictor is not None:
-            self.predictor.record_decode(f, n_req, n_kv, cost.time_s)
+            if self.spec_k > 0:
+                self.predictor.record_verify(
+                    f, n_req, n_kv, self.spec_k, cost.time_s
+                )
+            else:
+                self.predictor.record_decode(f, n_req, n_kv, cost.time_s)
         return cost.time_s, cost
 
+    def predicted_iter_s(self, f: float) -> float:
+        """Predicted duration of an iteration at the current state — the
+        straggler-bias reference (verify model when speculating)."""
+        if self.spec_k > 0:
+            return float(self.predictor.predict_verify(
+                f, self.n_req, self.n_kv, self.spec_k
+            )[0])
+        return float(self.predictor.predict_decode(
+            f, self.n_req, self.n_kv
+        )[0])
+
     def finish_iteration(self, now: float) -> List[Request]:
-        """One token per running request; returns newly finished requests."""
+        """Book this iteration's yield; returns newly finished requests.
+
+        Legacy decode emits exactly one token per running request.  A
+        speculative iteration emits ``accepts[i] + 1`` tokens for request
+        ``i`` (the accepted draft prefix plus the verify forward's
+        bonus/correction token) — KV grows by the same amount, and the
+        per-token ITL books as the iteration time split across the yield
+        (all of an iteration's tokens arrive together, so the *per
+        emitted token* latency is dt / yield).  Note the accounting
+        choice: ``max_itl_s`` is the worst per-emitted-token latency,
+        not the worst *burst gap* a streaming client would observe
+        (that gap is the whole iteration's dt, by construction up to
+        ITL × E[emitted] under the pacing budget); SLO attainment is
+        judged on mean ITL (TPOT) for speculative and plain runs alike,
+        so cross-arm comparisons stay apples-to-apples.
+        """
         dt = self._iter_cost.time_s
+        accepts = self._iter_accepts if self.spec_k > 0 else None
+        self._iter_accepts = []
         done: List[Request] = []
         still: List[Request] = []
-        for r in self.running:
-            r.tokens_out += 1
-            r.kv_len += 1
-            r.max_itl_s = max(r.max_itl_s, dt)
+        for i, r in enumerate(self.running):
+            m = 1 if accepts is None else accepts[i] + 1
+            r.tokens_out += m
+            r.kv_len += m
+            r.max_itl_s = max(r.max_itl_s, dt / m)
+            if accepts is not None:
+                r.spec_iters += 1
+                r.spec_drafted += self.spec_k
+                r.spec_accepted += accepts[i]
             if r.tokens_out >= r.decode_len:
                 r.t_finish = now
                 r.phase = Phase.FINISHED
@@ -638,12 +805,11 @@ class HybridEngine(DecodeEngine):
     _locks: dict = field(default_factory=dict)  # rid -> radix lock handle
 
     def __post_init__(self):
+        super().__post_init__()
         # idx may carry the cluster's hybrid view-offset; name by slot
-        self.energy = InstanceEnergy(
-            name=f"hybrid-{self.idx % (1 << 20)}",
-            idle_power_w=self.backend.hw.idle_power(),
-            sleep_power_w=self.backend.hw.sleep_power(),
-        )
+        # (hybrids never speculate — spec_k stays 0: a piggybacked
+        # chunk already owns the iteration's slack)
+        self.energy.name = f"hybrid-{self.idx % (1 << 20)}"
 
     @property
     def empty(self) -> bool:

@@ -190,6 +190,27 @@ class BlockTable:
         self.num_tokens = max(self.num_tokens, n_tokens)
         return fresh
 
+    def shrink(self, n_tokens: int) -> List[int]:
+        """Page-exact rollback: drop the tail pages not needed to cover
+        ``n_tokens`` and return them (already decref'd — freed unless
+        someone else still holds them).  Speculative decoding uses this
+        to discard the KV of rejected draft tokens; rejected offsets
+        *inside* the kept tail page are left as-is — attention masks by
+        length and the next accepted tokens overwrite them.
+
+        Only ever sheds pages the speculation itself appended (fresh,
+        refcount-1 tail pages past the prompt), so shared radix-prefix
+        pages are untouchable by construction.
+        """
+        keep = self.pool.pages_for(n_tokens)
+        assert keep <= len(self.pages), (keep, len(self.pages), n_tokens)
+        tail = self.pages[keep:]
+        if tail:
+            self.pool.decref(tail)
+            del self.pages[keep:]
+        self.num_tokens = n_tokens
+        return tail
+
     def release(self) -> None:
         """Drop every reference this table holds (request leaves)."""
         self.pool.decref(self.pages)

@@ -130,6 +130,62 @@ class RunMetrics:
         t = self.output_tokens()
         return self.energy_j() / t if t else float("inf")
 
+    # first-class efficiency fields (benchmarks read these instead of
+    # recomputing energy/token ratios ad hoc)
+    def energy_per_token_j(self) -> float:
+        """Energy per *emitted* output token (J) — epot under its
+        physical name; identical for speculative and plain runs since
+        both emit the same final streams."""
+        return self.epot_j()
+
+    def tokens_per_joule(self) -> float:
+        """Emitted output tokens per Joule — the quantity the paper's
+        U-curve sweet spots maximize."""
+        e = self.energy_j()
+        return self.output_tokens() / e if e > 0 else 0.0
+
+    # -- speculative decoding -----------------------------------------------
+    def spec_iterations(self) -> int:
+        return sum(r.spec_iters for r in self.requests)
+
+    def spec_drafted(self) -> int:
+        return sum(r.spec_drafted for r in self.requests)
+
+    def spec_accepted(self) -> int:
+        return sum(r.spec_accepted for r in self.requests)
+
+    def acceptance_rate(self) -> Optional[float]:
+        """Accepted fraction of drafted tokens (prefix acceptance);
+        None when the run never speculated."""
+        d = self.spec_drafted()
+        return self.spec_accepted() / d if d else None
+
+    def spec_yield(self) -> Optional[float]:
+        """Mean tokens emitted per speculative iteration (accepted
+        prefix + bonus); None when the run never speculated."""
+        it = self.spec_iterations()
+        return (self.spec_accepted() + it) / it if it else None
+
+    def energy_per_accepted_token_j(self) -> Optional[float]:
+        """Energy per token emitted through speculative iterations
+        (accepted drafts + bonus/correction tokens); None when the run
+        never speculated — or decoded partly *outside* speculation
+        (e.g. hybrid instances in a spec cluster), where whole-run
+        energy over spec-only tokens would overstate the metric.
+        Lower than the non-speculative J/token when acceptance
+        amortizes the weight/KV streams."""
+        it = self.spec_iterations()
+        if not it:
+            return None
+        spec_tokens = self.spec_accepted() + it
+        non_spec = sum(
+            r.tokens_out - (r.spec_accepted + r.spec_iters)
+            for r in self.requests
+        )
+        if non_spec > 0:
+            return None
+        return self.energy_j() / spec_tokens
+
     def preemptions_total(self) -> int:
         return sum(r.preemptions for r in self.requests)
 
@@ -179,6 +235,12 @@ class RunMetrics:
             extra["shed_frac"] = round(self.shed_frac(), 4)
         if self.preemptions_total() > 0:
             extra["preemptions"] = self.preemptions_total()
+        if self.acceptance_rate() is not None:
+            extra["accept_rate"] = round(self.acceptance_rate(), 4)
+            extra["spec_yield"] = round(self.spec_yield(), 4)
+            epaj = self.energy_per_accepted_token_j()
+            if epaj is not None:  # None: decode partly non-speculative
+                extra["energy_per_accepted_tok_mj"] = round(epaj * 1e3, 3)
         return {
             "n_requests": len(self.requests),
             "finished_frac": round(self.finished_frac(), 4),
@@ -192,6 +254,7 @@ class RunMetrics:
             else 0.0,
             "energy_j": round(self.energy_j(), 1),
             "epot_mj": round(self.epot_j() * 1e3, 3),
+            "tok_per_j": round(self.tokens_per_joule(), 3),
             "throughput_tok_s": round(self.throughput_tok_s(), 1),
             "parked_s": round(self.parked_s_total(), 1),
             **extra,

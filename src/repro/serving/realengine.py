@@ -28,6 +28,7 @@ are identical between backends; only token content differs (real here).
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Dict, List, Optional
 
@@ -72,6 +73,9 @@ class RealBackend(SimBackend):
         paged: bool = False,
         page_size: int = 16,
         pool_pages: Optional[int] = None,
+        spec_k: int = 0,
+        draft_cfg: Optional[ModelConfig] = None,
+        draft_params=None,
     ):
         super().__init__(hw, noise_sigma, seed)
         self.cfg = cfg
@@ -113,6 +117,42 @@ class RealBackend(SimBackend):
                 static_argnames=(),
             )
             self._decode_jit = jax.jit(partial(M.decode_step, cfg=cfg))
+
+        # speculative draft–verify execution (needs the paged pool: the
+        # rollback of rejected draft KV is page bookkeeping)
+        self.spec_k = spec_k
+        if spec_k > 0:
+            assert paged, (
+                "real speculative decoding requires paged=True — the "
+                "draft–verify rollback is block-pool page bookkeeping"
+            )
+            assert draft_cfg is not None and draft_params is not None, (
+                "spec_k > 0 needs a draft model (make_draft_config / "
+                "caller-supplied draft_cfg + draft_params)"
+            )
+            assert draft_cfg.vocab_size == cfg.vocab_size, (
+                "draft and target must share a vocabulary"
+            )
+            self.draft_cfg = draft_cfg
+            self.draft_params = draft_params
+            # the drafter keeps a dense ring cache per decode slot; its
+            # "rollback" is implicit (stale positions are masked by the
+            # per-slot position array until overwritten)
+            self.draft_cache = M.init_cache(draft_cfg, slots, max_len)
+            self.prev_tok = np.zeros(slots, np.int32)  # token at pos-1
+            self._draft_prefill_jit = jax.jit(
+                partial(M.prefill, cfg=draft_cfg, max_len=max_len)
+            )
+            self._draft_jit = jax.jit(partial(M.draft_step, cfg=draft_cfg))
+            self._verify_jit = jax.jit(
+                partial(M.verify_step_paged, cfg=cfg)
+            )
+            # token-match telemetry: what greedy accept-prefix sampling
+            # would have accepted (the control plane's acceptance
+            # *realization* is the engine's — backend-independent, so
+            # Sim==Real parity holds through the speculative path)
+            self.spec_real_matches = 0
+            self.spec_real_drafted = 0
 
     # ------------------------------------------------------------------
     # Paged plumbing
@@ -332,6 +372,28 @@ class RealBackend(SimBackend):
         # resident context = prompt + tokens regenerated before a
         # preemption (fresh requests: tokens_out == 0)
         self.pos[slot] = req.prompt_len + req.tokens_out
+        if self.spec_k > 0:
+            self._draft_prefill(req, slot)
+
+    def _draft_prefill(self, req: Request, slot: int) -> None:
+        """Build the drafter's dense cache for a joining request: the
+        draft model ingests the same context the target holds (prompt
+        plus any regenerated tokens after a preemption resume)."""
+        toks = self._context_tokens(req)
+        pad = _bucket(len(toks), hi=self.max_len)
+        buf = np.zeros((1, pad), np.int32)
+        buf[0, : len(toks)] = toks
+        _, dcache = self._draft_prefill_jit(
+            self.draft_params,
+            tokens=jnp.asarray(buf),
+            lengths=jnp.asarray([len(toks)], jnp.int32),
+        )
+
+        def put(dst_leaf, src):
+            return dst_leaf.at[:, slot].set(src[:, 0])
+
+        self.draft_cache = jax.tree.map(put, self.draft_cache, dcache)
+        self.prev_tok[slot] = int(toks[-1])
 
     def release(self, req: Request) -> None:
         slot = self.slot_of.pop(req.rid)
@@ -386,6 +448,115 @@ class RealBackend(SimBackend):
             self._real_decode_step(reqs)
         return super().decode_iter(reqs, n_req, n_kv, f)
 
+    # ------------------------------------------------------------------
+    # Speculative draft–verify (paged)
+    # ------------------------------------------------------------------
+    def _grow_for_verify(self, r: Request, k: int) -> None:
+        """Reserve tail pages for the k+1 tokens the verify forward
+        writes (the rejected suffix rolls back after acceptance).
+
+        Near the slot capacity the window is clamped: speculative
+        positions past ``max_len`` have no page and scatter to the
+        scratch page instead.  That is always safe — an accepted token
+        satisfies ``pos + a + 1 <= prompt + decode <= max_len`` (the
+        caller's sizing contract), so only *rejected* rows can overflow,
+        and no valid row ever attends an overflow position (its query
+        position is below them).
+        """
+        s = self.slot_of[r.rid]
+        table = self.table_of[r.rid]
+        need = min(int(self.pos[s]) + k + 1, self.max_len)
+        try:
+            fresh = table.ensure(need)
+        except PageAllocError:
+            short = self.pool.pages_for(need) - len(table.pages)
+            if not self._evict_radix_for(short):
+                raise
+            fresh = table.ensure(need)
+        if fresh:
+            n = len(table.pages)
+            self.block_tables[s, n - len(fresh): n] = fresh
+
+    def _real_spec_step(self, reqs: List[Request], k: int,
+                        accepts: List[int]) -> None:
+        """One draft–verify iteration over the paged pool.
+
+        Drafting is k+1 batched draft-model steps: a *sync* step that
+        (re-)ingests the token at position ``pos-1`` — idempotent for
+        slots already caught up, and exactly the missing ``d_k`` after a
+        fully-accepted window — then k greedy proposal steps.  The
+        target verifies all proposals in one ``verify_step_paged``
+        forward; per request the engine's acceptance realization ``a``
+        picks the emitted prefix ``d_1..d_a`` plus the verify pass's
+        bonus/correction token, and the pages holding only rejected
+        positions are returned to the pool (page-exact rollback).
+        """
+        for r in reqs:
+            self._grow_for_verify(r, k)
+        # drafting (batched over every slot; free slots write masked
+        # garbage into their own rows, never read)
+        _, _, self.draft_cache = self._draft_jit(
+            self.draft_params,
+            tokens=jnp.asarray(self.prev_tok),
+            cache=self.draft_cache,
+            lengths=jnp.asarray(np.maximum(self.pos - 1, 0)),
+        )
+        drafts = np.zeros((self.slots, k), np.int32)
+        cur = jnp.asarray(self.next_tok)
+        for j in range(k):
+            # clamp so a near-capacity slot's ring never wraps: an
+            # over-the-end write parks on the last slot, whose true
+            # content the next iteration's sync step restores
+            prop, _, self.draft_cache = self._draft_jit(
+                self.draft_params,
+                tokens=cur,
+                cache=self.draft_cache,
+                lengths=jnp.asarray(
+                    np.minimum(self.pos + j, self.max_len - 1)
+                ),
+            )
+            drafts[:, j] = np.asarray(prop)
+            cur = prop
+        # verify: one multi-token forward of [pending, d_1..d_k]
+        toks = np.concatenate([self.next_tok[:, None], drafts], axis=1)
+        logits, self.kvcache = self._verify_jit(
+            self.params,
+            tokens=jnp.asarray(toks),
+            cache=self.kvcache,
+            lengths=jnp.asarray(self.pos),
+            block_tables=jnp.asarray(self.block_tables),
+        )
+        tgt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # (B, k+1)
+        match = np.asarray(
+            M.accept_prefix(jnp.asarray(drafts), jnp.asarray(tgt))
+        )
+        for r, a in zip(reqs, accepts):
+            s = self.slot_of[r.rid]
+            r.output_tokens.extend(
+                int(drafts[s, j]) for j in range(a)
+            )
+            r.output_tokens.append(int(tgt[s, a]))
+            self.spec_real_matches += int(match[s])
+            self.spec_real_drafted += k
+            self.prev_tok[s] = (
+                int(drafts[s, a - 1]) if a > 0 else int(self.next_tok[s])
+            )
+            self.next_tok[s] = int(tgt[s, a])
+            self.pos[s] += a + 1
+            # page-exact rollback of the rejected suffix
+            table = self.table_of[r.rid]
+            table.shrink(int(self.pos[s]))
+            self.block_tables[s, len(table.pages):] = -1
+
+    def spec_decode_iter(self, reqs: List[Request], n_req: int, n_kv: int,
+                         k: int, accepts: List[int], draft_frac: float,
+                         f: float):
+        if reqs:
+            self._real_spec_step(reqs, k, accepts)
+        return super().spec_decode_iter(
+            reqs, n_req, n_kv, k, accepts, draft_frac, f
+        )
+
     def hybrid_iter(self, dec_reqs: List[Request], n_req: int, n_kv: int,
                     pre_reqs: List[Request], takes, n_new: int,
                     n_ctx: int, f: float):
@@ -399,6 +570,24 @@ class RealBackend(SimBackend):
         )
 
 
+def make_draft_config(cfg: ModelConfig) -> ModelConfig:
+    """A small same-vocab drafter for ``cfg`` (the serving config): one
+    super-block at reduced width.  The vocabulary is shared — drafted
+    ids must be the target's ids — and the family (block pattern) is
+    kept so RoPE/windows line up position for position."""
+    assert not cfg.has_mamba, "draft models cover attention configs"
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-draft",
+        n_layers=len(cfg.block_pattern),
+        d_model=32,
+        n_heads=2,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=64 if cfg.d_ff else 0,
+    )
+
+
 def make_real_backend_factory(
     cfg: ModelConfig,
     params,
@@ -408,15 +597,25 @@ def make_real_backend_factory(
     paged: bool = False,
     page_size: int = 16,
     pool_pages: Optional[int] = None,
+    spec_k: int = 0,
+    draft_cfg: Optional[ModelConfig] = None,
+    draft_params=None,
 ):
     """Factory for ClusterConfig.backend_factory: every instance gets its
-    own slot/pool state but shares the (read-only) weights."""
+    own slot/pool state but shares the (read-only) weights.  With
+    ``spec_k > 0`` the decode instances run real draft–verify
+    speculation (requires ``paged=True`` and a draft model)."""
 
     def factory(kind: str, idx: int, hw: HardwareModel, seed: int):
         n_slots = slots if kind in ("decode", "hybrid") else 1
+        # hybrids coalesce prefill chunks between decode steps and stay
+        # single-token; only pure decode instances speculate
+        k = spec_k if kind == "decode" else 0
         return RealBackend(
             hw, cfg, params, slots=n_slots, max_len=max_len, seed=seed,
             paged=paged, page_size=page_size, pool_pages=pool_pages,
+            spec_k=k, draft_cfg=draft_cfg if k else None,
+            draft_params=draft_params if k else None,
         )
 
     return factory

@@ -125,10 +125,25 @@ class Request:
     cached_len: int = 0  # prompt tokens served from the radix prefix cache
     computed_len: int = 0  # prompt tokens prefilled so far (beyond cache)
 
+    # speculative decoding: the request's draft-acceptance propensity
+    # (probability a drafted token is accepted; workload-assigned —
+    # templated/code-like traffic drafts well, creative chat poorly).
+    # < 0 = unknown: the engine substitutes its cluster-level default.
+    accept_rate: float = -1.0
+
     # decode progress
     tokens_out: int = 0  # decode tokens generated so far
     kv_len: int = 0  # resident tokens in the decode instance's cache
     max_itl_s: float = 0.0
+    # speculative-decode accounting (all zero for non-spec runs):
+    # spec_iters   — multi-token iterations this request participated in
+    # spec_drafted — draft tokens proposed for it (spec_iters × k)
+    # spec_accepted— drafted tokens accepted *and emitted* (clipped at
+    #                the request's own end of stream, so
+    #                emitted-via-spec == spec_accepted + spec_iters)
+    spec_iters: int = 0
+    spec_drafted: int = 0
+    spec_accepted: int = 0
 
     # real-engine payloads (None in pure simulation)
     prompt_tokens: Optional[list] = None

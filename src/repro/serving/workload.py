@@ -359,6 +359,66 @@ def multiturn_workload(
     return reqs
 
 
+def spec_heterogeneity_workload(
+    base_rps: float,
+    duration_s: float,
+    seed: int = 0,
+    templated_frac: float = 0.5,
+    accept_templated: float = 0.88,
+    accept_chat: float = 0.55,
+    accept_jitter: float = 0.06,
+) -> List[Request]:
+    """Two-class mix whose *draft acceptance* differs — the speculative-
+    decoding stress trace.
+
+    * ``templated`` — code/boilerplate *generation* (moderate prompts,
+      long structured outputs): drafts verify well,
+      ``accept_rate ≈ accept_templated``.
+    * ``chat``      — open-ended conversation (LMSYS lengths): drafts
+      verify poorly, ``accept_rate ≈ accept_chat``.
+
+    Per-request rates jitter around the class mean, so a decode
+    instance's acceptance EWMA genuinely moves with its resident mix —
+    which is exactly the state-space dimension acceptance-aware
+    EcoRoute/EcoFreq exploit (and what ``fig_specdec`` measures).
+    """
+    templated_ds = DatasetDist(
+        "templated",
+        prefill=LengthDist(640.0, 320.0),
+        decode=LengthDist(300.0, 140.0),
+    )
+    rng = np.random.default_rng(seed + 3)
+    templated = _tag_accept(
+        poisson_workload(
+            templated_ds, templated_frac * base_rps, duration_s, seed
+        ),
+        "templated", accept_templated, accept_jitter, rng,
+    )
+    chat = _tag_accept(
+        poisson_workload(
+            LMSYS, (1.0 - templated_frac) * base_rps, duration_s, seed + 1
+        ),
+        "chat", accept_chat, accept_jitter, rng,
+    )
+    reqs = templated + chat
+    reqs.sort(key=lambda r: r.arrival_s)
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
+
+
+def _tag_accept(
+    reqs: List[Request], kind: str, mean: float, jitter: float,
+    rng: np.random.Generator,
+) -> List[Request]:
+    for r in reqs:
+        r.kind = kind
+        r.accept_rate = float(
+            np.clip(rng.normal(mean, jitter), 0.05, 0.98)
+        )
+    return reqs
+
+
 def attach_tokens(
     reqs: List[Request], vocab_size: int, seed: int = 0
 ) -> List[Request]:

@@ -87,6 +87,7 @@ def test_autoscaler_parks_and_readmits_on_load_step(bank):
                for e in m.instances)
 
 
+@pytest.mark.slow
 def test_autoscaler_saves_energy_at_comparable_slo(bank):
     auto = AutoScaleConfig(interval_s=2.0, cooldown_s=4.0)
     runs = {}

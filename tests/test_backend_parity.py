@@ -144,6 +144,118 @@ def test_sim_and_real_backends_agree(rc, rparams, pred, scenario):
         assert len(r.output_tokens) == r.decode_len + 1
 
 
+@pytest.fixture(scope="module")
+def draft(rc):
+    from repro.serving.realengine import make_draft_config
+
+    dc = make_draft_config(rc)
+    return dc, M.init_params(dc, jax.random.key(1))
+
+
+@pytest.fixture(scope="module")
+def spec_pred():
+    return build_predictor(MODEL, A100, A100.freq_levels_2,
+                           kv_cap=400_000, spec_k=2)
+
+
+def test_sim_and_real_agree_through_speculation(rc, rparams, draft,
+                                                spec_pred):
+    """Sim==Real parity through the draft–verify path: the acceptance
+    realization is a control-plane stream, so both backends schedule
+    identical variable-yield iterations — and the real side actually
+    drafts, verifies in one k-token forward, and rolls rejected pages
+    back (pool refcounts balance after drain)."""
+    dc, dparams = draft
+    reqs_sim = _workload(rc, tiered=False)
+    reqs_real = _workload(rc, tiered=False)
+    kw = dict(paged=True, kv_page_size=16, prefill_chunk_tokens=32,
+              spec_decode=True, spec_k=2)
+
+    def cfg(**extra):
+        return ClusterConfig(
+            model=MODEL, chip=A100, n_prefill=1, n_decode=2,
+            policy="voltana", predictor=spec_pred,
+            kv_capacity_tokens=400_000, online_adapt=False,
+            decode_max_running=8, seed=4, noise_sigma=0.0, **kw, **extra,
+        )
+
+    cl_sim = PDCluster(cfg())
+    m_sim = cl_sim.run(reqs_sim)
+    cl_real = PDCluster(cfg(backend_factory=make_real_backend_factory(
+        rc, rparams, slots=8, max_len=128, paged=True, page_size=16,
+        spec_k=2, draft_cfg=dc, draft_params=dparams,
+    )))
+    m_real = cl_real.run(reqs_real)
+
+    assert m_sim.finished_frac() == m_real.finished_frac() == 1.0
+    assert m_sim.spec_iterations() > 0
+    for rs, rr in zip(reqs_sim, reqs_real):
+        assert rs.t_finish == pytest.approx(rr.t_finish)
+        assert rs.max_itl_s == pytest.approx(rr.max_itl_s)
+        assert rs.decode_instance == rr.decode_instance
+        # identical acceptance realizations (the parity mechanism)
+        assert rs.spec_iters == rr.spec_iters
+        assert rs.spec_accepted == rr.spec_accepted
+        # the real side delivered complete streams through speculation
+        assert len(rr.output_tokens) == rr.decode_len + 1
+    assert m_sim.energy_j() == pytest.approx(m_real.energy_j(), rel=1e-9)
+    assert m_sim.acceptance_rate() == m_real.acceptance_rate()
+
+    # no page leaks through rollback: every decode pool drains empty
+    for e in cl_real.decode:
+        e.backend.pool.assert_empty()
+    # the drafter really proposed tokens (telemetry populated)
+    assert sum(e.backend.spec_real_drafted for e in cl_real.decode) > 0
+
+
+def test_real_spec_at_slot_capacity(rc, rparams, draft, spec_pred):
+    """A request whose context ends within spec_k tokens of the slot
+    capacity must complete: the verify window clamps at max_len and the
+    overflow rows (always rejected by the acceptance clip) scatter to
+    the scratch page instead of aliasing live pages."""
+    from repro.serving import Request
+
+    dc, dparams = draft
+    max_len = 64
+    # context tops out exactly at max_len (prompt 40 + 1 first + 23
+    # decode iters): the last iterations' windows overflow the slot
+    reqs = [Request(0, 0.0, prompt_len=40, decode_len=24),
+            Request(1, 0.05, prompt_len=33, decode_len=12)]
+    attach_tokens(reqs, rc.vocab_size, seed=6)
+    cfg = ClusterConfig(
+        model=MODEL, chip=A100, n_prefill=1, n_decode=1,
+        policy="voltana", predictor=spec_pred,
+        kv_capacity_tokens=400_000, online_adapt=False,
+        decode_max_running=4, seed=4, noise_sigma=0.0,
+        prefill_chunk_tokens=32, paged=True, kv_page_size=16,
+        spec_decode=True, spec_k=2,
+        backend_factory=make_real_backend_factory(
+            rc, rparams, slots=4, max_len=max_len, paged=True,
+            page_size=16, spec_k=2, draft_cfg=dc, draft_params=dparams,
+        ),
+    )
+    cl = PDCluster(cfg)
+    m = cl.run(reqs)
+    assert m.finished_frac() == 1.0
+    for r in reqs:
+        assert r.kv_len == r.prompt_len + r.decode_len <= max_len
+        assert len(r.output_tokens) == r.decode_len + 1
+    cl.decode[0].backend.pool.assert_empty()
+
+
+def test_real_spec_requires_paged(rc, rparams, draft):
+    dc, dparams = draft
+    from repro.serving.realengine import RealBackend
+    from repro.core.hwmodel import HardwareModel
+
+    with pytest.raises(AssertionError, match="paged"):
+        RealBackend(
+            HardwareModel(MODEL, A100), rc, rparams, slots=2,
+            max_len=64, paged=False, spec_k=2, draft_cfg=dc,
+            draft_params=dparams,
+        )
+
+
 def _pressure_workload(rc, n_batch=3, n_int=3):
     """Batch-tier long decodes occupy a tiny decode instance; an
     interactive burst lands while they hold the KV (forces preemption)."""

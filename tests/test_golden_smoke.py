@@ -96,6 +96,33 @@ def test_slo_tiers_acceptance(monkeypatch_module, tmp_path_factory):
     assert base["int_ttft_attain"] == pytest.approx(0.722, abs=0.08)
 
 
+def test_specdec_acceptance(monkeypatch_module, tmp_path_factory):
+    """Acceptance bar for the speculative-decoding PR: lower energy per
+    emitted token on the acceptance-heterogeneous trace vs the
+    single-token baseline, at equal-or-better TTFT/ITL attainment and
+    zero request loss.  (Captured smoke run: 14.0% saving at unchanged
+    1.000/1.000 attainment, acceptance 0.49, yield 2.96 tokens/iter.)"""
+    from benchmarks import fig_specdec
+
+    out = tmp_path_factory.mktemp("specdec")
+    rows = fig_specdec.run(out_dir=str(out))
+
+    spec = _row(rows, "specdec-k4")
+    assert spec["finished_frac"] == 1.0
+
+    d = _row(rows, "delta_vs_baseline[specdec-k4]")
+    assert d["epot_saving_frac"] >= 0.05  # the PR's acceptance floor
+    # golden: captured 0.1396; catches the saving collapsing toward the
+    # floor as loudly as a hard regression
+    assert d["epot_saving_frac"] == pytest.approx(0.1396, abs=0.05)
+    assert d["ttft_attain_delta"] >= -0.01
+    assert d["itl_attain_delta"] >= -0.01
+    # acceptance/yield goldens: the workload's heterogeneity actually
+    # reached the decode fleet (yield well above 1, below the k+1 cap)
+    assert d["accept_rate"] == pytest.approx(0.4911, abs=0.06)
+    assert d["spec_yield"] == pytest.approx(2.9643, abs=0.35)
+
+
 def test_prefix_cache_acceptance(monkeypatch_module, tmp_path_factory):
     """Acceptance bar for the chunked-prefill + radix-cache PR: ≥15%
     lower energy/token on the multi-turn trace vs the no-cache

@@ -175,6 +175,7 @@ def test_invariants_grid(
     )
 
 
+@pytest.mark.slow
 @given(
     seed=st.integers(0, 2**16),
     n_p=st.integers(1, 3),

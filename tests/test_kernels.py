@@ -9,6 +9,8 @@ from repro.kernels.decode_attention import (
     decode_attention_ref,
     paged_decode_attention,
     paged_decode_attention_ref,
+    paged_verify_attention,
+    paged_verify_attention_ref,
 )
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.ssd import ssd_ref, ssd_scan
@@ -118,6 +120,75 @@ def test_paged_decode_attention_page_boundary(extra):
     out = paged_decode_attention(q, kp, vp, bt, lengths)
     ref = paged_decode_attention_ref(q, kp, vp, bt, lengths)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window,softcap", [
+    (None, None), (24, None), (None, 30.0),
+])
+def test_paged_verify_attention_sweep(k, dtype, window, softcap):
+    """Multi-token verify (T = k+1 query rows, causal within the
+    speculation window) vs the dense oracle at k ∈ {1, 2, 4}."""
+    P, ps, Hq, Hkv, Dh, Pmax, B = 32, 8, 8, 2, 64, 6, 3
+    T = k + 1
+    ks = jax.random.split(jax.random.key(9), 4)
+    q = jax.random.normal(ks[0], (B, T, Hq, Dh), dtype)
+    kp = jax.random.normal(ks[1], (P, ps, Hkv, Dh), dtype)
+    vp = jax.random.normal(ks[2], (P, ps, Hkv, Dh), dtype)
+    perm = np.asarray(jax.random.permutation(ks[3], P))
+    lengths = np.array([T + 1, (ps * Pmax) // 2, ps * Pmax - 1])
+    bt = np.full((B, Pmax), -1, np.int32)
+    for b in range(B):
+        n = -(-int(lengths[b]) // ps)
+        bt[b, :n] = perm[b * Pmax: b * Pmax + n]
+    bt, lengths = jnp.asarray(bt), jnp.asarray(lengths, jnp.int32)
+    out = paged_verify_attention(q, kp, vp, bt, lengths,
+                                 window=window, softcap=softcap)
+    ref = paged_verify_attention_ref(q, kp, vp, bt, lengths,
+                                     window=window, softcap=softcap)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+@pytest.mark.parametrize("extra", [0, 1])
+def test_paged_verify_attention_page_boundary(k, extra):
+    """len % page_size ∈ {0, 1} with the speculation window straddling
+    the page boundary — the rollback-critical corners."""
+    P, ps, Hkv, Dh, Hq, B, Pmax = 16, 8, 2, 32, 4, 2, 4
+    T = k + 1
+    ks = jax.random.split(jax.random.key(10), 3)
+    q = jax.random.normal(ks[0], (B, T, Hq, Dh))
+    kp = jax.random.normal(ks[1], (P, ps, Hkv, Dh))
+    vp = jax.random.normal(ks[2], (P, ps, Hkv, Dh))
+    L = 2 * ps + extra  # total INCLUDING the T new tokens
+    n = -(-L // ps)
+    bt = np.full((B, Pmax), -1, np.int32)
+    bt[0, :n] = np.arange(n)
+    bt[1, :n] = np.arange(n) + 8
+    lengths = jnp.asarray([L, L], jnp.int32)
+    bt = jnp.asarray(bt)
+    out = paged_verify_attention(q, kp, vp, bt, lengths)
+    ref = paged_verify_attention_ref(q, kp, vp, bt, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_paged_verify_t1_equals_paged_decode():
+    """T == 1 degenerates to the single-token paged kernel exactly."""
+    P, ps, Hkv, Dh, Hq, B, Pmax = 12, 8, 2, 32, 4, 2, 3
+    ks = jax.random.split(jax.random.key(11), 3)
+    q = jax.random.normal(ks[0], (B, 1, Hq, Dh))
+    kp = jax.random.normal(ks[1], (P, ps, Hkv, Dh))
+    vp = jax.random.normal(ks[2], (P, ps, Hkv, Dh))
+    bt = jnp.asarray(np.array([[0, 1, -1], [4, 5, 6]], np.int32))
+    lengths = jnp.asarray([ps + 3, 3 * ps], jnp.int32)
+    ver = paged_verify_attention(q, kp, vp, bt, lengths)
+    dec = paged_decode_attention(q[:, 0], kp, vp, bt, lengths)
+    np.testing.assert_allclose(np.asarray(ver[:, 0]), np.asarray(dec),
+                               atol=0.0)
 
 
 def test_paged_matches_ring_decode_attention():

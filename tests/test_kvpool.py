@@ -283,6 +283,7 @@ def test_lifecycle_grid_no_leak_no_alias(seed, ps):
 
 if HAVE_HYPOTHESIS:
 
+    @pytest.mark.slow
     @settings(max_examples=60, deadline=None)
     @given(st.integers(0, 10_000), st.sampled_from([2, 3, 4, 8, 16]))
     def test_lifecycle_property_no_leak_no_alias(seed, ps):

@@ -126,6 +126,60 @@ def test_paged_prefill_decode_matches_forward():
         pos = pos + 1
 
 
+def test_verify_step_paged_matches_sequential_decode():
+    """The k-token verify forward is bit-identical to running the same
+    tokens through k+1 sequential paged decode steps — speculation is a
+    re-batching, never a numerics change."""
+    cfg = _fp32(REGISTRY["llama-3.1-8b"].reduced())
+    params = M.init_params(cfg, jax.random.key(0))
+    B, P_len, ps, T = 2, 20, 8, 4
+    toks = jax.random.randint(jax.random.key(3), (B, P_len), 0,
+                              cfg.vocab_size)
+    num_pages, Pmax = 16, 4
+    cache = M.init_paged_cache(cfg, num_pages, ps)
+    bt = np.full((B, Pmax), -1, np.int32)
+    bt[0] = np.arange(Pmax)
+    bt[1] = np.arange(Pmax) + 8
+    lengths = jnp.full((B,), P_len, jnp.int32)
+    logits, cache = M.prefill_paged(
+        params, cfg, toks, lengths, jnp.zeros((B,), jnp.int32),
+        jnp.asarray(bt), cache,
+    )
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    seq_logits, seq_cache, chain = [], cache, [cur]
+    for j in range(T):
+        lg, seq_cache = M.decode_step_paged(
+            params, cfg, chain[-1], seq_cache, lengths + j,
+            jnp.asarray(bt),
+        )
+        seq_logits.append(lg)
+        chain.append(jnp.argmax(lg, -1).astype(jnp.int32))
+    ver_logits, ver_cache = M.verify_step_paged(
+        params, cfg, jnp.stack(chain[:T], axis=1), cache, lengths,
+        jnp.asarray(bt),
+    )
+    for j in range(T):
+        np.testing.assert_array_equal(
+            np.asarray(ver_logits[:, j]), np.asarray(seq_logits[j]),
+            err_msg=f"verify row {j} != sequential decode step {j}",
+        )
+    for a, b in zip(jax.tree.leaves(ver_cache), jax.tree.leaves(seq_cache)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_accept_prefix_sampling():
+    draft = jnp.asarray([[5, 6, 7], [5, 6, 7], [1, 2, 3], [9, 9, 9]])
+    target = jnp.asarray([
+        [5, 6, 7, 8],  # all accepted -> 3
+        [5, 0, 7, 8],  # mismatch at row 1 -> 1
+        [0, 2, 3, 4],  # mismatch at row 0 -> 0
+        [9, 9, 0, 4],  # prefix of 2
+    ])
+    np.testing.assert_array_equal(
+        np.asarray(M.accept_prefix(draft, target)), [3, 1, 0, 2]
+    )
+
+
 def test_paged_prefill_resumes_from_resident_prefix():
     """A prefill that only computes the suffix against resident prefix
     pages must equal the whole-prompt prefill (zero-recompute reuse)."""

@@ -179,6 +179,7 @@ def test_cache_affinity_keeps_conversations_together(pred):
     assert frac > 0.6
 
 
+@pytest.mark.slow
 def test_cache_saves_energy_at_same_slo(pred):
     reqs = multiturn_workload(30, 90.0, seed=10, think_mean_s=3.0)
     m_cache = PDCluster(_cfg(pred, prefix_cache=True)).run(reqs)
@@ -348,6 +349,7 @@ def test_radix_properties_grid(seed, capacity):
 from _hyp import given, settings, st  # noqa: E402
 
 
+@pytest.mark.slow
 @given(seed=st.integers(0, 2**16), capacity=st.sampled_from([32, 64, 200]))
 @settings(max_examples=25, deadline=None)
 def test_radix_properties_sweep(seed, capacity):

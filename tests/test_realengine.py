@@ -59,6 +59,7 @@ def test_real_cluster_end_to_end(rc, rparams, pred):
         assert len(r.output_tokens) == r.decode_len + 1
 
 
+@pytest.mark.slow
 def test_real_tokens_match_direct_model_loop(rc, rparams, pred):
     """The served greedy continuation equals a direct prefill+decode loop
     on the same weights — the serving layer adds no token-level drift."""

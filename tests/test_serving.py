@@ -55,6 +55,7 @@ def test_voltana_saves_energy_at_matched_slo(pred):
     assert mv.energy_j() < 0.8 * mh.energy_j()  # ≥20% saving at low RPS
 
 
+@pytest.mark.slow
 def test_static_sweet_collapses_at_high_rps(pred):
     """Paper Fig. 16: SGLang-1005 loses SLO attainment under load while
     VoltanaLLM boosts and holds it."""
@@ -107,6 +108,7 @@ def test_straggler_steering(pred):
     assert n0 < 0.7 * n1
 
 
+@pytest.mark.slow
 def test_ecofreq_only_vs_full(pred):
     """EcoRoute adds decode-side savings on top of EcoFreq (Fig. 17)."""
     m1, _ = _run(pred, rps=30.0, dur=60.0, policy="ecofreq-only")

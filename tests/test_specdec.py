@@ -1,0 +1,361 @@
+"""Speculative draft–verify decoding: cost model, variable-yield
+scheduling, page-exact rollback, and the bit-exactness contract.
+
+The one-token-per-iteration assumption used to be load-bearing in every
+serving layer; these tests pin the refactor's two promises:
+
+* ``spec_decode=False`` is **bit-exact** with pre-speculation main (the
+  PR-4 golden energies reproduce to the last ulp);
+* ``spec_decode=True`` emits variable yields whose accounting balances
+  exactly — tokens, KV growth, acceptance counters, pool refcounts.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import REGISTRY
+from repro.core.ecofreq import BatchInfo, EcoFreq, SystemState, expected_emitted
+from repro.core.hwmodel import HardwareModel, energy_frequency_curve
+from repro.core.power import A100
+from repro.serving import ClusterConfig, KVPool, PDCluster, poisson_workload
+from repro.serving.kvpool import BlockTable
+from repro.serving.workload import SHAREGPT, spec_heterogeneity_workload
+from tests._hyp import HAVE_HYPOTHESIS, given, settings, st
+
+MODEL = REGISTRY["llama-3.1-8b"]
+
+
+# ---------------------------------------------------------------------------
+# expected_emitted (the acceptance → yield map every layer shares)
+# ---------------------------------------------------------------------------
+
+
+def test_expected_emitted_values():
+    assert expected_emitted(0.0, 4) == 1.0  # nothing accepted: bonus only
+    assert expected_emitted(1.0, 4) == 5.0  # everything accepted: k + 1
+    assert expected_emitted(0.5, 2) == pytest.approx(1.75)  # 1 + .5 + .25
+    assert expected_emitted(0.7, 0) == 1.0  # speculation off
+
+
+def test_expected_emitted_monotone_in_acceptance():
+    k = 4
+    vals = [expected_emitted(p, k) for p in np.linspace(0, 1, 21)]
+    assert all(b >= a for a, b in zip(vals, vals[1:]))
+    assert all(1.0 <= v <= k + 1 for v in vals)
+
+
+# ---------------------------------------------------------------------------
+# Cost model: verify/draft iterations
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def hw():
+    return HardwareModel(MODEL, A100)
+
+
+def test_verify_iter_k0_matches_decode_modulo_kv_write(hw):
+    """k=0 verify is a decode step plus the (tiny) single-token KV
+    write the legacy decode model omits."""
+    d = hw.decode_iter(16, 32_000, A100.f_max)
+    v = hw.verify_iter(16, 32_000, 0, A100.f_max)
+    assert v.time_s == pytest.approx(d.time_s, rel=2e-3)
+    assert v.time_s >= d.time_s  # the write is extra bytes, never less
+
+
+def test_verify_iter_cheaper_per_token_than_decode(hw):
+    """The point of speculation: at memory-bound operating points the
+    verify iteration costs far less than k+1 decode iterations."""
+    k = 4
+    for f in (A100.f_min, A100.f_mem_knee, A100.f_max):
+        d = hw.decode_iter(16, 32_000, f)
+        v = hw.verify_iter(16, 32_000, k, f)
+        assert v.time_s < (k + 1) * d.time_s * 0.6
+        assert v.energy_j < (k + 1) * d.energy_j * 0.6
+
+
+def test_spec_decode_iter_includes_draft_overhead(hw):
+    v = hw.verify_iter(16, 32_000, 4, A100.f_max)
+    s = hw.spec_decode_iter(16, 32_000, 4, 0.05, A100.f_max)
+    d = hw.draft_iter(16, 32_000, 0.05, A100.f_max)
+    assert s.time_s == pytest.approx(v.time_s + 5 * d.time_s, rel=1e-9)
+    assert s.energy_j == pytest.approx(v.energy_j + 5 * d.energy_j, rel=1e-9)
+
+
+def test_verify_u_curve_survives(hw):
+    """The E(f) curve of a speculative iteration must stay U-shaped:
+    an interior sweet spot with both endpoints measurably above it."""
+    curve = energy_frequency_curve(
+        hw, "verify", n_grid=40, n_req=48, n_kv=96_000, k=4
+    )
+    e = [r[2] for r in curve]
+    i = int(np.argmin(e))
+    assert 0 < i < len(e) - 1, "sweet spot pinned to an endpoint"
+    assert e[0] > e[i] * 1.02 and e[-1] > e[i] * 1.02
+
+
+def test_verify_staircases_on_rows_not_requests(hw):
+    """MXU tile padding quantizes on n_req*(k+1): the verify staircase
+    cliff sits at n_req = tile/(k+1), left of the decode cliff."""
+    k = 3
+    tile = A100.mxu_tile
+    at_tile = hw.verify_iter(tile // (k + 1), 4_000, k, A100.f_max)
+    over = hw.verify_iter(tile // (k + 1) + 1, 4_000, k, A100.f_max)
+    # crossing the row boundary launches a whole new tile row
+    assert over.time_s > at_tile.time_s
+
+
+# ---------------------------------------------------------------------------
+# Page-exact rollback (BlockTable.shrink)
+# ---------------------------------------------------------------------------
+
+
+def test_blocktable_shrink_frees_only_speculative_tail():
+    pool = KVPool(16, 4)
+    t = BlockTable(pool)
+    t.ensure(10)  # 3 pages: covers tokens 0..9
+    assert len(t.pages) == 3
+    # speculation grows to 10 + k + 1 = 15 -> 4 pages
+    t.ensure(15)
+    assert len(t.pages) == 4
+    # only 2 drafts accepted: roll back to 13 tokens -> still 4 pages
+    freed = t.shrink(13)
+    assert freed == [] and len(t.pages) == 4
+    # nothing accepted: roll back to 11 -> tail page freed
+    freed = t.shrink(11)
+    assert len(freed) == 1 and len(t.pages) == 3
+    assert pool.refcount(freed[0]) == 0
+    t.release()
+    pool.assert_empty()
+
+
+def test_blocktable_shrink_never_touches_shared_prefix():
+    pool = KVPool(16, 4)
+    prefix = pool.alloc(2)  # a radix-held prefix (8 tokens)
+    pool.incref(prefix)  # the request's own reference
+    t = BlockTable(pool)
+    t.adopt(list(prefix), 8)
+    t.ensure(8 + 5)  # speculation appends fresh tail pages
+    t.shrink(9)  # reject most of the window
+    assert all(pool.refcount(p) == 2 for p in prefix)  # untouched
+    t.release()
+    assert all(pool.refcount(p) == 1 for p in prefix)  # radix ref only
+    pool.decref(prefix)
+    pool.assert_empty()
+
+
+# ---------------------------------------------------------------------------
+# Variable-yield scheduling (Sim engine invariants)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def bank():
+    return {}
+
+
+def _run(reqs, bank, **kw):
+    cfg = ClusterConfig(
+        model=MODEL, chip=A100, n_prefill=1, n_decode=2,
+        policy="voltana", online_adapt=False, predictor_bank=bank,
+        seed=0, paged=True, **kw,
+    )
+    return PDCluster(cfg).run(reqs)
+
+
+def test_spec_run_token_accounting_balances(bank):
+    reqs = spec_heterogeneity_workload(6.0, 30.0, seed=5)
+    m = _run(reqs, bank, spec_decode=True, spec_k=4)
+    assert m.finished_frac() == 1.0
+    for r in m.requests:
+        # every request ends exactly at its stream length
+        assert r.tokens_out == r.decode_len
+        assert r.kv_len == r.prompt_len + r.decode_len
+        # emitted-via-spec = accepted + one bonus per iteration
+        assert r.spec_accepted + r.spec_iters == r.tokens_out
+        assert r.spec_drafted == 4 * r.spec_iters
+        assert 0 <= r.spec_accepted <= r.spec_drafted
+    assert 0.0 < m.acceptance_rate() < 1.0
+    assert 1.0 <= m.spec_yield() <= 5.0
+    assert m.energy_per_accepted_token_j() == pytest.approx(m.epot_j())
+
+
+def test_spec_yield_tracks_acceptance_heterogeneity(bank):
+    """Per-class acceptance must separate: templated requests accept
+    more of their drafts than chat requests."""
+    reqs = spec_heterogeneity_workload(6.0, 30.0, seed=5)
+    m = _run(reqs, bank, spec_decode=True, spec_k=4)
+
+    def cls_rate(kind):
+        d = sum(r.spec_drafted for r in m.requests if r.kind == kind)
+        a = sum(r.spec_accepted for r in m.requests if r.kind == kind)
+        return a / d
+
+    assert cls_rate("templated") > cls_rate("chat") + 0.15
+
+
+def test_spec_saves_energy_per_token_at_equal_attainment(bank):
+    reqs = poisson_workload(SHAREGPT, 5.0, 30.0, seed=3)
+    base = _run(reqs, bank, spec_decode=False)
+    b_epot = base.energy_per_token_j()
+    b_ttft, b_itl = base.ttft_attainment(), base.itl_attainment()
+    reqs = poisson_workload(SHAREGPT, 5.0, 30.0, seed=3)
+    spec = _run(reqs, bank, spec_decode=True, spec_k=4)
+    assert spec.energy_per_token_j() < b_epot
+    assert spec.ttft_attainment() >= b_ttft - 1e-9
+    assert spec.itl_attainment() >= b_itl - 1e-9
+
+
+def test_spec_with_tiers_and_preemption(bank):
+    """Speculation composes with the tier subsystem: deadline pacing,
+    preemption recompute and admission all run over variable yields."""
+    from repro.serving import DEFAULT_TIERS
+    from repro.serving.workload import tiered_workload
+
+    reqs = tiered_workload(6.0, 30.0, seed=7)
+    m = _run(reqs, bank, spec_decode=True, spec_k=4,
+             slo_tiers=DEFAULT_TIERS)
+    assert m.finished_frac() == 1.0
+    for r in m.requests:
+        if r.admitted:
+            assert r.tokens_out == r.decode_len
+
+
+def test_spec_sim_is_deterministic(bank):
+    """The acceptance realization is a seeded control-plane stream:
+    identical configs reproduce identical runs."""
+    r1 = spec_heterogeneity_workload(5.0, 20.0, seed=5)
+    r2 = spec_heterogeneity_workload(5.0, 20.0, seed=5)
+    m1 = _run(r1, bank, spec_decode=True, spec_k=4)
+    m2 = _run(r2, bank, spec_decode=True, spec_k=4)
+    assert m1.energy_j() == m2.energy_j()
+    for a, b in zip(r1, r2):
+        assert a.t_finish == b.t_finish
+        assert a.spec_accepted == b.spec_accepted
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness: spec_decode=False vs pre-speculation main (PR-4 pins)
+# ---------------------------------------------------------------------------
+
+# captured on PR-4 main (commit 40b9026) with this exact scenario —
+# these must reproduce to the last ulp with spec_decode=False
+_PR4_GOLDEN = {False: 9563.958314628406, True: 9563.674430277537}
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_spec_off_is_bit_exact_with_pr4_main(paged, bank):
+    reqs = poisson_workload(SHAREGPT, 4.0, 30.0, seed=3)
+    cfg = ClusterConfig(
+        model=MODEL, chip=A100, n_prefill=1, n_decode=2,
+        policy="voltana", online_adapt=False, predictor_bank=bank,
+        seed=0, paged=paged,
+    )
+    m = PDCluster(cfg).run(reqs)
+    assert m.energy_j() == _PR4_GOLDEN[paged]  # exact, not approx
+
+
+def test_spec_defaults_are_off():
+    assert ClusterConfig.__dataclass_fields__["spec_decode"].default is False
+    from repro.serving.engine import DecodeEngine
+
+    assert DecodeEngine.__dataclass_fields__["spec_k"].default == 0
+
+
+# ---------------------------------------------------------------------------
+# EcoFreq pacing under acceptance swings (satellite: property coverage)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def spec_pred():
+    from repro.serving.cluster import build_predictor
+
+    return build_predictor(
+        MODEL, A100, A100.freq_levels_5, kv_cap=400_000, spec_k=4
+    )
+
+
+def _ef(spec_pred, itl=0.06):
+    return EcoFreq(A100.freq_levels_5, spec_pred,
+                   slo_ttft_s=0.6, slo_itl_s=itl)
+
+
+def _pacing_holds(ef, n_req, n_kv, k, p, itl):
+    """The Alg.-1 contract over variable yields: the chosen frequency's
+    predicted iteration time fits the per-emitted-token budget, or no
+    option does and the controller floors it at max(F)."""
+    emit = expected_emitted(p, k)
+    b = BatchInfo("decode", n_req=n_req, n_kv=n_kv, itl_slo_s=itl,
+                  spec_k=k, emitted_per_iter=emit)
+    f = ef.select(SystemState(has_waiting=False), b)
+    budget = itl * emit
+    t = float(ef.predict(np.asarray([f]), b)[0])
+    if t <= budget:
+        return True
+    feasible = ef.predict(np.asarray(ef.freq_options), b) <= budget
+    return not feasible.any() and f == max(ef.freq_options)
+
+
+def test_pacing_grid_acceptance_swing(spec_pred):
+    """Always-on grid: pacing holds across the full acceptance range,
+    batch sizes, and binding tier ITLs (the hypothesis sweep widens
+    this; the grid keeps the invariant exercised without hypothesis)."""
+    ef = _ef(spec_pred)
+    for p in (0.0, 0.25, 0.5, 0.9, 1.0):
+        for n_req, n_kv in ((2, 2_000), (64, 64_000), (256, 300_000)):
+            for itl in (0.03, 0.06, 0.12):  # binding tier targets
+                assert _pacing_holds(ef, n_req, n_kv, 4, p, itl)
+
+
+def test_budget_monotone_in_acceptance(spec_pred):
+    """A higher acceptance EWMA can only relax the clock (weakly lower
+    frequency): E[emitted] is monotone, so the budget is."""
+    ef = _ef(spec_pred)
+    st_ = SystemState(has_waiting=False)
+    for n_req, n_kv in ((16, 20_000), (128, 200_000)):
+        prev = None
+        for p in np.linspace(0.0, 1.0, 11):
+            f = ef.select(st_, BatchInfo(
+                "decode", n_req=n_req, n_kv=n_kv, spec_k=4,
+                emitted_per_iter=expected_emitted(float(p), 4),
+            ))
+            if prev is not None:
+                assert f <= prev + 1e-9
+            prev = f
+
+
+@pytest.mark.slow
+@settings(max_examples=40, deadline=None)
+@given(
+    p=st.floats(min_value=0.0, max_value=1.0),
+    k=st.integers(min_value=1, max_value=8),
+    n_req=st.integers(min_value=1, max_value=400),
+    kv_per_req=st.integers(min_value=1, max_value=2_000),
+    itl_scale=st.floats(min_value=0.5, max_value=6.0),
+)
+def test_property_pacing_never_misses_binding_itl(
+    spec_pred, p, k, n_req, kv_per_req, itl_scale
+):
+    """Property: for ANY acceptance rate (including mid-run swings to 0
+    or 1 — each select() is memoryless in the EWMA argument), draft
+    window, batch shape and binding tier ITL, EcoFreq's chosen clock
+    fits the per-emitted-token deadline whenever any clock does."""
+    ef = _ef(spec_pred)
+    itl = 0.06 * itl_scale
+    assert _pacing_holds(ef, n_req, n_req * kv_per_req, k, p, itl)
+
+
+def test_ewma_swing_recovers_pacing(bank):
+    """End-to-end: a workload whose acceptance collapses 1→0 mid-run
+    (then back) never loses requests and keeps ITL attainment — the
+    EWMA follows the swing and the controller re-tightens the clock."""
+    reqs = poisson_workload(SHAREGPT, 4.0, 40.0, seed=9)
+    for r in reqs:
+        third = (r.arrival_s // 13.4) % 3
+        r.accept_rate = 0.95 if third != 1 else 0.02
+    m = _run(reqs, bank, spec_decode=True, spec_k=4)
+    assert m.finished_frac() == 1.0
+    assert m.itl_attainment() == 1.0
+    assert 0.0 < m.acceptance_rate() < 1.0

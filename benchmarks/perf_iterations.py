@@ -64,14 +64,23 @@ ITERATIONS = [
 def event_loop_benchmark(rate_rps: float = 6.0, duration_s: float = 60.0,
                          seed: int = 0, paged: bool = False,
                          spec: bool = False,
-                         predictor_bank: dict = None) -> dict:
+                         predictor_bank: dict = None,
+                         breakdown: bool = False) -> dict:
     """Wall-clock the pure-Sim serving event loop on a fixed reference
     scenario (2P/2D SHAREGPT on A100) — the control-plane overhead the
     paged-KV / scheduling refactors must not regress.  Returns the dict
-    ``benchmarks.run --smoke`` embeds in ``BENCH_serving.json``.
+    ``benchmarks.run --smoke`` embeds in ``BENCH_serving.json``; the
+    ``iters_per_s`` field is what ``tools/bench_gate.py`` gates on.
 
     Pass one ``predictor_bank`` dict across calls: the EcoPred offline
-    profile dominates setup cost and is identical for every variant."""
+    profile dominates setup cost and is identical for every variant.
+
+    ``breakdown=True`` additionally installs the
+    :mod:`repro.serving.loopprof` wrappers and reports the per-phase
+    split (schedule / select / route / dispatch / device_wait /
+    metrics).  The wrappers cost a few ``perf_counter`` calls per
+    iteration, so the headline ``iters_per_s`` row is measured with
+    breakdown **off**."""
     import time
 
     from repro.configs.registry import REGISTRY
@@ -88,26 +97,40 @@ def event_loop_benchmark(rate_rps: float = 6.0, duration_s: float = 60.0,
         seed=seed, paged=paged, spec_decode=spec,
     )
     cluster = PDCluster(cfg)
+    prof = None
+    if breakdown:
+        from repro.serving import loopprof
+
+        prof = loopprof.install(cluster)
     t0 = time.perf_counter()
     m = cluster.run(reqs)
     wall_s = time.perf_counter() - t0
     toks = m.output_tokens()
+    iters = sum(
+        e.backend.n_iters
+        for e in cluster.prefill + cluster.decode + cluster.hybrid
+    )
     out = {
         "paged": paged,
         "spec_decode": spec,
         "requests": len(reqs),
         "output_tokens": toks,
+        "iterations": iters,
         "event_loop_wall_s": round(wall_s, 4),
+        "iters_per_s": round(iters / wall_s, 1) if wall_s else None,
         "tokens_per_wall_s": round(toks / wall_s, 1) if wall_s else None,
         "energy_per_token_j": round(m.energy_per_token_j(), 6),
         "tokens_per_joule": round(m.tokens_per_joule(), 4),
         "ttft_attainment": round(m.ttft_attainment(), 4),
         "itl_attainment": round(m.itl_attainment(), 4),
         "finished_frac": round(m.finished_frac(), 4),
+        "recompiles": m.recompiles,
     }
     if spec:
         out["accept_rate"] = round(m.acceptance_rate() or 0.0, 4)
         out["spec_yield"] = round(m.spec_yield() or 0.0, 4)
+    if prof is not None:
+        out["breakdown"] = prof.breakdown(wall_s)
     return out
 
 

@@ -66,18 +66,40 @@ def _write_bench_serving(module_status: dict) -> str:
     from benchmarks.perf_iterations import event_loop_benchmark
 
     bank = {}  # one EcoPred fit shared by both variants
+    event_loop = {
+        "dense": event_loop_benchmark(paged=False, predictor_bank=bank),
+        "paged": event_loop_benchmark(paged=True, predictor_bank=bank),
+        "spec_decode": event_loop_benchmark(
+            paged=True, spec=True, predictor_bank=bank
+        ),
+    }
     payload = {
-        "schema": 1,
+        "schema": 2,
         "generated_by": "benchmarks.run --smoke",
-        "event_loop": {
-            "dense": event_loop_benchmark(paged=False, predictor_bank=bank),
-            "paged": event_loop_benchmark(paged=True, predictor_bank=bank),
-            "spec_decode": event_loop_benchmark(
-                paged=True, spec=True, predictor_bank=bank
-            ),
-        },
+        "event_loop": event_loop,
+        # Phase split of the dense loop (separate instrumented run; its
+        # iters_per_s is NOT the headline number — wrappers cost time).
+        "event_loop_breakdown": event_loop_benchmark(
+            paged=False, predictor_bank=bank, breakdown=True
+        ).get("breakdown"),
         "modules": module_status,
     }
+    base_path = os.path.join(os.path.dirname(__file__),
+                             "BENCH_baseline.json")
+    if os.path.exists(base_path):  # embed the committed pre-PR rows so
+        # the artifact is self-describing (gate math lives in
+        # tools/bench_gate.py, which re-reads the baseline itself)
+        with open(base_path) as f:
+            base = json.load(f)
+        pre = base.get("pre_pr", {})
+        payload["pre_pr"] = pre
+        payload["speedup_vs_pre_pr"] = {
+            k: round(event_loop[k]["iters_per_s"]
+                     / pre[k]["iters_per_s"], 2)
+            for k in event_loop
+            if pre.get(k, {}).get("iters_per_s")
+            and event_loop[k].get("iters_per_s")
+        }
     out_dir = os.path.join(os.path.dirname(__file__), "results")
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, "BENCH_serving.json")
@@ -113,7 +135,10 @@ def main() -> int:
             }
             print(f"[ok]   {desc:45s} {n:4d} rows  {time.time()-t0:6.1f}s",
                   flush=True)
-        except Exception as e:
+        except (Exception, SystemExit) as e:
+            # SystemExit too: a script-style `sys.exit(0)` inside a
+            # figure module must fail *this* module, not silently end
+            # the whole sweep with a green exit code.
             failures += 1
             module_status[name] = {
                 "status": "fail", "error": f"{type(e).__name__}: {e}",

@@ -221,12 +221,20 @@ class EcoPred:
         )
 
     def predict_decode(self, f, n_req, n_kv) -> np.ndarray:
-        f, q, k = np.broadcast_arrays(
-            np.asarray(f, float), np.asarray(n_req, float),
-            np.asarray(n_kv, float),
+        # hand-rolled broadcast into one (n, 3) buffer: this is the
+        # event loop's hottest query (every EcoFreq ladder scan plus the
+        # per-iteration straggler-bias re-predict route through here)
+        f = np.asarray(f, float)
+        q = np.asarray(n_req, float)
+        k = np.asarray(n_kv, float)
+        shape = np.broadcast_shapes(f.shape, q.shape, k.shape)
+        X = np.empty(shape + (3,))
+        X[..., 0] = f
+        X[..., 1] = q
+        X[..., 2] = k
+        return np.maximum(
+            self.decode_model.predict(X.reshape(-1, 3)), 0.0
         )
-        X = np.stack([f, q, k], axis=-1).reshape(-1, 3)
-        return np.maximum(self.decode_model.predict(X), 0.0)
 
     def predict_verify(self, f, n_req, n_kv, k) -> np.ndarray:
         """Predicted wall time of one speculative iteration (draft +
@@ -238,11 +246,17 @@ class EcoPred:
             "verify model not profiled — call ensure_verify_profile() "
             "(the cluster does this when spec_decode=True)"
         )
-        f, q, c, kk = np.broadcast_arrays(
-            np.asarray(f, float), np.asarray(n_req, float),
-            np.asarray(n_kv, float), np.asarray(k, float),
-        )
-        X = np.stack([f, q, c, kk], axis=-1).reshape(-1, 4)
+        f = np.asarray(f, float)
+        q = np.asarray(n_req, float)
+        c = np.asarray(n_kv, float)
+        kk = np.asarray(k, float)
+        shape = np.broadcast_shapes(f.shape, q.shape, c.shape, kk.shape)
+        X = np.empty(shape + (4,))
+        X[..., 0] = f
+        X[..., 1] = q
+        X[..., 2] = c
+        X[..., 3] = kk
+        X = X.reshape(-1, 4)
         out = np.maximum(self.verify_model.predict(X), 0.0)
         plain = X[:, 3] == 0.0
         if plain.any():

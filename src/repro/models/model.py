@@ -975,3 +975,83 @@ def decode_step(
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_logits(params, cfg, x)
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Greedy serving entry points (argmax fused into the jitted graph)
+# ---------------------------------------------------------------------------
+# The serving backend decodes greedily, so the host only ever needs the
+# argmax token ids — returning them from inside the jit shrinks the
+# device->host transfer from (B, V) logits to (B,) int32 and lets the
+# event loop defer the blocking read to token-emission time (the async
+# dispatch contract in repro.serving.realengine).
+
+
+def prefill_greedy(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    lengths: jax.Array,
+    max_len: Optional[int] = None,
+):
+    """:func:`prefill` returning (first token ids (B,), cache)."""
+    logits, cache = prefill(params, cfg, tokens, lengths, max_len=max_len)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+
+def prefill_paged_greedy(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    lengths: jax.Array,
+    ctx_lens: jax.Array,
+    block_tables: jax.Array,
+    cache: PyTree,
+):
+    """:func:`prefill_paged` returning (first token ids (B,), cache)."""
+    logits, cache = prefill_paged(
+        params, cfg, tokens, lengths, ctx_lens, block_tables, cache
+    )
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+
+def decode_step_greedy(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    cache: PyTree,
+    lengths: jax.Array,
+):
+    """:func:`decode_step` returning (next token ids (B,), cache)."""
+    logits, cache = decode_step(params, cfg, tokens, cache, lengths)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+
+def decode_step_paged_greedy(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    cache: PyTree,
+    lengths: jax.Array,
+    block_tables: jax.Array,
+):
+    """:func:`decode_step_paged` returning (next token ids (B,), cache)."""
+    logits, cache = decode_step_paged(
+        params, cfg, tokens, cache, lengths, block_tables
+    )
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+
+def verify_step_paged_greedy(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    cache: PyTree,
+    lengths: jax.Array,
+    block_tables: jax.Array,
+):
+    """:func:`verify_step_paged` returning (argmax ids (B, T), cache)."""
+    logits, cache = verify_step_paged(
+        params, cfg, tokens, cache, lengths, block_tables
+    )
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache

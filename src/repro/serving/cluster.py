@@ -52,6 +52,7 @@ from repro.serving.engine import (
     PrefillEngine,
     SimBackend,
 )
+from repro.serving import jitcache
 from repro.serving.metrics import RunMetrics
 from repro.serving.radixcache import PagedRadixCache, RadixCache
 from repro.serving.request import Phase, Request, TierSpec, UNTIERED
@@ -806,6 +807,10 @@ class PDCluster:
             self._push(r.arrival_s, _ARRIVAL, r)
         pending = len(requests)
         self._arrived_tokens = 0
+        # compile telemetry: any XLA compile between here and run end is
+        # a recompile charged to this run (zero for pure-Sim backends; a
+        # warmed real-backend cluster must also report zero steady-state)
+        compiles0 = jitcache.compile_count()
         if self.autoscaler is not None:
             self._push(self.cfg.autoscale.interval_s, _SCALE, None)
 
@@ -928,6 +933,11 @@ class PDCluster:
         end = self.now
         energies = []
         for e in self.prefill + self.decode + self.hybrid:
+            # emit any deferred real-backend tokens before the request
+            # snapshot below; dead instances are skipped — their pending
+            # ids belong to streams that restarted elsewhere
+            if e.alive:
+                e.backend.flush()
             e.close_park(end)
             e.energy.span_s = end
             energies.append(e.energy)
@@ -946,4 +956,5 @@ class PDCluster:
             slo_itl_s=self.cfg.slo_itl_s,
             duration_s=end,
             prefix_hit_rate=(hits / lookups) if lookups else None,
+            recompiles=jitcache.compile_count() - compiles0,
         )

@@ -151,6 +151,7 @@ class SimBackend:
         self.noise_sigma = noise_sigma
         self.slow_factor = slow_factor  # straggler injection (>1 == slow)
         self._rng = np.random.default_rng(seed)
+        self.n_iters = 0  # total iterations executed (perf telemetry)
 
     def _noise(self) -> float:
         if self.noise_sigma <= 0:
@@ -161,6 +162,7 @@ class SimBackend:
 
     def prefill_iter(self, reqs: List[Request], n_tok: int, f: float
                      ) -> IterCost:
+        self.n_iters += 1
         avg_ctx = n_tok / max(1, len(reqs))
         c = self.hw.prefill_iter(n_tok, avg_ctx, f)
         t = c.time_s * self._noise()
@@ -170,12 +172,14 @@ class SimBackend:
                       n_new: int, n_ctx: int, f: float) -> IterCost:
         """Partial-prefill iteration: ``n_new`` fresh tokens against
         ``n_ctx`` resident prefix tokens (cache hits + earlier chunks)."""
+        self.n_iters += 1
         c = self.hw.prefill_chunk_iter(n_new, n_ctx, max(1, len(reqs)), f)
         t = c.time_s * self._noise()
         return IterCost(t, c.power_w, c.power_w * t, c.f_effective, c.theta)
 
     def decode_iter(self, reqs: List[Request], n_req: int, n_kv: int,
                     f: float) -> IterCost:
+        self.n_iters += 1
         c = self.hw.decode_iter(n_req, n_kv, f)
         t = c.time_s * self._noise()
         return IterCost(t, c.power_w, c.power_w * t, c.f_effective, c.theta)
@@ -188,6 +192,7 @@ class SimBackend:
         realization) does not change this iteration's cost — drafting
         and verification run in full either way; acceptance decides the
         *yield* the engine books in finish_iteration."""
+        self.n_iters += 1
         c = self.hw.spec_decode_iter(n_req, n_kv, k, draft_frac, f)
         t = c.time_s * self._noise()
         return IterCost(t, c.power_w, c.power_w * t, c.f_effective, c.theta)
@@ -196,6 +201,7 @@ class SimBackend:
                     pre_reqs: List[Request], takes: List[int],
                     n_new: int, n_ctx: int, f: float) -> IterCost:
         """Mixed iteration: decode step + piggybacked prefill chunk."""
+        self.n_iters += 1
         c = self.hw.hybrid_iter(
             n_req, n_kv, n_new, n_ctx, max(1, len(pre_reqs)), f
         )
@@ -218,6 +224,11 @@ class SimBackend:
     def abort_prefill(self, reqs: List[Request]) -> None:
         """In-flight prefill work was lost (instance failure): a paged
         real backend releases the page references it stashed for it."""
+
+    def flush(self) -> None:
+        """Emit any deferred device-side tokens (end-of-run hook): the
+        real backend's async dispatch materializes here; pure simulation
+        has nothing in flight."""
 
 
 # ---------------------------------------------------------------------------

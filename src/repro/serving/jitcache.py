@@ -1,0 +1,68 @@
+"""Process-wide shared jit entry points: donation + compile telemetry.
+
+Every :class:`~repro.serving.realengine.RealBackend` used to build its
+own ``jax.jit(partial(fn, cfg=cfg))`` wrappers — each instance owned a
+private compile cache, so a 2-decode cluster traced and compiled every
+entry point twice, and a second cluster over the same config recompiled
+everything from scratch.  This module keys the jitted callable on
+``(fn, cfg, statics, donated argnames)`` — :class:`ModelConfig` is a
+frozen, hashable dataclass, so two backends with the same config resolve
+to the *same* callable and share its XLA executable cache.
+
+It also centralizes the two serving-wide jit policies:
+
+* **donation** — decode/draft/verify steps donate their ``cache``
+  argument so ring/paged KV buffers update in place on accelerators
+  (on CPU donation is a documented no-op, so tests stay bit-exact);
+* **compile counting** — :func:`compile_count` sums the executable-cache
+  sizes of every shared entry point; the cluster snapshots it around a
+  run to report ``RunMetrics.recompiles``, and the perf-invariant tests
+  pin the steady-state value at zero.
+
+``jax`` is imported lazily: a pure-:class:`SimBackend` process that only
+ever *reads* the counter (every ``PDCluster.run``) never pays the jax
+import.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Tuple
+
+_CACHE: Dict[tuple, Callable] = {}
+
+
+def shared_jit(fn: Callable, cfg, *, donate: Tuple[str, ...] = (),
+               **statics) -> Callable:
+    """The process-wide jitted entry point for ``fn`` closed over
+    ``cfg`` (and any keyword ``statics``), donating ``donate`` argnames.
+    Idempotent: same key -> same callable -> shared compile cache."""
+    key = (fn, cfg, tuple(sorted(statics.items())), tuple(donate))
+    j = _CACHE.get(key)
+    if j is None:
+        import jax
+
+        j = jax.jit(
+            partial(fn, cfg=cfg, **statics),
+            donate_argnames=tuple(donate) or None,
+        )
+        _CACHE[key] = j
+    return j
+
+
+def compile_count() -> int:
+    """Total XLA executables compiled across every shared entry point
+    (a re-trace for a new input shape raises this by one)."""
+    return sum(j._cache_size() for j in _CACHE.values())
+
+
+def entry_count() -> int:
+    """Number of distinct shared entry points (for telemetry/tests)."""
+    return len(_CACHE)
+
+
+def clear() -> None:
+    """Drop every shared entry point and its compiled executables
+    (tests use this to measure cold-start compile behavior)."""
+    for j in _CACHE.values():
+        j.clear_cache()
+    _CACHE.clear()

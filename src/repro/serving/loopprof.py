@@ -1,0 +1,111 @@
+"""Event-loop time-split instrumentation (opt-in, zero cost when off).
+
+``install(cluster)`` wraps a :class:`~repro.serving.cluster.PDCluster`'s
+engines and routers with ``perf_counter`` accounting and returns a
+:class:`LoopProfile`; run the workload, then read ``profile.breakdown()``
+for the per-phase wall split the benchmark harness publishes in
+``BENCH_serving.json``:
+
+* ``schedule`` — engine ``start_iteration`` minus its inner EcoFreq and
+  backend shares: batch assembly, admission, chunk take selection.
+* ``select``   — EcoFreq frequency-ladder scans (``controller.select``).
+* ``route``    — EcoRoute placement (``_route_prefill``/``_route_decode``).
+* ``dispatch`` — backend iteration calls' host time (Sim: hwmodel
+  pricing; Real: jit dispatch — *not* device completion, which the async
+  backend defers).
+* ``device_wait`` — host time truly blocked on device transfers (real
+  backends' deferred-emission drains; 0 in pure simulation).
+* ``metrics``  — ``finish_iteration`` bookkeeping + straggler-bias
+  re-prediction at ``_D_DONE``.
+
+Only instances alive at ``install`` time are instrumented (an autoscaler
+scale-out mid-run adds unwrapped engines; the reference benchmark
+scenario scales nothing).  Wrapping costs a couple of ``perf_counter``
+calls per iteration, so install it for breakdown runs, not for the
+headline iterations/s row.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from time import perf_counter
+from typing import Dict
+
+
+@dataclass
+class LoopProfile:
+    start_total_s: float = 0.0
+    select_s: float = 0.0
+    backend_s: float = 0.0
+    finish_total_s: float = 0.0
+    route_s: float = 0.0
+    iterations: int = 0
+    _device_wait: object = None  # () -> float, bound at install
+
+    def breakdown(self, wall_s: float = 0.0) -> Dict[str, float]:
+        dev = float(self._device_wait()) if self._device_wait else 0.0
+        out = {
+            "schedule_s": max(
+                0.0, self.start_total_s - self.select_s - self.backend_s
+            ),
+            "select_s": self.select_s,
+            "route_s": self.route_s,
+            "dispatch_s": max(0.0, self.backend_s - dev),
+            "device_wait_s": dev,
+            "metrics_s": self.finish_total_s,
+            "iterations": self.iterations,
+        }
+        if wall_s > 0:
+            out["accounted_frac"] = round(
+                (out["schedule_s"] + out["select_s"] + out["route_s"]
+                 + out["dispatch_s"] + out["device_wait_s"]
+                 + out["metrics_s"]) / wall_s, 4,
+            )
+        return {
+            k: (round(v, 4) if isinstance(v, float) else v)
+            for k, v in out.items()
+        }
+
+
+_BACKEND_ITERS = (
+    "prefill_iter", "prefill_chunk", "decode_iter", "spec_decode_iter",
+    "hybrid_iter",
+)
+
+
+def install(cluster) -> LoopProfile:
+    """Wrap the cluster's engines/routers in place; returns the profile
+    the wrappers accumulate into."""
+    prof = LoopProfile()
+
+    def timed(fn, attr, count=False):
+        def wrapper(*a, **k):
+            t0 = perf_counter()
+            try:
+                return fn(*a, **k)
+            finally:
+                setattr(prof, attr, getattr(prof, attr)
+                        + perf_counter() - t0)
+                if count:
+                    prof.iterations += 1
+        return wrapper
+
+    engines = list(cluster.prefill) + list(cluster.decode) \
+        + list(cluster.hybrid)
+    for eng in engines:
+        eng.start_iteration = timed(eng.start_iteration, "start_total_s")
+        eng.finish_iteration = timed(eng.finish_iteration,
+                                     "finish_total_s")
+        eng.controller.select = timed(eng.controller.select, "select_s")
+        for name in _BACKEND_ITERS:
+            if hasattr(eng.backend, name):
+                setattr(eng.backend, name,
+                        timed(getattr(eng.backend, name), "backend_s",
+                              count=True))
+    cluster._route_prefill = timed(cluster._route_prefill, "route_s")
+    cluster._route_decode = timed(cluster._route_decode, "route_s")
+
+    backends = [e.backend for e in engines]
+    prof._device_wait = lambda: sum(
+        getattr(b, "device_wait_s", 0.0) for b in backends
+    )
+    return prof

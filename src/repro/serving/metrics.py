@@ -56,6 +56,10 @@ class RunMetrics:
     # fraction of looked-up prompt tokens served by the radix prefix
     # cache; None when no instance ran with a cache
     prefix_hit_rate: Optional[float] = None
+    # XLA compiles charged to this run (shared-jit entry points only):
+    # 0 for pure-Sim runs and for warmed real-backend clusters — the
+    # perf-invariant suite pins the steady-state value at zero
+    recompiles: int = 0
 
     # -- per-phase ----------------------------------------------------------
     def _done(self, tier: Optional[str] = None) -> List[Request]:
@@ -235,6 +239,8 @@ class RunMetrics:
             extra["shed_frac"] = round(self.shed_frac(), 4)
         if self.preemptions_total() > 0:
             extra["preemptions"] = self.preemptions_total()
+        if self.recompiles > 0:
+            extra["recompiles"] = self.recompiles
         if self.acceptance_rate() is not None:
             extra["accept_rate"] = round(self.acceptance_rate(), 4)
             extra["spec_yield"] = round(self.spec_yield(), 4)

@@ -25,11 +25,31 @@ Two memory models, selected by ``paged``:
 The **virtual clock still advances by the hardware model's time** — CPU
 wall time is meaningless for TPU SLO semantics — so latency/energy results
 are identical between backends; only token content differs (real here).
+
+**Async dispatch.**  Decode/spec iterations never block on device
+results at dispatch time: the jitted step returns *token ids* (argmax is
+fused into the graph — see the ``*_greedy`` entry points in
+``repro.models.model``), the id array stays device-resident as the next
+iteration's input, and host emission into ``Request.output_tokens`` is
+deferred until the values are actually consumed (the next backend call,
+a slot ``release``, or the cluster's end-of-run ``flush``).  Everything
+the event loop does between two backend calls — finish-iteration
+bookkeeping, EcoPred recording, EcoFreq's ladder scan, EcoRoute, heap
+ops — overlaps with the in-flight device step.  Control decisions never
+read token *content* (requests finish by count; speculative acceptance
+is the engine's seeded realization), so deferral cannot reorder
+anything: Sim==Real parity is structural.
+
+Jitted entry points come from :mod:`repro.serving.jitcache`: instances
+with the same config share one compile cache, decode/draft/verify jits
+donate their KV ``cache`` argument (in-place updates on accelerators;
+documented no-op on CPU), and the cluster reads the module's compile
+counter to report ``RunMetrics.recompiles``.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -39,6 +59,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.hwmodel import HardwareModel
 from repro.models import model as M
+from repro.serving import jitcache
 from repro.serving.engine import SimBackend
 from repro.serving.kvpool import BlockTable, KVPool, PageAllocError
 from repro.serving.radixcache import PagedRadixCache
@@ -76,6 +97,7 @@ class RealBackend(SimBackend):
         spec_k: int = 0,
         draft_cfg: Optional[ModelConfig] = None,
         draft_params=None,
+        donate_kv: bool = True,
     ):
         super().__init__(hw, noise_sigma, seed)
         self.cfg = cfg
@@ -83,11 +105,19 @@ class RealBackend(SimBackend):
         self.slots = slots
         self.max_len = max_len
         self.paged = paged
-        # decode slot state (both memory models batch decode over slots)
+        self.donate_kv = donate_kv
+        don = ("cache",) if donate_kv else ()
+        # decode slot state (both memory models batch decode over slots).
+        # The token chain is device-resident: the previous iteration's
+        # greedy ids feed the next step without a host round trip.
         self.slot_of: Dict[int, int] = {}  # rid -> slot
         self.free = list(range(slots))[::-1]
-        self.next_tok = np.zeros(slots, np.int32)
+        self._next_dev = jnp.zeros(slots, jnp.int32)
         self.pos = np.zeros(slots, np.int32)
+        # deferred emission from the in-flight decode/spec step, drained
+        # at the next backend touch / release / flush
+        self._pending = None
+        self.device_wait_s = 0.0  # host time spent blocked on transfers
 
         if paged:
             assert max_len % page_size == 0, (max_len, page_size)
@@ -108,15 +138,20 @@ class RealBackend(SimBackend):
             # observability (acceptance: prefix hits skip real compute)
             self.reused_tokens = 0
             self.computed_tokens = 0
-            self._prefill_jit = jax.jit(partial(M.prefill_paged, cfg=cfg))
-            self._decode_jit = jax.jit(partial(M.decode_step_paged, cfg=cfg))
+            self._prefill_jit = jitcache.shared_jit(
+                M.prefill_paged_greedy, cfg, donate=don
+            )
+            self._decode_jit = jitcache.shared_jit(
+                M.decode_step_paged_greedy, cfg, donate=don
+            )
         else:
             self.cache = M.init_cache(cfg, slots, max_len)
-            self._prefill_jit = jax.jit(
-                partial(M.prefill, cfg=cfg, max_len=max_len),
-                static_argnames=(),
+            self._prefill_jit = jitcache.shared_jit(
+                M.prefill_greedy, cfg, max_len=max_len
             )
-            self._decode_jit = jax.jit(partial(M.decode_step, cfg=cfg))
+            self._decode_jit = jitcache.shared_jit(
+                M.decode_step_greedy, cfg, donate=don
+            )
 
         # speculative draft–verify execution (needs the paged pool: the
         # rollback of rejected draft KV is page bookkeeping)
@@ -139,13 +174,15 @@ class RealBackend(SimBackend):
             # "rollback" is implicit (stale positions are masked by the
             # per-slot position array until overwritten)
             self.draft_cache = M.init_cache(draft_cfg, slots, max_len)
-            self.prev_tok = np.zeros(slots, np.int32)  # token at pos-1
-            self._draft_prefill_jit = jax.jit(
-                partial(M.prefill, cfg=draft_cfg, max_len=max_len)
+            self._prev_dev = jnp.zeros(slots, jnp.int32)  # token at pos-1
+            self._draft_prefill_jit = jitcache.shared_jit(
+                M.prefill_greedy, draft_cfg, max_len=max_len
             )
-            self._draft_jit = jax.jit(partial(M.draft_step, cfg=draft_cfg))
-            self._verify_jit = jax.jit(
-                partial(M.verify_step_paged, cfg=cfg)
+            self._draft_jit = jitcache.shared_jit(
+                M.draft_step, draft_cfg, donate=don
+            )
+            self._verify_jit = jitcache.shared_jit(
+                M.verify_step_paged_greedy, cfg, donate=don
             )
             # token-match telemetry: what greedy accept-prefix sampling
             # would have accepted (the control plane's acceptance
@@ -233,8 +270,53 @@ class RealBackend(SimBackend):
             r.kv_handoff = None
 
     # ------------------------------------------------------------------
+    # Deferred emission (async dispatch)
+    # ------------------------------------------------------------------
+    def _drain(self) -> None:
+        """Materialize the in-flight iteration's token ids and emit them
+        into the requests' output streams.  This is the **only** place
+        the host blocks on device results — called lazily at the next
+        backend touch, a slot release, or the end-of-run flush."""
+        p, self._pending = self._pending, None
+        if p is None:
+            return
+        t0 = time.perf_counter()
+        if p[0] == "decode":
+            _, pairs, ids = p
+            nxt = np.asarray(ids)
+            self.device_wait_s += time.perf_counter() - t0
+            for r, s in pairs:
+                r.output_tokens.append(int(nxt[s]))
+        else:  # spec: accepted draft prefix + bonus/correction token
+            _, entries, drafts_dev, tgt_dev, match_dev = p
+            drafts = np.asarray(drafts_dev)
+            tgt = np.asarray(tgt_dev)
+            match = np.asarray(match_dev)
+            self.device_wait_s += time.perf_counter() - t0
+            for r, s, a in entries:
+                r.output_tokens.extend(
+                    int(drafts[s, j]) for j in range(a)
+                )
+                r.output_tokens.append(int(tgt[s, a]))
+                self.spec_real_matches += int(match[s])
+                self.spec_real_drafted += self.spec_k
+
+    def flush(self) -> None:
+        """Emit every deferred token (cluster end-of-run hook)."""
+        self._drain()
+
+    # ------------------------------------------------------------------
     # Prefill: real first token + cache stash
     # ------------------------------------------------------------------
+    def _padded(self, toks: np.ndarray) -> np.ndarray:
+        """The single pad policy for every prefill-shaped entry point
+        (dense, paged-suffix, draft): power-of-two bucket clamped to the
+        cache capacity, so steady state replays a bounded shape set."""
+        pad = _bucket(len(toks), hi=self.max_len)
+        buf = np.zeros((1, pad), np.int32)
+        buf[0, : len(toks)] = toks
+        return buf
+
     def _context_tokens(self, r: Request) -> np.ndarray:
         ctx = list(r.prompt_tokens)
         if r.resuming:
@@ -258,17 +340,13 @@ class RealBackend(SimBackend):
             self._real_prefill_dense(r, toks)
 
     def _real_prefill_dense(self, r: Request, toks: np.ndarray) -> None:
-        pad = _bucket(len(toks), hi=self.max_len)
-        buf = np.zeros((1, pad), np.int32)
-        buf[0, : len(toks)] = toks
-        logits, cache = self._prefill_jit(
+        ids, cache = self._prefill_jit(
             self.params,
-            tokens=jnp.asarray(buf),
+            tokens=jnp.asarray(self._padded(toks)),
             lengths=jnp.asarray([len(toks)], jnp.int32),
         )
         if not r.resuming:
-            first = int(jnp.argmax(logits[0]))
-            r.output_tokens.append(first)
+            r.output_tokens.append(int(ids[0]))
         r.kv_handoff = cache  # migrates with the request (P -> D)
 
     def _real_prefill_paged(self, r: Request, toks: np.ndarray) -> None:
@@ -289,21 +367,18 @@ class RealBackend(SimBackend):
             raise
         table = list(ctx_pages) + new_pages
         S = L - n_ctx
-        pad = _bucket(S, hi=self.max_len)
-        buf = np.zeros((1, pad), np.int32)
-        buf[0, :S] = toks[n_ctx:]
         bt = np.full((1, self.max_pages), -1, np.int32)
         bt[0, : len(table)] = table
-        logits, self.kvcache = self._prefill_jit(
+        ids, self.kvcache = self._prefill_jit(
             self.params,
-            tokens=jnp.asarray(buf),
+            tokens=jnp.asarray(self._padded(toks[n_ctx:])),
             lengths=jnp.asarray([S], jnp.int32),
             ctx_lens=jnp.asarray([n_ctx], jnp.int32),
             block_tables=jnp.asarray(bt),
             cache=self.kvcache,
         )
         if not r.resuming:
-            r.output_tokens.append(int(jnp.argmax(logits[0])))
+            r.output_tokens.append(int(ids[0]))
         # migration payload: the request's pages, gathered page-stack —
         # the decode side scatters them into its own pool
         idx = np.asarray(table)
@@ -341,6 +416,7 @@ class RealBackend(SimBackend):
     # ------------------------------------------------------------------
     def insert(self, req: Request) -> None:
         assert self.free, "no free decode slots (max_running too high?)"
+        self._drain()  # the joining token seeds the device chain below
         slot = self.free.pop()
         self.slot_of[req.rid] = slot
         handoff, req.kv_handoff = req.kv_handoff, None
@@ -368,7 +444,9 @@ class RealBackend(SimBackend):
                 return dst_leaf.at[:, slot].set(src[:, 0])
 
             self.cache = jax.tree.map(put, self.cache, cache)
-        self.next_tok[slot] = req.output_tokens[-1]
+        self._next_dev = self._next_dev.at[slot].set(
+            int(req.output_tokens[-1])
+        )
         # resident context = prompt + tokens regenerated before a
         # preemption (fresh requests: tokens_out == 0)
         self.pos[slot] = req.prompt_len + req.tokens_out
@@ -380,12 +458,9 @@ class RealBackend(SimBackend):
         draft model ingests the same context the target holds (prompt
         plus any regenerated tokens after a preemption resume)."""
         toks = self._context_tokens(req)
-        pad = _bucket(len(toks), hi=self.max_len)
-        buf = np.zeros((1, pad), np.int32)
-        buf[0, : len(toks)] = toks
         _, dcache = self._draft_prefill_jit(
             self.draft_params,
-            tokens=jnp.asarray(buf),
+            tokens=jnp.asarray(self._padded(toks)),
             lengths=jnp.asarray([len(toks)], jnp.int32),
         )
 
@@ -393,9 +468,12 @@ class RealBackend(SimBackend):
             return dst_leaf.at[:, slot].set(src[:, 0])
 
         self.draft_cache = jax.tree.map(put, self.draft_cache, dcache)
-        self.prev_tok[slot] = int(toks[-1])
+        self._prev_dev = self._prev_dev.at[slot].set(int(toks[-1]))
 
     def release(self, req: Request) -> None:
+        # materialize in-flight tokens first: the released request's
+        # stream is read immediately (finish, or preemption resume)
+        self._drain()
         slot = self.slot_of.pop(req.rid)
         self.free.append(slot)
         if self.paged:
@@ -405,6 +483,7 @@ class RealBackend(SimBackend):
             self.block_tables[slot] = -1
 
     def _real_decode_step(self, reqs: List[Request]) -> None:
+        self._drain()  # previous iteration's ids are due for emission
         if self.paged:
             # grow tail pages where the next write crosses a boundary
             for r in reqs:
@@ -421,26 +500,28 @@ class RealBackend(SimBackend):
                 if fresh:
                     n = len(table.pages)
                     self.block_tables[s, n - len(fresh): n] = fresh
-            logits, self.kvcache = self._decode_jit(
+            ids, self.kvcache = self._decode_jit(
                 self.params,
-                tokens=jnp.asarray(self.next_tok),
+                tokens=self._next_dev,
                 cache=self.kvcache,
                 lengths=jnp.asarray(self.pos),
                 block_tables=jnp.asarray(self.block_tables),
             )
         else:
-            logits, self.cache = self._decode_jit(
+            ids, self.cache = self._decode_jit(
                 self.params,
-                tokens=jnp.asarray(self.next_tok),
+                tokens=self._next_dev,
                 cache=self.cache,
                 lengths=jnp.asarray(self.pos),
             )
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        # chain on device; emission of `ids` waits for the next drain
+        self._next_dev = ids
+        pairs = []
         for r in reqs:
             s = self.slot_of[r.rid]
-            r.output_tokens.append(int(nxt[s]))
-            self.next_tok[s] = nxt[s]
+            pairs.append((r, s))
             self.pos[s] += 1
+        self._pending = ("decode", pairs, ids)
 
     def decode_iter(self, reqs: List[Request], n_req: int, n_kv: int,
                     f: float):
@@ -491,18 +572,19 @@ class RealBackend(SimBackend):
         bonus/correction token, and the pages holding only rejected
         positions are returned to the pool (page-exact rollback).
         """
+        self._drain()  # previous iteration's ids are due for emission
         for r in reqs:
             self._grow_for_verify(r, k)
         # drafting (batched over every slot; free slots write masked
         # garbage into their own rows, never read)
         _, _, self.draft_cache = self._draft_jit(
             self.draft_params,
-            tokens=jnp.asarray(self.prev_tok),
+            tokens=self._prev_dev,
             cache=self.draft_cache,
             lengths=jnp.asarray(np.maximum(self.pos - 1, 0)),
         )
-        drafts = np.zeros((self.slots, k), np.int32)
-        cur = jnp.asarray(self.next_tok)
+        props = []
+        cur = self._next_dev
         for j in range(k):
             # clamp so a near-capacity slot's ring never wraps: an
             # over-the-end write parks on the last slot, whose true
@@ -515,33 +597,42 @@ class RealBackend(SimBackend):
                     np.minimum(self.pos + j, self.max_len - 1)
                 ),
             )
-            drafts[:, j] = np.asarray(prop)
+            props.append(prop)
             cur = prop
+        drafts = jnp.stack(props, axis=1)  # (slots, k), device-resident
         # verify: one multi-token forward of [pending, d_1..d_k]
-        toks = np.concatenate([self.next_tok[:, None], drafts], axis=1)
-        logits, self.kvcache = self._verify_jit(
+        toks = jnp.concatenate([self._next_dev[:, None], drafts], axis=1)
+        tgt, self.kvcache = self._verify_jit(
             self.params,
-            tokens=jnp.asarray(toks),
+            tokens=toks,
             cache=self.kvcache,
             lengths=jnp.asarray(self.pos),
             block_tables=jnp.asarray(self.block_tables),
         )
-        tgt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # (B, k+1)
-        match = np.asarray(
-            M.accept_prefix(jnp.asarray(drafts), jnp.asarray(tgt))
-        )
+        match = M.accept_prefix(drafts, tgt)
+        # chain update on device with the host-known acceptance
+        # realization: prev <- last accepted draft (or the old pending
+        # token when a == 0), next <- the verify pass's bonus/correction
+        a_by_slot = np.zeros(self.slots, np.int64)
+        occupied = np.zeros(self.slots, bool)
+        entries = []
         for r, a in zip(reqs, accepts):
             s = self.slot_of[r.rid]
-            r.output_tokens.extend(
-                int(drafts[s, j]) for j in range(a)
-            )
-            r.output_tokens.append(int(tgt[s, a]))
-            self.spec_real_matches += int(match[s])
-            self.spec_real_drafted += k
-            self.prev_tok[s] = (
-                int(drafts[s, a - 1]) if a > 0 else int(self.next_tok[s])
-            )
-            self.next_tok[s] = int(tgt[s, a])
+            a_by_slot[s] = a
+            occupied[s] = True
+            entries.append((r, s, a))
+        rows = jnp.arange(self.slots)
+        a_dev = jnp.asarray(a_by_slot)
+        occ = jnp.asarray(occupied)
+        new_prev = jnp.where(
+            a_dev > 0,
+            drafts[rows, jnp.maximum(a_dev - 1, 0)],
+            self._next_dev,
+        )
+        self._prev_dev = jnp.where(occ, new_prev, self._prev_dev)
+        self._next_dev = jnp.where(occ, tgt[rows, a_dev], self._next_dev)
+        self._pending = ("spec", entries, drafts, tgt, match)
+        for r, s, a in entries:
             self.pos[s] += a + 1
             # page-exact rollback of the rejected suffix
             table = self.table_of[r.rid]
@@ -600,10 +691,13 @@ def make_real_backend_factory(
     spec_k: int = 0,
     draft_cfg: Optional[ModelConfig] = None,
     draft_params=None,
+    donate_kv: bool = True,
 ):
     """Factory for ClusterConfig.backend_factory: every instance gets its
-    own slot/pool state but shares the (read-only) weights.  With
-    ``spec_k > 0`` the decode instances run real draft–verify
+    own slot/pool state but shares the (read-only) weights *and* — via
+    :mod:`repro.serving.jitcache` — the jitted entry points, so a second
+    instance (or a second cluster) over the same config never recompiles.
+    With ``spec_k > 0`` the decode instances run real draft–verify
     speculation (requires ``paged=True`` and a draft model)."""
 
     def factory(kind: str, idx: int, hw: HardwareModel, seed: int):
@@ -616,6 +710,7 @@ def make_real_backend_factory(
             paged=paged, page_size=page_size, pool_pages=pool_pages,
             spec_k=k, draft_cfg=draft_cfg if k else None,
             draft_params=draft_params if k else None,
+            donate_kv=donate_kv,
         )
 
     return factory

@@ -1,0 +1,319 @@
+"""Perf invariants the event-loop-speed work must never lose.
+
+Three properties, each load-bearing for the CI iterations/s gate:
+
+* **Zero steady-state recompiles** — every jitted entry point is bucket-
+  padded and cached in :mod:`repro.serving.jitcache`, so a warmed cluster
+  re-running the same mixed chunked + SLO-tiered + speculative workload
+  charges ``RunMetrics.recompiles == 0``.  A recompile in steady state is
+  a silent 100×-per-iteration stall the wall-clock gate would smear out.
+* **Shared compile cache across same-config instances** — two backends
+  built from one ``ModelConfig`` must resolve to the *same* jit objects
+  (the old per-instance ``jax.jit(partial(...))`` wrappers each compiled
+  privately).
+* **Donation is invisible** — ``donate_kv=True`` (the default) frees the
+  previous KV buffer for reuse by XLA; all control-plane outputs
+  (timing, placement, energy, stream lengths) must stay bit-exact vs a
+  non-donating backend, and every emitted token must replay as a
+  near-argmax of non-donated reference logits (corruption from buffer
+  aliasing is O(1) in the logits; two separately-compiled executables
+  may legitimately differ by ~1e-3, which can flip exact argmax at rare
+  near-ties — so token ids themselves are not compared bit-for-bit).
+
+Plus the :mod:`tools.bench_gate` comparison logic itself (pass /
+regression / pin-drift / rebaseline), since CI trusts its exit code.
+"""
+import dataclasses
+import importlib.util
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import REGISTRY
+from repro.core.power import A100
+from repro.models import model as M
+from repro.serving import (
+    DEFAULT_TIERS,
+    ClusterConfig,
+    PDCluster,
+    poisson_workload,
+)
+from repro.serving import jitcache
+from repro.serving.cluster import build_predictor
+from repro.serving.realengine import (
+    RealBackend,
+    make_draft_config,
+    make_real_backend_factory,
+)
+from repro.serving.workload import DatasetDist, LengthDist, attach_tokens
+
+MODEL = REGISTRY["llama-3.1-8b"]
+
+
+@pytest.fixture(scope="module")
+def rc():
+    return dataclasses.replace(MODEL.reduced(), dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def rparams(rc):
+    return M.init_params(rc, jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def draft(rc):
+    dc = make_draft_config(rc)
+    return dc, M.init_params(dc, jax.random.key(1))
+
+
+@pytest.fixture(scope="module")
+def spec_pred():
+    return build_predictor(MODEL, A100, A100.freq_levels_2,
+                           kv_cap=400_000, spec_k=2)
+
+
+def _workload(rc, seed=31):
+    tiny = DatasetDist(
+        "tiny",
+        prefill=LengthDist(24.0, 10.0, hi=60),
+        decode=LengthDist(6.0, 3.0, hi=12),
+    )
+    reqs = poisson_workload(tiny, 2.0, 8.0, seed=seed)
+    tiers = ("interactive", "standard", "batch")
+    for r in reqs:
+        r.tier = tiers[r.rid % 3]
+    return attach_tokens(reqs, rc.vocab_size, seed=32)
+
+
+def _mixed_cfg(rc, rparams, spec_pred, draft):
+    """Chunked prefill + SLO tiers + paged KV + speculative decode over
+    the real backend — every jit entry point in one trace."""
+    dc, dparams = draft
+    return ClusterConfig(
+        model=MODEL, chip=A100, n_prefill=1, n_decode=2,
+        policy="voltana", predictor=spec_pred,
+        kv_capacity_tokens=400_000, online_adapt=False,
+        decode_max_running=8, seed=4, noise_sigma=0.0,
+        prefill_chunk_tokens=32, slo_tiers=DEFAULT_TIERS,
+        paged=True, kv_page_size=16, spec_decode=True, spec_k=2,
+        backend_factory=make_real_backend_factory(
+            rc, rparams, slots=8, max_len=128, paged=True, page_size=16,
+            spec_k=2, draft_cfg=dc, draft_params=dparams,
+        ),
+    )
+
+
+def test_steady_state_recompiles_pinned_at_zero(rc, rparams, spec_pred,
+                                                draft):
+    """Warmup run compiles; an identical second run over *new* backend
+    instances must hit the shared cache for every entry point."""
+    jitcache.clear()  # deterministic regardless of test order
+    cfg = _mixed_cfg(rc, rparams, spec_pred, draft)
+
+    m1 = PDCluster(cfg).run(_workload(rc))
+    assert m1.finished_frac() == 1.0
+    assert m1.spec_iterations() > 0, "workload never speculated"
+    assert m1.recompiles > 0, "warmup run traced nothing?"
+    assert "recompiles" in m1.summary()
+
+    m2 = PDCluster(cfg).run(_workload(rc))
+    assert m2.finished_frac() == 1.0
+    assert m2.recompiles == 0, (
+        f"{m2.recompiles} steady-state recompiles on a warmed cluster"
+    )
+    assert "recompiles" not in m2.summary()
+
+
+def test_sim_runs_charge_zero_recompiles(spec_pred):
+    """Pure-Sim clusters never touch a jit entry point."""
+    reqs = poisson_workload(
+        DatasetDist("tiny", prefill=LengthDist(24.0, 10.0, hi=60),
+                    decode=LengthDist(6.0, 3.0, hi=12)),
+        2.0, 8.0, seed=31,
+    )
+    m = PDCluster(ClusterConfig(
+        model=MODEL, chip=A100, n_prefill=1, n_decode=1,
+        policy="voltana", predictor=spec_pred,
+        kv_capacity_tokens=400_000, online_adapt=False, seed=4,
+    )).run(reqs)
+    assert m.recompiles == 0
+
+
+def test_same_config_backends_share_jit_entries(rc, rparams):
+    """Satellite of the recompile kill: instance #2 of an identical
+    config must add zero new jit cache entries (the per-instance
+    ``jax.jit(partial(...))`` wrappers used to compile privately)."""
+    from repro.core.hwmodel import HardwareModel
+
+    hw = HardwareModel(MODEL, A100)
+    RealBackend(hw, rc, rparams, slots=4, max_len=64)
+    entries = jitcache.entry_count()
+    b2 = RealBackend(hw, rc, rparams, slots=4, max_len=64)
+    assert jitcache.entry_count() == entries
+    b3 = RealBackend(hw, rc, rparams, slots=4, max_len=64)
+    assert b3._decode_jit is b2._decode_jit
+    assert b3._prefill_jit is b2._prefill_jit
+
+
+def _donation_run(rc, rparams, spec_pred, donate):
+    reqs = _workload(rc, seed=33)
+    cfg = ClusterConfig(
+        model=MODEL, chip=A100, n_prefill=1, n_decode=2,
+        policy="voltana", predictor=spec_pred,
+        kv_capacity_tokens=400_000, online_adapt=False,
+        decode_max_running=8, seed=4, noise_sigma=0.0,
+        prefill_chunk_tokens=32, slo_tiers=DEFAULT_TIERS,
+        backend_factory=make_real_backend_factory(
+            rc, rparams, slots=8, max_len=128, donate_kv=donate,
+        ),
+    )
+    m = PDCluster(cfg).run(reqs)
+    assert m.finished_frac() == 1.0
+    return reqs, m
+
+
+def test_donated_decode_parity(rc, rparams, spec_pred):
+    """donate_kv=True (default) vs =False over the same trace.
+
+    The control plane is token-content-blind, so everything it computes
+    is *bit-exact* across the two variants: per-request timing,
+    placement, preemptions, energy, and stream lengths.  Token ids are
+    NOT compared exactly: the two variants are separately-compiled XLA
+    executables, and separately-compiled executables may round float32
+    logits ~1e-3 apart — enough to flip a greedy argmax at a rare
+    near-tie (observed margin 8e-3 on this reduced model).  Donation
+    *corruption* (reading a recycled buffer) is O(1) in the logits, and
+    is caught by the replay check in
+    test_donated_stream_is_near_argmax_of_reference below."""
+    reqs_n, m_n = _donation_run(rc, rparams, spec_pred, donate=False)
+    reqs_d, m_d = _donation_run(rc, rparams, spec_pred, donate=True)
+    for rn, rd in zip(reqs_n, reqs_d):
+        assert rn.rid == rd.rid
+        assert rn.t_prefill_start == rd.t_prefill_start
+        assert rn.t_first_token == rd.t_first_token
+        assert rn.t_finish == rd.t_finish
+        assert rn.prefill_instance == rd.prefill_instance
+        assert rn.decode_instance == rd.decode_instance
+        assert rn.preemptions == rd.preemptions
+        assert len(rn.output_tokens) == len(rd.output_tokens) \
+            == rd.decode_len + 1
+    assert m_n.energy_j() == m_d.energy_j()
+
+
+def test_donated_stream_is_near_argmax_of_reference(rc, rparams,
+                                                    spec_pred):
+    """Donation-corruption guard: replay each donated-run stream through
+    the plain (non-donated, logits-returning) entry points and require
+    every emitted token's reference logit to sit within a small margin
+    of the reference max.  An aliasing bug (jit reads a buffer XLA
+    already recycled) garbles logits by O(1); benign cross-executable
+    rounding is ~1e-3."""
+    import jax.numpy as jnp
+
+    from repro.serving.realengine import _bucket
+
+    reqs, _ = _donation_run(rc, rparams, spec_pred, donate=True)
+    for r in reqs[:6]:
+        toks = jnp.asarray(r.prompt_tokens, jnp.int32)[None]
+        pad = _bucket(toks.shape[1], hi=128)
+        buf = jnp.zeros((1, pad), jnp.int32).at[:, : toks.shape[1]].set(
+            toks
+        )
+        logits, cache = M.prefill(
+            rparams, rc, buf, jnp.asarray([toks.shape[1]], jnp.int32),
+            max_len=128,
+        )
+        pos = jnp.asarray([toks.shape[1]], jnp.int32)
+        for i, tok in enumerate(r.output_tokens):
+            row = np.asarray(logits[0], np.float64)
+            assert row[tok] >= row.max() - 0.05, (
+                f"rid {r.rid} token {i}: emitted id {tok} has reference "
+                f"logit {row[tok]:.4f} vs max {row.max():.4f} — "
+                "donated cache corrupted"
+            )
+            logits, cache = M.decode_step(
+                rparams, rc, jnp.asarray([tok], jnp.int32), cache, pos
+            )
+            pos = pos + 1
+
+
+def test_gbtree_memo_is_exact():
+    """predict_binned's per-row memo returns bit-identical values to the
+    uncached ensemble walk, across fit -> predict -> continue_fit."""
+    from repro.core.gbdt import GBTree
+
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(400, 3))
+    y = X @ np.array([1.5, -2.0, 0.5]) + rng.normal(0, 0.1, 400)
+    t = GBTree(n_estimators=20, max_depth=3).fit(X, y)
+
+    B = t._bin(X)
+    a = t.predict_binned(B)          # cold: all misses
+    b = t.predict_binned(B)          # warm: all hits
+    ref = t._eval_binned(B)          # uncached walk
+    np.testing.assert_array_equal(a, ref)
+    np.testing.assert_array_equal(b, ref)
+    assert t.memo_hits >= B.shape[0]
+
+    t.continue_fit(X, y, n_more=5)   # memo must invalidate
+    c = t.predict_binned(B)
+    np.testing.assert_array_equal(c, t._eval_binned(B))
+    assert not np.array_equal(c, ref), "continue_fit changed nothing?"
+
+
+# -- tools/bench_gate.py ----------------------------------------------------
+
+def _load_bench_gate():
+    path = os.path.join(os.path.dirname(__file__), "..", "tools",
+                        "bench_gate.py")
+    spec = importlib.util.spec_from_file_location("bench_gate", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _serving(ips=1000.0, energy=0.4, recompiles=0):
+    return {"event_loop": {"dense": {
+        "iters_per_s": ips, "energy_per_token_j": energy,
+        "recompiles": recompiles, "iterations": 100,
+    }}}
+
+
+_BASE = {
+    "pre_pr": {"dense": {"iters_per_s": 100.0}},
+    "event_loop": {"dense": {"iters_per_s": 1000.0,
+                             "energy_per_token_j": 0.4}},
+}
+
+
+def test_bench_gate_passes_within_tolerance():
+    G = _load_bench_gate()
+    fails, rows = G.gate(_serving(ips=950.0), _BASE, tolerance=0.10)
+    assert not fails
+    assert rows[0]["status"] == "OK"
+    assert rows[0]["speedup_vs_pre_pr"] == 9.5
+
+
+def test_bench_gate_fails_on_regression_pin_drift_and_recompiles():
+    G = _load_bench_gate()
+    fails, _ = G.gate(_serving(ips=850.0), _BASE, tolerance=0.10)
+    assert any("regressed" in f for f in fails)
+    fails, _ = G.gate(_serving(energy=0.41), _BASE)
+    assert any("energy_per_token_j drifted" in f for f in fails)
+    fails, _ = G.gate(_serving(recompiles=2), _BASE)
+    assert any("recompiles" in f for f in fails)
+    fails, _ = G.gate({"event_loop": {}}, _BASE)
+    assert any("missing" in f for f in fails)
+
+
+def test_bench_gate_rebaseline_adopts_current_and_keeps_pre_pr():
+    G = _load_bench_gate()
+    cur = _serving(ips=2000.0)
+    assert G.gate(cur, G.rebaseline(cur, _BASE))[0] == []
+    assert G.rebaseline(cur, _BASE)["pre_pr"] == _BASE["pre_pr"]
+    # the old baseline would (correctly) have passed too — but a
+    # regression from the *new* level now trips the gate
+    fails, _ = G.gate(_serving(ips=1500.0), G.rebaseline(cur, _BASE))
+    assert any("regressed" in f for f in fails)

@@ -1,0 +1,185 @@
+#!/usr/bin/env python
+"""CI perf-regression gate for the serving event loop.
+
+Compares the fresh ``benchmarks/results/BENCH_serving.json`` (written by
+``python -m benchmarks.run --smoke``) against the committed
+``benchmarks/BENCH_baseline.json`` and exits nonzero when the PR made
+things worse:
+
+* ``iters_per_s`` more than ``--tolerance`` (default 10%) below the
+  baseline row, for any event-loop variant (dense / paged / spec_decode);
+* any drift in the golden energy pins (``energy_per_token_j``) or the
+  speculative ``accept_rate`` — these are bit-exact simulator outputs, so
+  *any* change means the control plane changed behaviour, not just speed;
+* nonzero steady-state ``recompiles`` (the pure-Sim reference scenario
+  touches no jit entry point, and warmed real backends must not either).
+
+Prints a before/after table (and appends it to ``$GITHUB_STEP_SUMMARY``
+when CI provides one).  After an intentional perf change, refresh the
+committed rows with ``--rebaseline`` and commit the diff.
+
+    PYTHONPATH=src python -m benchmarks.run --smoke
+    python tools/bench_gate.py                # gate
+    python tools/bench_gate.py --rebaseline   # accept current numbers
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_SERVING = os.path.join(REPO, "benchmarks", "results",
+                               "BENCH_serving.json")
+DEFAULT_BASELINE = os.path.join(REPO, "benchmarks", "BENCH_baseline.json")
+
+# pins that must match the baseline exactly (deterministic sim outputs)
+EXACT_PINS = ("energy_per_token_j", "accept_rate")
+# fields carried into the baseline on --rebaseline
+BASELINE_FIELDS = (
+    "requests", "output_tokens", "iterations", "iters_per_s",
+    "energy_per_token_j", "ttft_attainment", "itl_attainment",
+    "finished_frac", "recompiles", "accept_rate", "spec_yield",
+)
+
+
+def gate(serving: dict, baseline: dict,
+         tolerance: float = 0.10) -> Tuple[List[str], List[Dict]]:
+    """Pure comparison: returns (failures, table_rows)."""
+    failures: List[str] = []
+    rows: List[Dict] = []
+    cur_loop = serving.get("event_loop", {})
+    base_loop = baseline.get("event_loop", {})
+    pre_pr = baseline.get("pre_pr", {})
+    for variant, base in sorted(base_loop.items()):
+        cur = cur_loop.get(variant)
+        row = {"variant": variant,
+               "pre_pr_iters_per_s": pre_pr.get(variant, {})
+               .get("iters_per_s"),
+               "baseline_iters_per_s": base.get("iters_per_s")}
+        if cur is None:
+            failures.append(f"{variant}: missing from BENCH_serving.json")
+            row["status"] = "MISSING"
+            rows.append(row)
+            continue
+        cur_ips, base_ips = cur.get("iters_per_s"), base.get("iters_per_s")
+        row["iters_per_s"] = cur_ips
+        if cur_ips and base_ips:
+            row["delta_pct"] = round(100.0 * (cur_ips - base_ips)
+                                     / base_ips, 1)
+            pre = row["pre_pr_iters_per_s"]
+            if pre:
+                row["speedup_vs_pre_pr"] = round(cur_ips / pre, 2)
+            if cur_ips < (1.0 - tolerance) * base_ips:
+                failures.append(
+                    f"{variant}: iters_per_s regressed {cur_ips} vs "
+                    f"baseline {base_ips} "
+                    f"({row['delta_pct']}% < -{tolerance:.0%})")
+        else:
+            failures.append(f"{variant}: iters_per_s absent")
+        for pin in EXACT_PINS:
+            if pin in base and cur.get(pin) != base[pin]:
+                failures.append(
+                    f"{variant}: golden pin {pin} drifted "
+                    f"{cur.get(pin)} != {base[pin]}")
+        rec = cur.get("recompiles", 0)
+        if rec:
+            failures.append(
+                f"{variant}: {rec} steady-state recompiles (must be 0)")
+        row["recompiles"] = rec
+        row["status"] = ("OK" if not any(f.startswith(variant + ":")
+                                         for f in failures) else "FAIL")
+        rows.append(row)
+    return failures, rows
+
+
+def render_table(rows: List[Dict], markdown: bool = False) -> str:
+    cols = [("variant", "variant"), ("pre_pr_iters_per_s", "pre-PR it/s"),
+            ("baseline_iters_per_s", "baseline it/s"),
+            ("iters_per_s", "current it/s"), ("delta_pct", "Δ base %"),
+            ("speedup_vs_pre_pr", "× vs pre-PR"),
+            ("recompiles", "recompiles"), ("status", "status")]
+    header = [h for _, h in cols]
+    body = [[("" if r.get(k) is None else str(r.get(k))) for k, _ in cols]
+            for r in rows]
+    if markdown:
+        lines = ["| " + " | ".join(header) + " |",
+                 "|" + "|".join("---" for _ in header) + "|"]
+        lines += ["| " + " | ".join(b) + " |" for b in body]
+        return "\n".join(lines)
+    widths = [max(len(h), *(len(b[i]) for b in body)) if body else len(h)
+              for i, h in enumerate(header)]
+    lines = ["  ".join(h.ljust(w) for h, w in zip(header, widths))]
+    lines += ["  ".join(c.ljust(w) for c, w in zip(b, widths))
+              for b in body]
+    return "\n".join(lines)
+
+
+def rebaseline(serving: dict, baseline: dict) -> dict:
+    """Adopt the current event-loop rows as the new gate reference
+    (``pre_pr`` and the note are preserved)."""
+    new = dict(baseline)
+    new["event_loop"] = {
+        variant: {k: row[k] for k in BASELINE_FIELDS if k in row}
+        for variant, row in sorted(serving.get("event_loop", {}).items())
+    }
+    return new
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--serving", default=DEFAULT_SERVING)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("BENCH_GATE_TOL", 0.10)),
+                    help="allowed fractional iters/s regression "
+                         "(default 0.10; env BENCH_GATE_TOL)")
+    ap.add_argument("--rebaseline", action="store_true",
+                    help="write current rows into --baseline and exit 0")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.serving):
+        print(f"bench_gate: {args.serving} not found — run "
+              "`PYTHONPATH=src python -m benchmarks.run --smoke` first")
+        return 1
+    with open(args.serving) as f:
+        serving = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    if args.rebaseline:
+        new = rebaseline(serving, baseline)
+        with open(args.baseline, "w") as f:
+            json.dump(new, f, indent=2)
+            f.write("\n")
+        print(f"bench_gate: rebaselined {args.baseline}")
+        print(render_table(gate(serving, new, args.tolerance)[1]))
+        return 0
+
+    failures, rows = gate(serving, baseline, args.tolerance)
+    table = render_table(rows)
+    print(table)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write("### Event-loop perf gate\n\n")
+            f.write(render_table(rows, markdown=True) + "\n\n")
+            if failures:
+                f.write("**FAILURES**\n\n")
+                f.writelines(f"- {x}\n" for x in failures)
+    if failures:
+        print("\nbench_gate: FAIL")
+        for x in failures:
+            print(f"  - {x}")
+        print("  (intentional perf change? refresh with "
+              "`python tools/bench_gate.py --rebaseline` and commit)")
+        return 1
+    print("\nbench_gate: OK "
+          f"(tolerance {args.tolerance:.0%}, pins exact)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -134,6 +134,86 @@ def event_loop_benchmark(rate_rps: float = 6.0, duration_s: float = 60.0,
     return out
 
 
+def real_mesh_benchmark(tp: int = 1, rate_rps: float = 2.5,
+                        duration_s: float = 30.0, seed: int = 0) -> dict:
+    """Wall-clock the **real** (JAX-executing) event loop on a tp-wide
+    mesh slice — the ``real_mesh_tp1`` gate row.  A reduced-model paged
+    P/D cluster runs the scenario twice with one shared backend factory:
+    the first pass warms every ``shared_jit`` entry point, the measured
+    pass must replay compiled executables (``recompiles == 0`` is gated,
+    so a mesh-keyed cache miss — e.g. the fingerprint accidentally
+    including per-run state — shows up here, not on TPU pods).
+
+    The slicer's pool is pinned to device 0 so both passes land on the
+    same fingerprint regardless of host device count, and the virtual
+    clock prices the same A100 scenario as the Sim rows — the
+    ``energy_per_token_j`` golden pin must not drift when the mesh path
+    changes."""
+    import dataclasses
+    import time
+
+    import jax
+
+    from repro.configs.registry import REGISTRY
+    from repro.core.power import A100
+    from repro.models import model as Mmod
+    from repro.serving import ClusterConfig, PDCluster, poisson_workload
+    from repro.serving.realengine import make_real_backend_factory
+    from repro.serving.workload import DatasetDist, LengthDist, attach_tokens
+
+    model = REGISTRY["llama-3.1-8b"]
+    rc = dataclasses.replace(model.reduced(), dtype="float32")
+    rparams = Mmod.init_params(rc, jax.random.key(0))
+    factory = make_real_backend_factory(
+        rc, rparams, slots=8, max_len=128, paged=True, page_size=16,
+        tp=tp, devices=jax.devices()[:tp],
+    )
+    tiny = DatasetDist(
+        "tiny",
+        prefill=LengthDist(24.0, 10.0, hi=60),
+        decode=LengthDist(6.0, 3.0, hi=12),
+    )
+
+    def one_run():
+        reqs = attach_tokens(
+            poisson_workload(tiny, rate_rps, duration_s, seed=seed),
+            rc.vocab_size, seed=seed + 1,
+        )
+        cfg = ClusterConfig(
+            model=model, chip=A100, n_prefill=1, n_decode=2, tp=tp,
+            policy="voltana", online_adapt=False, predictor_bank={},
+            seed=seed, paged=True, kv_page_size=16,
+            prefill_chunk_tokens=32, decode_max_running=8,
+            noise_sigma=0.0,
+        )
+        cluster = PDCluster(cfg)
+        t0 = time.perf_counter()
+        m = cluster.run(reqs)
+        wall = time.perf_counter() - t0
+        iters = sum(
+            e.backend.n_iters
+            for e in cluster.prefill + cluster.decode + cluster.hybrid
+        )
+        return m, iters, wall
+
+    one_run()  # warm every jit entry point (compiles charge here)
+    m, iters, wall_s = one_run()
+    return {
+        "tp": tp,
+        "backend": "real",
+        "requests": len(m.requests),
+        "output_tokens": m.output_tokens(),
+        "iterations": iters,
+        "event_loop_wall_s": round(wall_s, 4),
+        "iters_per_s": round(iters / wall_s, 1) if wall_s else None,
+        "energy_per_token_j": round(m.energy_per_token_j(), 6),
+        "ttft_attainment": round(m.ttft_attainment(), 4),
+        "itl_attainment": round(m.itl_attainment(), 4),
+        "finished_frac": round(m.finished_frac(), 4),
+        "recompiles": m.recompiles,
+    }
+
+
 def run(out_dir=None, results_path=None):
     """Reads perf_results.jsonl produced by `python -m benchmarks.perf_iterations`
     (standalone mode) and emits the §Perf table; returns rows."""

@@ -63,7 +63,10 @@ def _write_bench_serving(module_status: dict) -> str:
     """Machine-readable perf snapshot for cross-PR tracking (CI
     artifact): the Sim event loop timed on a fixed reference scenario —
     legacy and paged KV accounting — plus each smoke module's status."""
-    from benchmarks.perf_iterations import event_loop_benchmark
+    from benchmarks.perf_iterations import (
+        event_loop_benchmark,
+        real_mesh_benchmark,
+    )
 
     bank = {}  # one EcoPred fit shared by both variants
     event_loop = {
@@ -72,6 +75,10 @@ def _write_bench_serving(module_status: dict) -> str:
         "spec_decode": event_loop_benchmark(
             paged=True, spec=True, predictor_bank=bank
         ),
+        # real JAX execution on a tp=1 mesh slice: gates the mesh-keyed
+        # jit cache (warm run must replay, recompiles == 0) and the
+        # virtual-clock golden pin through the sharded code path
+        "real_mesh_tp1": real_mesh_benchmark(tp=1),
     }
     payload = {
         "schema": 2,

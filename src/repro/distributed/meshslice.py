@@ -1,0 +1,80 @@
+"""Per-instance mesh slices: one device set carved into TP sub-meshes.
+
+A serving instance (``InstanceSpec.tp``) is a *slice* of the process's
+device set: a ``(1, tp)`` mesh with axes ``("data", "model")`` — the
+same axis names the sharding rules and the model's context constraints
+(:func:`repro.distributed.context.expert_pspec`,
+:func:`~repro.distributed.context.ssd_head_pspec`) already speak, so a
+slice drops into :func:`repro.distributed.sharding.param_pspecs`
+unchanged.  :class:`MeshSlicer` hands slices out round-robin from one
+pool — a 2P+2D tp=2 cluster on an 8-device host gets four disjoint
+2-device slices; when the pool is exhausted the ring wraps and slices
+share devices (correct, just contended — exactly what a 1-device host
+does for every slice, which is how the tp=1 mesh path stays bit-exact
+with the legacy single-device backend).
+
+Device identity (not just shape) is part of
+:func:`repro.serving.jitcache.mesh_fingerprint`: two instances on
+*different* slices never share a jitted executable, while two instances
+whose slices wrap onto the same devices do — that sharing is what keeps
+``recompiles == 0`` in steady state on small hosts.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_slice_mesh(devices: Sequence) -> Mesh:
+    """A ``(1, tp)`` ("data", "model") mesh over ``devices``."""
+    devs = np.asarray(devices, dtype=object).reshape(1, len(devices))
+    return Mesh(devs, ("data", "model"))
+
+
+class MeshSlicer:
+    """Carves tp-sized ("data", "model") sub-meshes from a device pool.
+
+    ``devices=None`` takes the full ``jax.devices()`` set at first use.
+    Slices are handed out round-robin: disjoint while devices remain,
+    wrapping (shared devices) when the fleet outgrows the host — so the
+    same factory works on a 1-device CPU, a forced
+    ``--xla_force_host_platform_device_count`` host mesh, and a real
+    multi-chip slice without configuration.
+    """
+
+    def __init__(self, devices: Optional[Sequence] = None):
+        if devices is None:
+            import jax
+
+            devices = jax.devices()
+        self.devices = list(devices)
+        if not self.devices:
+            raise ValueError("MeshSlicer needs at least one device")
+        self._next = 0
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    def slice(self, tp: int) -> Mesh:
+        """The next tp-wide slice (raises ``ValueError`` when ``tp``
+        exceeds the pool — a slice never splits across hosts' seams)."""
+        tp = int(tp)
+        if tp < 1:
+            raise ValueError(f"tp must be >= 1, got {tp}")
+        n = len(self.devices)
+        if tp > n:
+            raise ValueError(
+                f"tp={tp} exceeds the {n} available devices — shrink tp, "
+                "or force a larger host mesh with "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                "(set before jax initializes)"
+            )
+        start = self._next
+        if start + tp > n:  # don't straddle the ring seam: restart
+            start = 0
+        devs = self.devices[start: start + tp]
+        self._next = (start + tp) % n
+        return make_slice_mesh(devs)

@@ -336,6 +336,77 @@ def cache_pspecs(
     return jax.tree_util.tree_map_with_path(visit, cache_tree)
 
 
+def serving_cache_pspecs(
+    cache_tree: PyTree,  # init_cache or init_paged_cache tree
+    mesh: Mesh,
+    pol: Optional[ShardingPolicy] = None,
+) -> PyTree:
+    """Serving-KV sharding: **kv heads over the model axis**.
+
+    The serving engines run Megatron TP ("tp" mode): wk/wv shard their
+    output dim over "model", so every produced K/V is already
+    head-sharded — laying the resident cache out the same way keeps the
+    per-token scatter *local* to each shard (no resharding on the hot
+    decode path), and the paged/ring attention decomposes per KV head,
+    so reads are local too.  This deliberately differs from
+    :func:`cache_pspecs` (cache-length over "model"), which targets the
+    dry-run flash-decode path where Hkv is smaller than the model axis;
+    a serving slice is narrow (tp ∈ {1..8}), so heads usually divide —
+    and fall back to replication when they don't.
+
+    Covers both cache layouts: dense ring ``(n, B, C, Hkv, Dh)`` and
+    paged pool ``(n, P+1, page, Hkv, Dh)`` k/v leaves (head dim is
+    ``ndim-2`` in both), int8 ring scales ``(n, B, C, H)`` (head dim
+    last), and replicates bookkeeping (``pos``) and recurrent state.
+    """
+    pol = pol or default_policy(mesh)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def visit(path, leaf):
+        name = getattr(
+            path[-1], "key", getattr(path[-1], "name", str(path[-1]))
+        )
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        if name in ("k", "v"):
+            hdim = len(shape) - 2
+            if _fits(shape[hdim], mesh_shape, pol.model_axis):
+                spec[hdim] = pol.model_axis
+        elif name in ("k_sc", "v_sc"):
+            hdim = len(shape) - 1
+            if _fits(shape[hdim], mesh_shape, pol.model_axis):
+                spec[hdim] = pol.model_axis
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(visit, cache_tree)
+
+
+def place_serving_state(
+    cfg: ModelConfig,
+    params: PyTree,
+    cache_trees: Sequence[PyTree],
+    mesh: Mesh,
+    pol: Optional[ShardingPolicy] = None,
+):
+    """Lay a serving instance's state out on its mesh slice: params by
+    the policy's rules, each cache tree by
+    :func:`serving_cache_pspecs`.  Returns
+    ``(params, [caches...], [cache pspec trees...])`` — the pspec trees
+    are reusable for same-structure trees of other shapes (the P→D
+    handoff page stacks), which is how the decode side reshards an
+    incoming migration onto its own slice."""
+    pol = pol or default_policy(mesh)
+    params = jax.device_put(
+        params, named(param_pspecs(cfg, params, mesh, pol), mesh)
+    )
+    placed, pspecs = [], []
+    for tree in cache_trees:
+        ps = serving_cache_pspecs(tree, mesh, pol)
+        placed.append(jax.device_put(tree, named(ps, mesh)))
+        pspecs.append(ps)
+    return params, placed, pspecs
+
+
 def named(tree_of_pspecs: PyTree, mesh: Mesh) -> PyTree:
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), tree_of_pspecs,

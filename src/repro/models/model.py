@@ -649,15 +649,24 @@ def prefill(
 
 
 def _check_paged(cfg: ModelConfig) -> None:
-    assert not cfg.has_mamba, (
-        "paged KV covers attention caches only; recurrent (Mamba) state "
-        "is constant-size per request and cannot resume mid-sequence from "
-        "shared prefix pages — serve hybrid models with paged=False"
-    )
-    assert cfg.kv_dtype != "int8", (
-        "paged cache does not carry int8 KV scales yet (paged=False "
-        "supports them)"
-    )
+    """Reject configs the paged cache cannot serve.  Raises ``ValueError``
+    (never ``assert`` — an invalid user config must fail identically
+    under ``python -O``).  ``ClusterConfig`` runs the same validation at
+    construction so the misconfiguration surfaces before any backend or
+    jit work; this copy guards direct model-layer callers."""
+    if cfg.has_mamba:
+        raise ValueError(
+            f"model '{cfg.name}': paged KV covers attention caches only; "
+            "recurrent (Mamba) state is constant-size per request and "
+            "cannot resume mid-sequence from shared prefix pages — serve "
+            "hybrid models with paged=False"
+        )
+    if cfg.kv_dtype == "int8":
+        raise ValueError(
+            f"model '{cfg.name}': paged cache does not carry int8 KV "
+            "scales yet — set kv_dtype to a float dtype or serve with "
+            "paged=False (which supports int8 KV)"
+        )
 
 
 def init_paged_cache(

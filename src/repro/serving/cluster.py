@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import copy
 import heapq
+import inspect
 import itertools
 import math
 from dataclasses import dataclass, field, replace
@@ -159,8 +160,23 @@ class ClusterConfig:
     straggler_factors: Optional[Dict[int, float]] = None  # decode idx -> x
     seed: int = 0
     # execution backend override: f(kind, idx, hw, seed) -> SimBackend
-    # (see repro.serving.realengine.make_real_backend_factory)
+    # (see repro.serving.realengine.make_real_backend_factory).  When the
+    # factory accepts a ``tp`` keyword the cluster passes each instance's
+    # InstanceSpec.tp, so heterogeneous fleets carve matching mesh slices
     backend_factory: Optional[Callable] = None
+
+    def __post_init__(self):
+        # Fail invalid configs at construction with actionable errors
+        # (never via ``assert`` — the checks must survive python -O).
+        if self.paged and self.model.kv_dtype == "int8":
+            raise ValueError(
+                f"ClusterConfig: model '{self.model.name}' has "
+                "kv_dtype='int8' but paged=True — the paged KV pool does "
+                "not carry int8 scales yet; set paged=False (int8 KV is "
+                "supported there) or switch kv_dtype to a float dtype"
+            )
+        if self.tp < 1:
+            raise ValueError(f"ClusterConfig: tp must be >= 1, got {self.tp}")
 
 
 def build_predictor(
@@ -225,6 +241,7 @@ HYBRID_OFF = 1 << 20
 class PDCluster:
     def __init__(self, cfg: ClusterConfig):
         self.cfg = cfg
+        self._factory_takes_tp: Optional[bool] = None
         self.tiered = cfg.slo_tiers is not None
         fo = tuple(cfg.freq_options or cfg.chip.freq_levels_2)
         fo_p = tuple(cfg.freq_options_prefill or fo)
@@ -476,13 +493,33 @@ class PDCluster:
         if bind is not None:
             bind(cache)
 
+    def _spawn_backend(self, kind: str, idx: int, hw, seed: int,
+                       spec: InstanceSpec):
+        """Call the user's backend factory; factories that take a ``tp``
+        keyword (``make_real_backend_factory``) get the instance's
+        tensor-parallel degree so their mesh slice matches what the cost
+        model already assumes.  Legacy 4-arg factories keep working."""
+        f = self.cfg.backend_factory
+        if self._factory_takes_tp is None:
+            try:
+                ps = inspect.signature(f).parameters
+                self._factory_takes_tp = "tp" in ps or any(
+                    p.kind is inspect.Parameter.VAR_KEYWORD
+                    for p in ps.values()
+                )
+            except (TypeError, ValueError):  # builtins, exotic callables
+                self._factory_takes_tp = False
+        if self._factory_takes_tp:
+            return f(kind, idx, hw, seed, tp=spec.tp)
+        return f(kind, idx, hw, seed)
+
     def _make_prefill(self, idx: int, spec: InstanceSpec) -> PrefillEngine:
         c = self.cfg
         hw = self._hw_for(spec)
         pred = self._pred_for(spec)
         seed = self._instance_seed("prefill", idx)
         if c.backend_factory is not None:
-            backend = c.backend_factory("prefill", idx, hw, seed)
+            backend = self._spawn_backend("prefill", idx, hw, seed, spec)
         else:
             backend = SimBackend(hw, c.noise_sigma, seed=seed)
         eng = PrefillEngine(
@@ -508,7 +545,7 @@ class PDCluster:
         slow = (c.straggler_factors or {}).get(idx, 1.0)
         seed = self._instance_seed("decode", idx)
         if c.backend_factory is not None:
-            backend = c.backend_factory("decode", idx, hw, seed)
+            backend = self._spawn_backend("decode", idx, hw, seed, spec)
             backend.slow_factor = slow
         else:
             backend = SimBackend(
@@ -540,7 +577,7 @@ class PDCluster:
         pred = self._pred_for(spec)
         seed = self._instance_seed("hybrid", j)
         if c.backend_factory is not None:
-            backend = c.backend_factory("hybrid", j, hw, seed)
+            backend = self._spawn_backend("hybrid", j, hw, seed, spec)
         else:
             backend = SimBackend(hw, c.noise_sigma, seed=seed)
         eng = HybridEngine(
@@ -756,12 +793,19 @@ class PDCluster:
         idx = self.decode_router.route(views, self._route_req(req))
         # KV migration latency (context KV bytes over the transfer fabric;
         # a preemption resume re-transfers prompt + regenerated context;
-        # paged serving copies whole pages, so the price rounds up too)
+        # paged serving copies whole pages, so the price rounds up too).
+        # TP-sharded instances move the handoff per shard: the KV cache is
+        # head-sharded across the slice, so tp disjoint shard gathers ride
+        # tp parallel links — per-link bytes are 1/tp of the context
+        # (tp=1 keeps the legacy pricing bit-exact)
         bytes_ = self.hw.kv_transfer_bytes(
             req.prompt_len + req.tokens_out,
             page_size=self.cfg.kv_page_size if self.cfg.paged else 0,
         )
-        dt = self.cfg.transfer_const_s + bytes_ / self.cfg.transfer_bw
+        lanes = max(1, self.hw.tp)
+        dt = self.cfg.transfer_const_s + bytes_ / (
+            lanes * self.cfg.transfer_bw
+        )
         self._push(self.now + dt, _JOIN_D, (req, idx))
 
     # -- straggler signal -------------------------------------------------------

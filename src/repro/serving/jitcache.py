@@ -5,9 +5,21 @@ own ``jax.jit(partial(fn, cfg=cfg))`` wrappers — each instance owned a
 private compile cache, so a 2-decode cluster traced and compiled every
 entry point twice, and a second cluster over the same config recompiled
 everything from scratch.  This module keys the jitted callable on
-``(fn, cfg, statics, donated argnames)`` — :class:`ModelConfig` is a
-frozen, hashable dataclass, so two backends with the same config resolve
-to the *same* callable and share its XLA executable cache.
+``(fn, cfg, statics, donated argnames, mesh fingerprint)`` —
+:class:`ModelConfig` is a frozen, hashable dataclass, so two backends
+with the same config resolve to the *same* callable and share its XLA
+executable cache.
+
+**Mesh identity is part of the key.**  Two backends with the same
+``ModelConfig`` but different mesh slices (or different sharding
+policies) must NOT share a callable: the jitted computation bakes in
+the device assignment and the sharding constraints picked up at trace
+time (the MoE expert-parallel constraint reads a ContextVar — a retrace
+is never triggered by a context change, only by a cache miss).  The
+fingerprint covers axis names, axis sizes, the concrete device ids of
+the slice, and the sharding policy, so a collision is impossible by
+construction; ``mesh=None`` (the single-device legacy path) keys
+exactly as before.
 
 It also centralizes the two serving-wide jit policies:
 
@@ -26,27 +38,67 @@ import.
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
-_CACHE: Dict[tuple, Callable] = {}
+_CACHE: Dict[tuple, Callable] = {}  # key -> raw jax.jit object
+# key -> the callable handed out (the jit itself, or its mesh-entering
+# wrapper).  Kept separate so compile_count() only ever sees raw jits
+# while identity stays stable: same key -> same returned object.
+_HANDED: Dict[tuple, Callable] = {}
+
+
+def mesh_fingerprint(mesh) -> Optional[tuple]:
+    """Hashable identity of a mesh slice: axis names, axis sizes, and
+    the concrete device ids.  Two slices over the same devices with the
+    same axes are interchangeable (their computations compile to the
+    same device assignment); anything else must not share executables.
+    ``None`` stays ``None`` — the meshless key is its own family."""
+    if mesh is None:
+        return None
+    return (
+        tuple(mesh.axis_names),
+        tuple(mesh.devices.shape),
+        tuple(int(d.id) for d in mesh.devices.flat),
+    )
 
 
 def shared_jit(fn: Callable, cfg, *, donate: Tuple[str, ...] = (),
-               **statics) -> Callable:
+               mesh=None, policy=None, **statics) -> Callable:
     """The process-wide jitted entry point for ``fn`` closed over
     ``cfg`` (and any keyword ``statics``), donating ``donate`` argnames.
-    Idempotent: same key -> same callable -> shared compile cache."""
-    key = (fn, cfg, tuple(sorted(statics.items())), tuple(donate))
-    j = _CACHE.get(key)
-    if j is None:
-        import jax
+    Idempotent: same key -> same callable -> shared compile cache.
 
-        j = jax.jit(
-            partial(fn, cfg=cfg, **statics),
-            donate_argnames=tuple(donate) or None,
-        )
-        _CACHE[key] = j
-    return j
+    With ``mesh``, the returned callable enters
+    :func:`repro.distributed.context.mesh_context` around every call so
+    sharding constraints (MoE expert parallelism, SSD head sharding)
+    resolve against the instance's slice at trace time, and the cache
+    key grows the mesh fingerprint + ``policy`` (a hashable
+    :class:`~repro.distributed.sharding.ShardingPolicy`) so distinct
+    slices/layouts never collide on one executable."""
+    key = (fn, cfg, tuple(sorted(statics.items())), tuple(donate),
+           mesh_fingerprint(mesh), policy)
+    handed = _HANDED.get(key)
+    if handed is not None:
+        return handed
+    import jax
+
+    j = jax.jit(
+        partial(fn, cfg=cfg, **statics),
+        donate_argnames=tuple(donate) or None,
+    )
+    _CACHE[key] = j
+    if mesh is None:
+        handed = j
+    else:
+        from repro.distributed.context import mesh_context
+
+        def handed(*args, _jit=j, _mesh=mesh, **kwargs):
+            with mesh_context(_mesh):
+                return _jit(*args, **kwargs)
+
+        handed._shared_jit = j  # telemetry/tests reach the raw jit
+    _HANDED[key] = handed
+    return handed
 
 
 def compile_count() -> int:
@@ -66,3 +118,4 @@ def clear() -> None:
     for j in _CACHE.values():
         j.clear_cache()
     _CACHE.clear()
+    _HANDED.clear()

@@ -19,10 +19,14 @@ the radix cache, and a request's fresh tokens always start on a fresh
 page — the serving paths never actually trigger a copy; ``cow`` exists
 so that invariant is checkable rather than assumed.
 
-Every transition asserts pool invariants (no double free, no foreign
-ids, refcounts never negative) and :meth:`KVPool.assert_empty` gives
-tests a leak check; stats (peak usage, max refcount observed, CoW
-copies) are the observability surface the acceptance tests read.
+Every transition enforces pool invariants (no double free, no foreign
+ids, refcounts never negative) with **real exceptions** — a double free
+or a foreign page id raises :class:`PageStateError` even under
+``python -O`` (``assert`` statements vanish there, and these checks are
+load-bearing: a silent double free corrupts another request's KV) — and
+:meth:`KVPool.assert_empty` gives tests a leak check; stats (peak usage,
+max refcount observed, CoW copies) are the observability surface the
+acceptance tests read.
 """
 from __future__ import annotations
 
@@ -32,6 +36,14 @@ from typing import Iterable, List, Sequence
 
 class PageAllocError(RuntimeError):
     """The pool cannot satisfy an allocation (capacity, not a bug)."""
+
+
+class PageStateError(RuntimeError):
+    """A page-lifecycle invariant was violated (always a bookkeeping
+    bug): double free, incref/cow of a free page, a foreign page id, a
+    leaked page at drain, or a corrupt free list.  Deliberately not an
+    ``AssertionError`` so ``python -O`` cannot strip the check —
+    ``tools/check_opt_invariants.py`` proves this in CI."""
 
 
 @dataclass
@@ -53,7 +65,11 @@ class KVPool:
     """
 
     def __init__(self, num_pages: int, page_size: int):
-        assert num_pages > 0 and page_size > 0, (num_pages, page_size)
+        if num_pages <= 0 or page_size <= 0:
+            raise ValueError(
+                f"KVPool needs positive sizes, got num_pages={num_pages} "
+                f"page_size={page_size}"
+            )
         self.num_pages = int(num_pages)
         self.page_size = int(page_size)
         self._ref = [0] * self.num_pages
@@ -90,7 +106,8 @@ class KVPool:
     def alloc(self, n: int) -> List[int]:
         """``n`` fresh pages at refcount 1.  All-or-nothing: raises
         :class:`PageAllocError` (allocating nothing) when short."""
-        assert n >= 0, n
+        if n < 0:
+            raise ValueError(f"alloc of {n} pages")
         if n > len(self._free):
             raise PageAllocError(
                 f"KV pool exhausted: need {n} pages, {len(self._free)} free "
@@ -98,7 +115,8 @@ class KVPool:
             )
         out = [self._free.pop() for _ in range(n)]
         for p in out:
-            assert self._ref[p] == 0, f"free-list page {p} had refs"
+            if self._ref[p] != 0:
+                raise PageStateError(f"free-list page {p} had refs")
             self._ref[p] = 1
         self.stats.allocs += n
         self._note_usage()
@@ -108,17 +126,20 @@ class KVPool:
         """Retain already-live pages (a new holder of a shared prefix)."""
         for p in pages:
             self._check_id(p)
-            assert self._ref[p] > 0, f"incref of free page {p}"
+            if self._ref[p] <= 0:
+                raise PageStateError(f"incref of free page {p}")
             self._ref[p] += 1
             if self._ref[p] > self.stats.max_refcount:
                 self.stats.max_refcount = self._ref[p]
 
     def decref(self, pages: Iterable[int]) -> None:
         """Release one reference per page; refcount 0 frees the page.
-        Double frees assert — they are always a bookkeeping bug."""
+        Double frees raise :class:`PageStateError` — they are always a
+        bookkeeping bug."""
         for p in pages:
             self._check_id(p)
-            assert self._ref[p] > 0, f"double free of page {p}"
+            if self._ref[p] <= 0:
+                raise PageStateError(f"double free of page {p}")
             self._ref[p] -= 1
             if self._ref[p] == 0:
                 self._free.append(p)
@@ -133,7 +154,8 @@ class KVPool:
         payload into (``needs_copy=True``).
         """
         self._check_id(page)
-        assert self._ref[page] > 0, f"cow of free page {page}"
+        if self._ref[page] <= 0:
+            raise PageStateError(f"cow of free page {page}")
         if self._ref[page] == 1:
             return page, False
         fresh = self.alloc(1)[0]
@@ -147,13 +169,22 @@ class KVPool:
 
     # -- invariants --------------------------------------------------------
     def assert_empty(self) -> None:
-        """Leak check: every page back in the free list."""
+        """Leak check: every page back in the free list (raises
+        :class:`PageStateError`, not AssertionError — ``-O``-proof)."""
         leaked = [p for p, r in enumerate(self._ref) if r > 0]
-        assert not leaked, f"leaked pages (refcount > 0): {leaked[:16]}"
-        assert len(self._free) == self.num_pages
+        if leaked:
+            raise PageStateError(
+                f"leaked pages (refcount > 0): {leaked[:16]}"
+            )
+        if len(self._free) != self.num_pages:
+            raise PageStateError(
+                f"free list holds {len(self._free)} of {self.num_pages} "
+                "pages with no refs outstanding (corrupt free list)"
+            )
 
     def _check_id(self, p: int) -> None:
-        assert 0 <= p < self.num_pages, f"foreign page id {p}"
+        if not 0 <= p < self.num_pages:
+            raise PageStateError(f"foreign page id {p}")
 
     def _note_usage(self) -> None:
         if self.in_use > self.stats.peak_in_use:
@@ -172,10 +203,13 @@ class BlockTable:
     def adopt(self, pages: Sequence[int], n_tokens: int) -> None:
         """Take over already-retained pages (prefix hit / migration);
         the caller has arranged the references, the table tracks them."""
-        assert not self.pages, "adopt into a non-empty table"
-        assert len(pages) == self.pool.pages_for(n_tokens), (
-            len(pages), n_tokens, self.pool.page_size,
-        )
+        if self.pages:
+            raise PageStateError("adopt into a non-empty table")
+        if len(pages) != self.pool.pages_for(n_tokens):
+            raise PageStateError(
+                f"adopt of {len(pages)} pages for {n_tokens} tokens "
+                f"(page_size={self.pool.page_size})"
+            )
         self.pages = list(pages)
         self.num_tokens = n_tokens
 
@@ -203,7 +237,11 @@ class BlockTable:
         pages are untouchable by construction.
         """
         keep = self.pool.pages_for(n_tokens)
-        assert keep <= len(self.pages), (keep, len(self.pages), n_tokens)
+        if keep > len(self.pages):
+            raise PageStateError(
+                f"shrink to {n_tokens} tokens needs {keep} pages but the "
+                f"table holds {len(self.pages)}"
+            )
         tail = self.pages[keep:]
         if tail:
             self.pool.decref(tail)

@@ -45,6 +45,22 @@ with the same config share one compile cache, decode/draft/verify jits
 donate their KV ``cache`` argument (in-place updates on accelerators;
 documented no-op on CPU), and the cluster reads the module's compile
 counter to report ``RunMetrics.recompiles``.
+
+**Mesh-sharded instances.**  With ``mesh`` set (a
+:class:`~repro.distributed.meshslice.MeshSlicer` slice — see
+``make_real_backend_factory(tp=...)``), the instance is a real
+TP/EP-sharded unit: params are laid out by
+:func:`repro.distributed.sharding.param_pspecs` (Megatron TP; MoE
+experts ride the "model" axis via the mesh context), the dense ring /
+paged page pool shards its KV heads over "model"
+(:func:`~repro.distributed.sharding.serving_cache_pspecs`), every jit
+entry point is keyed on the mesh fingerprint + policy (no cross-slice
+executable collisions), and the P→D handoff reshards the migrated page
+stack onto the destination slice with an explicit per-shard
+``device_put`` gather/scatter.  Page arithmetic (``KVPool`` /
+``BlockTable``) stays host-side and shard-agnostic: a page id means the
+same page on every shard, each shard simply holds that page's slice of
+the KV heads.  A ``tp=1`` mesh is bit-exact with the meshless path.
 """
 from __future__ import annotations
 
@@ -58,6 +74,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.hwmodel import HardwareModel
+from repro.distributed import sharding as SH
+from repro.distributed.meshslice import MeshSlicer
 from repro.models import model as M
 from repro.serving import jitcache
 from repro.serving.engine import SimBackend
@@ -98,6 +116,8 @@ class RealBackend(SimBackend):
         draft_cfg: Optional[ModelConfig] = None,
         draft_params=None,
         donate_kv: bool = True,
+        mesh=None,
+        sharding_policy=None,
     ):
         super().__init__(hw, noise_sigma, seed)
         self.cfg = cfg
@@ -106,6 +126,18 @@ class RealBackend(SimBackend):
         self.max_len = max_len
         self.paged = paged
         self.donate_kv = donate_kv
+        # mesh slice: this instance's devices.  None = legacy
+        # single-device path, byte-for-byte identical jit keys.
+        self.mesh = mesh
+        self.sharding_policy = (
+            (sharding_policy or SH.default_policy(mesh))
+            if mesh is not None else None
+        )
+        jit_kw = (
+            dict(mesh=mesh, policy=self.sharding_policy)
+            if mesh is not None else {}
+        )
+        self._handoff_shardings = None  # per-leaf reshard of migrations
         don = ("cache",) if donate_kv else ()
         # decode slot state (both memory models batch decode over slots).
         # The token chain is device-resident: the previous iteration's
@@ -128,6 +160,13 @@ class RealBackend(SimBackend):
             self.pool_pages = pool_pages or (2 * slots + 8) * self.max_pages
             self.pool = KVPool(self.pool_pages, page_size)
             self.kvcache = M.init_paged_cache(cfg, self.pool_pages, page_size)
+            if mesh is not None:
+                self.params, (self.kvcache,), (kv_pspecs,) = \
+                    SH.place_serving_state(
+                        cfg, self.params, [self.kvcache], mesh,
+                        self.sharding_policy,
+                    )
+                self._handoff_shardings = SH.named(kv_pspecs, mesh)
             self.block_tables = np.full(
                 (slots, self.max_pages), -1, np.int32
             )
@@ -139,18 +178,25 @@ class RealBackend(SimBackend):
             self.reused_tokens = 0
             self.computed_tokens = 0
             self._prefill_jit = jitcache.shared_jit(
-                M.prefill_paged_greedy, cfg, donate=don
+                M.prefill_paged_greedy, cfg, donate=don, **jit_kw
             )
             self._decode_jit = jitcache.shared_jit(
-                M.decode_step_paged_greedy, cfg, donate=don
+                M.decode_step_paged_greedy, cfg, donate=don, **jit_kw
             )
         else:
             self.cache = M.init_cache(cfg, slots, max_len)
+            if mesh is not None:
+                self.params, (self.cache,), (kv_pspecs,) = \
+                    SH.place_serving_state(
+                        cfg, self.params, [self.cache], mesh,
+                        self.sharding_policy,
+                    )
+                self._handoff_shardings = SH.named(kv_pspecs, mesh)
             self._prefill_jit = jitcache.shared_jit(
-                M.prefill_greedy, cfg, max_len=max_len
+                M.prefill_greedy, cfg, max_len=max_len, **jit_kw
             )
             self._decode_jit = jitcache.shared_jit(
-                M.decode_step_greedy, cfg, donate=don
+                M.decode_step_greedy, cfg, donate=don, **jit_kw
             )
 
         # speculative draft–verify execution (needs the paged pool: the
@@ -174,15 +220,21 @@ class RealBackend(SimBackend):
             # "rollback" is implicit (stale positions are masked by the
             # per-slot position array until overwritten)
             self.draft_cache = M.init_cache(draft_cfg, slots, max_len)
+            if mesh is not None:
+                self.draft_params, (self.draft_cache,), _ = \
+                    SH.place_serving_state(
+                        draft_cfg, self.draft_params, [self.draft_cache],
+                        mesh, self.sharding_policy,
+                    )
             self._prev_dev = jnp.zeros(slots, jnp.int32)  # token at pos-1
             self._draft_prefill_jit = jitcache.shared_jit(
-                M.prefill_greedy, draft_cfg, max_len=max_len
+                M.prefill_greedy, draft_cfg, max_len=max_len, **jit_kw
             )
             self._draft_jit = jitcache.shared_jit(
-                M.draft_step, draft_cfg, donate=don
+                M.draft_step, draft_cfg, donate=don, **jit_kw
             )
             self._verify_jit = jitcache.shared_jit(
-                M.verify_step_paged_greedy, cfg, donate=don
+                M.verify_step_paged_greedy, cfg, donate=don, **jit_kw
             )
             # token-match telemetry: what greedy accept-prefix sampling
             # would have accepted (the control plane's acceptance
@@ -423,6 +475,13 @@ class RealBackend(SimBackend):
 
         if self.paged:
             tree, L = handoff
+            if self.mesh is not None:
+                # per-shard gather/scatter: the page stack was gathered
+                # on the prefill instance's slice; re-lay it out on OUR
+                # slice (same head-over-model rule, our devices) so the
+                # scatter below is shard-local.  Same-device slices
+                # (tp=1 host) make this a no-op placement.
+                tree = jax.device_put(tree, self._handoff_shardings)
             table = BlockTable(self.pool)
             table.adopt(self._alloc_pages(self.pool.pages_for(L)), L)
             dst = np.asarray(table.pages)
@@ -438,6 +497,8 @@ class RealBackend(SimBackend):
             self.block_tables[slot, : len(table.pages)] = table.pages
         else:
             cache = handoff
+            if self.mesh is not None:
+                cache = jax.device_put(cache, self._handoff_shardings)
 
             def put(dst_leaf, src):
                 # dst: (n_blocks, slots, ...); src: (n_blocks, 1, ...)
@@ -692,25 +753,45 @@ def make_real_backend_factory(
     draft_cfg: Optional[ModelConfig] = None,
     draft_params=None,
     donate_kv: bool = True,
+    tp: int = 0,
+    devices=None,
+    sharding_policy=None,
 ):
     """Factory for ClusterConfig.backend_factory: every instance gets its
     own slot/pool state but shares the (read-only) weights *and* — via
     :mod:`repro.serving.jitcache` — the jitted entry points, so a second
     instance (or a second cluster) over the same config never recompiles.
     With ``spec_k > 0`` the decode instances run real draft–verify
-    speculation (requires ``paged=True`` and a draft model)."""
+    speculation (requires ``paged=True`` and a draft model).
 
-    def factory(kind: str, idx: int, hw: HardwareModel, seed: int):
+    ``tp > 0`` turns each instance into a **mesh slice**: a
+    :class:`~repro.distributed.meshslice.MeshSlicer` over ``devices``
+    (default: all of ``jax.devices()``) carves a ``(1, tp)``
+    ("data", "model") sub-mesh per instance, and the cluster's
+    ``InstanceSpec.tp`` — passed through the factory's ``tp`` keyword —
+    overrides the default degree per instance, so a heterogeneous fleet
+    compiles heterogeneous shardings.  ``tp=0`` (default) is the legacy
+    meshless single-device path, bit-exact with prior releases."""
+    slicer = MeshSlicer(devices) if tp or devices is not None else None
+    default_tp = tp
+
+    def factory(kind: str, idx: int, hw: HardwareModel, seed: int,
+                tp: Optional[int] = None):
         n_slots = slots if kind in ("decode", "hybrid") else 1
         # hybrids coalesce prefill chunks between decode steps and stay
         # single-token; only pure decode instances speculate
         k = spec_k if kind == "decode" else 0
+        mesh = None
+        if slicer is not None:
+            degree = tp if tp else (default_tp or 1)
+            mesh = slicer.slice(degree)
         return RealBackend(
             hw, cfg, params, slots=n_slots, max_len=max_len, seed=seed,
             paged=paged, page_size=page_size, pool_pages=pool_pages,
             spec_k=k, draft_cfg=draft_cfg if k else None,
             draft_params=draft_params if k else None,
-            donate_kv=donate_kv,
+            donate_kv=donate_kv, mesh=mesh,
+            sharding_policy=sharding_policy,
         )
 
     return factory

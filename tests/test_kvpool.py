@@ -17,7 +17,12 @@ seeds keeps real coverage when hypothesis isn't installed.
 import numpy as np
 import pytest
 
-from repro.serving.kvpool import BlockTable, KVPool, PageAllocError
+from repro.serving.kvpool import (
+    BlockTable,
+    KVPool,
+    PageAllocError,
+    PageStateError,
+)
 from repro.serving.radixcache import PagedRadixCache
 
 from _hyp import HAVE_HYPOTHESIS, given, settings, st
@@ -48,18 +53,39 @@ def test_pool_exhaustion_is_all_or_nothing():
     pool.assert_empty()
 
 
-def test_pool_double_free_asserts():
+def test_pool_double_free_raises():
     pool = KVPool(4, 4)
     (p,) = pool.alloc(1)
     pool.decref([p])
-    with pytest.raises(AssertionError):
+    with pytest.raises(PageStateError, match="double free"):
         pool.decref([p])
 
 
-def test_pool_foreign_id_asserts():
+def test_pool_foreign_id_raises():
     pool = KVPool(4, 4)
-    with pytest.raises(AssertionError):
+    with pytest.raises(PageStateError, match="foreign"):
         pool.incref([7])
+
+
+def test_pool_invariants_are_not_bare_asserts():
+    """The lifecycle checks must survive ``python -O`` (assert-stripped
+    bytecode): they are real exceptions, never AssertionError.  The CI
+    smoke step ``PYTHONOPTIMIZE=1 tools/check_opt_invariants.py`` proves
+    the same under actual -O; this pins the exception taxonomy."""
+    assert not issubclass(PageStateError, AssertionError)
+    assert not issubclass(PageAllocError, AssertionError)
+    pool = KVPool(4, 4)
+    (p,) = pool.alloc(1)
+    with pytest.raises(PageStateError):  # leak check fires as an exception
+        pool.assert_empty()
+    with pytest.raises(PageStateError, match="incref of free"):
+        pool.incref([(set(range(4)) - {p}).pop()])
+    with pytest.raises(PageStateError, match="cow of free"):
+        pool.cow((set(range(4)) - {p}).pop())
+    pool.decref([p])
+    pool.assert_empty()
+    with pytest.raises(ValueError):
+        KVPool(0, 4)
 
 
 def test_pool_sharing_and_cow():

@@ -1,0 +1,437 @@
+"""Mesh-sharded serving parity: a TP/EP mesh slice must be invisible.
+
+Two lanes:
+
+* **fast lane** (any device count, runs in tier-1): the jit-cache
+  mesh-key collision regression, :class:`MeshSlicer` carving semantics,
+  ``ClusterConfig`` validation, and the tp=1-mesh end-to-end cluster —
+  which must be **bit-exact** with the legacy meshless ``RealBackend``
+  (a width-1 "model" axis shards nothing: every pspec is fully
+  replicated, the math is identical) with ``recompiles == 0`` in steady
+  state.
+* **multi-device lane** (``XLA_FLAGS=--xla_force_host_platform_``
+  ``device_count=8``, the CI ``mesh-parity`` job): sharded-vs-single-
+  device forward parity for prefill/decode/verify on dense and paged
+  caches at tp ∈ {2, 4} — logits within float tolerance, never exact:
+  sharded reductions reassociate sums — including page-boundary
+  lengths, MoE expert parallelism, per-shard pool drain, and a real
+  sharded qwen3-moe-class cluster (the acceptance scenario).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import REGISTRY
+from repro.core.hwmodel import HardwareModel
+from repro.core.power import A100
+from repro.distributed import sharding as SH
+from repro.distributed.meshslice import MeshSlicer, make_slice_mesh
+from repro.models import model as M
+from repro.serving import ClusterConfig, PDCluster, jitcache, poisson_workload
+from repro.serving.cluster import build_predictor
+from repro.serving.realengine import RealBackend, make_real_backend_factory
+from repro.serving.request import Request
+from repro.serving.workload import DatasetDist, LengthDist, attach_tokens
+
+MODEL = REGISTRY["llama-3.1-8b"]
+MOE_MODEL = REGISTRY["qwen3-moe-30b-a3b"]
+NDEV = jax.device_count()
+
+multidevice = pytest.mark.skipif(
+    NDEV < 2,
+    reason="needs a forced host mesh: "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+
+@pytest.fixture(scope="module")
+def rc():
+    return dataclasses.replace(MODEL.reduced(), dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def rparams(rc):
+    return M.init_params(rc, jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def moe_rc():
+    return dataclasses.replace(MOE_MODEL.reduced(), dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def moe_params(moe_rc):
+    return M.init_params(moe_rc, jax.random.key(1))
+
+
+# ---------------------------------------------------------------------------
+# Fast lane: jit-key collision regression (the satellite-1 bug)
+# ---------------------------------------------------------------------------
+def test_mesh_fingerprint_identity():
+    d = jax.devices()[:1]
+    m1 = make_slice_mesh(d)
+    m2 = make_slice_mesh(d)
+    assert jitcache.mesh_fingerprint(None) is None
+    assert jitcache.mesh_fingerprint(m1) == jitcache.mesh_fingerprint(m2)
+    # different axis names over the SAME device: a different family
+    from jax.sharding import Mesh
+
+    m3 = Mesh(np.asarray(d, dtype=object).reshape(1, 1), ("pod", "model"))
+    assert jitcache.mesh_fingerprint(m1) != jitcache.mesh_fingerprint(m3)
+
+
+def test_shared_jit_keys_on_mesh_and_policy(rc):
+    """Regression: the cache key used to omit mesh/sharding identity, so
+    a meshless backend and a mesh-sliced backend over the same config
+    silently shared one executable — whichever traced first imposed its
+    device assignment (and its ContextVar-resolved sharding constraints)
+    on the other."""
+    mesh = make_slice_mesh(jax.devices()[:1])
+    pol = SH.default_policy(mesh)
+    plain = jitcache.shared_jit(M.decode_step, rc)
+    meshed = jitcache.shared_jit(M.decode_step, rc, mesh=mesh, policy=pol)
+    assert plain is not meshed
+    # idempotent per key: same mesh/policy -> the SAME callable object
+    assert jitcache.shared_jit(M.decode_step, rc) is plain
+    assert jitcache.shared_jit(
+        M.decode_step, rc, mesh=mesh, policy=pol
+    ) is meshed
+    # a different policy over the same mesh is a different entry point
+    pol2 = dataclasses.replace(pol, mode="fsdp")
+    assert jitcache.shared_jit(
+        M.decode_step, rc, mesh=mesh, policy=pol2
+    ) is not meshed
+    # the mesh wrapper exposes its raw jit for compile telemetry
+    assert hasattr(meshed, "_shared_jit")
+
+
+def test_mesh_slicer_round_robin_and_wrap():
+    devs = jax.devices()
+    sl = MeshSlicer(devs)
+    a = sl.slice(1)
+    b = sl.slice(1)
+    assert a.axis_names == ("data", "model")
+    assert a.devices.shape == (1, 1)
+    if len(devs) >= 2:
+        # disjoint while the pool lasts
+        assert a.devices[0, 0] != b.devices[0, 0]
+    else:
+        # 1-device host: every slice wraps onto the same device
+        assert a.devices[0, 0] == b.devices[0, 0]
+        assert jitcache.mesh_fingerprint(a) == jitcache.mesh_fingerprint(b)
+
+
+def test_mesh_slicer_rejects_bad_tp():
+    sl = MeshSlicer(jax.devices())
+    with pytest.raises(ValueError, match="tp must be"):
+        sl.slice(0)
+    with pytest.raises(ValueError, match="exceeds"):
+        sl.slice(sl.n_devices + 1)
+    with pytest.raises(ValueError, match="at least one device"):
+        MeshSlicer([])
+
+
+def test_cluster_config_validates_paged_int8_and_tp():
+    """Satellite: the int8+paged misconfiguration used to surface as a
+    bare assert deep in ``init_paged_cache`` (vanishing under -O); it
+    must fail at config construction with an actionable message."""
+    pred = build_predictor(MODEL, A100, A100.freq_levels_2, kv_cap=400_000)
+    int8_model = dataclasses.replace(MODEL, kv_dtype="int8")
+    with pytest.raises(ValueError, match="int8"):
+        ClusterConfig(
+            model=int8_model, chip=A100, n_prefill=1, n_decode=1,
+            policy="voltana", predictor=pred, paged=True,
+        )
+    with pytest.raises(ValueError, match="tp"):
+        ClusterConfig(
+            model=MODEL, chip=A100, n_prefill=1, n_decode=1,
+            policy="voltana", predictor=pred, tp=0,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Fast lane: tp=1 mesh is bit-exact with the meshless backend
+# ---------------------------------------------------------------------------
+def _workload(rc, duration=5.0):
+    tiny = DatasetDist(
+        "tiny",
+        prefill=LengthDist(24.0, 10.0, hi=60),
+        decode=LengthDist(6.0, 3.0, hi=12),
+    )
+    reqs = poisson_workload(tiny, 2.5, duration, seed=21)
+    return attach_tokens(reqs, rc.vocab_size, seed=22)
+
+
+def _cluster_cfg(pred, **kw):
+    return ClusterConfig(
+        model=MODEL, chip=A100, n_prefill=1, n_decode=2,
+        policy="voltana", predictor=pred, kv_capacity_tokens=400_000,
+        online_adapt=False, decode_max_running=8, seed=4, noise_sigma=0.0,
+        prefill_chunk_tokens=32, paged=True, kv_page_size=16, **kw,
+    )
+
+
+def test_tp1_mesh_cluster_bit_exact_and_no_steady_recompiles(rc, rparams):
+    """The acceptance pin: a tp=1 mesh slice runs the same math on the
+    same device — token streams must be byte-identical to the meshless
+    path, the virtual clock must agree, and a second (warm) run must
+    compile nothing."""
+    pred = build_predictor(MODEL, A100, A100.freq_levels_2, kv_cap=400_000)
+    kw = dict(slots=8, max_len=128, paged=True, page_size=16)
+    r_plain = _workload(rc)
+    r_mesh = _workload(rc)
+    m_plain = PDCluster(_cluster_cfg(pred, backend_factory=(
+        make_real_backend_factory(rc, rparams, **kw)))).run(r_plain)
+    # pin the slicer's pool to device 0: every tp=1 slice wraps onto the
+    # same device, so the second cluster MUST share every executable.
+    # (on a multi-device host the unpinned slicer hands each instance a
+    # different device — correctly a different executable family)
+    mesh_factory = make_real_backend_factory(
+        rc, rparams, tp=1, devices=jax.devices()[:1], **kw
+    )
+    m_mesh = PDCluster(_cluster_cfg(
+        pred, backend_factory=mesh_factory)).run(r_mesh)
+
+    assert m_plain.finished_frac() == m_mesh.finished_frac() == 1.0
+    for a, b in zip(r_plain, r_mesh):
+        assert a.output_tokens == b.output_tokens, f"req {a.rid} diverged"
+        assert a.t_finish == pytest.approx(b.t_finish)
+
+    # steady state: a second cluster over the same factory re-uses every
+    # executable (mesh fingerprints match — the 1-device ring wraps)
+    m_warm = PDCluster(_cluster_cfg(
+        pred, backend_factory=mesh_factory)).run(_workload(rc))
+    assert m_warm.recompiles == 0
+
+
+# ---------------------------------------------------------------------------
+# Multi-device lane: sharded-vs-single-device forward parity
+# ---------------------------------------------------------------------------
+def _tp_values():
+    return [tp for tp in (2, 4) if tp <= NDEV]
+
+
+def _mesh_and_policy(tp):
+    mesh = MeshSlicer().slice(tp)
+    return mesh, SH.default_policy(mesh)
+
+
+# sharded reductions reassociate float sums; float32 on CPU keeps the
+# drift tiny but nonzero
+TOL = dict(rtol=2e-4, atol=2e-5)
+
+
+@multidevice
+@pytest.mark.parametrize("tp", _tp_values())
+def test_dense_forward_parity(rc, rparams, tp):
+    """prefill + decode on the dense ring cache: sharded logits match
+    the single-device reference within float tolerance."""
+    mesh, pol = _mesh_and_policy(tp)
+    toks = np.zeros((2, 32), np.int32)
+    rng = np.random.default_rng(7)
+    toks[0, :24] = rng.integers(1, rc.vocab_size, 24)
+    toks[1, :32] = rng.integers(1, rc.vocab_size, 32)
+    lens = np.array([24, 32], np.int32)
+
+    ref_logits, ref_cache = M.prefill(
+        rparams, rc, jnp.asarray(toks), jnp.asarray(lens), max_len=64
+    )
+    p_sh, _, _ = SH.place_serving_state(rc, rparams, [], mesh, pol)
+    pre = jitcache.shared_jit(M.prefill, rc, mesh=mesh, policy=pol,
+                              max_len=64)
+    sh_logits, sh_cache = pre(
+        p_sh, tokens=jnp.asarray(toks), lengths=jnp.asarray(lens)
+    )
+    np.testing.assert_allclose(
+        np.asarray(sh_logits), np.asarray(ref_logits), **TOL
+    )
+
+    dec = jitcache.shared_jit(M.decode_step, rc, mesh=mesh, policy=pol)
+    nxt = np.array([5, 9], np.int32)
+    pos = lens.copy()
+    for _ in range(3):
+        ref_logits, ref_cache = M.decode_step(
+            rparams, rc, jnp.asarray(nxt), ref_cache, jnp.asarray(pos)
+        )
+        sh_logits, sh_cache = dec(
+            p_sh, tokens=jnp.asarray(nxt), cache=sh_cache,
+            lengths=jnp.asarray(pos),
+        )
+        np.testing.assert_allclose(
+            np.asarray(sh_logits), np.asarray(ref_logits), **TOL
+        )
+        nxt = np.asarray(np.argmax(ref_logits, -1), np.int32)
+        pos += 1
+
+
+@multidevice
+@pytest.mark.parametrize("tp", _tp_values())
+def test_paged_forward_parity_page_boundaries(rc, rparams, tp):
+    """prefill_paged / decode_step_paged / verify_step_paged over a
+    sharded page pool, with one sequence exactly page-aligned (len % ps
+    == 0) and one a token past the boundary (len % ps == 1)."""
+    mesh, pol = _mesh_and_policy(tp)
+    ps, pool_pages, Pmax = 16, 12, 4
+    lens = np.array([16, 17], np.int32)  # page-exact and boundary+1
+    toks = np.zeros((2, 32), np.int32)
+    rng = np.random.default_rng(11)
+    for i, L in enumerate(lens):
+        toks[i, :L] = rng.integers(1, rc.vocab_size, L)
+    # enough pages per sequence to cover prefill + decode + verify
+    bt = np.full((2, Pmax), -1, np.int32)
+    bt[0, :3] = [0, 2, 4]
+    bt[1, :3] = [1, 3, 5]
+
+    ref_cache = M.init_paged_cache(rc, pool_pages, ps)
+    sh_params, (sh_cache,), _ = SH.place_serving_state(
+        rc, rparams, [M.init_paged_cache(rc, pool_pages, ps)], mesh, pol
+    )
+    kw = dict(
+        tokens=jnp.asarray(toks),
+        lengths=jnp.asarray(lens),
+        ctx_lens=jnp.zeros(2, jnp.int32),
+        block_tables=jnp.asarray(bt),
+    )
+    ref_logits, ref_cache = M.prefill_paged(
+        rparams, rc, cache=ref_cache, **kw
+    )
+    pre = jitcache.shared_jit(M.prefill_paged, rc, mesh=mesh, policy=pol)
+    sh_logits, sh_cache = pre(sh_params, cache=sh_cache, **kw)
+    np.testing.assert_allclose(
+        np.asarray(sh_logits), np.asarray(ref_logits), **TOL
+    )
+
+    dec = jitcache.shared_jit(M.decode_step_paged, rc, mesh=mesh,
+                              policy=pol)
+    nxt = np.array([3, 8], np.int32)
+    pos = lens.copy()
+    for _ in range(2):  # second step crosses seq0's page boundary
+        ref_logits, ref_cache = M.decode_step_paged(
+            rparams, rc, jnp.asarray(nxt), ref_cache, jnp.asarray(pos),
+            jnp.asarray(bt),
+        )
+        sh_logits, sh_cache = dec(
+            sh_params, tokens=jnp.asarray(nxt), cache=sh_cache,
+            lengths=jnp.asarray(pos), block_tables=jnp.asarray(bt),
+        )
+        np.testing.assert_allclose(
+            np.asarray(sh_logits), np.asarray(ref_logits), **TOL
+        )
+        nxt = np.asarray(np.argmax(ref_logits, -1), np.int32)
+        pos += 1
+
+    # multi-token verify window (spec decode's target-side forward)
+    vtoks = np.stack([nxt, nxt + 1, nxt + 2], axis=1).astype(np.int32) \
+        % rc.vocab_size
+    ref_logits, _ = M.verify_step_paged(
+        rparams, rc, jnp.asarray(vtoks), ref_cache, jnp.asarray(pos),
+        jnp.asarray(bt),
+    )
+    ver = jitcache.shared_jit(M.verify_step_paged, rc, mesh=mesh,
+                              policy=pol)
+    sh_logits, _ = ver(
+        sh_params, tokens=jnp.asarray(vtoks), cache=sh_cache,
+        lengths=jnp.asarray(pos), block_tables=jnp.asarray(bt),
+    )
+    np.testing.assert_allclose(
+        np.asarray(sh_logits), np.asarray(ref_logits), **TOL
+    )
+
+
+@multidevice
+def test_moe_expert_parallel_forward_parity(moe_rc, moe_params):
+    """MoE config at tp=2: experts ride the "model" axis (EP) via the
+    mesh-context sharding constraint; logits must still match the
+    single-device reference."""
+    mesh, pol = _mesh_and_policy(2)
+    toks = np.zeros((1, 16), np.int32)
+    toks[0, :12] = np.random.default_rng(3).integers(
+        1, moe_rc.vocab_size, 12
+    )
+    lens = np.array([12], np.int32)
+    ref_logits, _ = M.prefill(
+        moe_params, moe_rc, jnp.asarray(toks), jnp.asarray(lens),
+        max_len=32,
+    )
+    p_sh, _, _ = SH.place_serving_state(moe_rc, moe_params, [], mesh, pol)
+    pre = jitcache.shared_jit(M.prefill, moe_rc, mesh=mesh, policy=pol,
+                              max_len=32)
+    sh_logits, _ = pre(
+        p_sh, tokens=jnp.asarray(toks), lengths=jnp.asarray(lens)
+    )
+    np.testing.assert_allclose(
+        np.asarray(sh_logits), np.asarray(ref_logits), **TOL
+    )
+
+
+@multidevice
+def test_sharded_backend_pool_drains(rc, rparams):
+    """Prefill → insert (P→D per-shard handoff) → decode → release on a
+    tp=2 backend: the host-side page pool must drain empty — page
+    arithmetic is shard-agnostic, refcounts cannot depend on layout."""
+    hw = HardwareModel(MODEL, A100)
+    mesh = MeshSlicer().slice(2)
+    be = RealBackend(
+        hw, rc, rparams, slots=2, max_len=64, paged=True, page_size=16,
+        mesh=mesh,
+    )
+    reqs = [
+        Request(i, 0.0, prompt_len=17, decode_len=3,
+                prompt_tokens=list((np.arange(17) + i) % rc.vocab_size))
+        for i in range(2)
+    ]
+    be.prefill_iter(reqs, 34, 1410.0)
+    for r in reqs:
+        be.insert(r)
+    be.decode_iter(reqs, 2, 40, 1410.0)
+    be.decode_iter(reqs, 2, 42, 1410.0)
+    for r in reqs:
+        be.release(r)
+    be.flush()
+    for r in reqs:
+        assert len(r.output_tokens) == 3  # first token + 2 decode steps
+    be.pool.assert_empty()
+
+
+@multidevice
+def test_sharded_moe_cluster_end_to_end(moe_rc, moe_params):
+    """Acceptance scenario: a qwen3-moe-class config executes a real
+    sharded prefill → decode iteration on a forced host mesh (tp=2),
+    end to end through the cluster control plane."""
+    pred = build_predictor(
+        MOE_MODEL, A100, A100.freq_levels_2, kv_cap=400_000
+    )
+    tiny = DatasetDist(
+        "tiny",
+        prefill=LengthDist(24.0, 10.0, hi=60),
+        decode=LengthDist(6.0, 3.0, hi=12),
+    )
+    reqs = attach_tokens(
+        poisson_workload(tiny, 2.5, 5.0, seed=21), moe_rc.vocab_size,
+        seed=22,
+    )
+    cl = PDCluster(ClusterConfig(
+        model=MOE_MODEL, chip=A100, n_prefill=1, n_decode=1,
+        policy="voltana", predictor=pred, kv_capacity_tokens=400_000,
+        online_adapt=False, decode_max_running=8, seed=4,
+        noise_sigma=0.0, prefill_chunk_tokens=32, paged=True,
+        kv_page_size=16, tp=2,
+        backend_factory=make_real_backend_factory(
+            moe_rc, moe_params, slots=8, max_len=128, paged=True,
+            page_size=16, tp=2,
+        ),
+    ))
+    m = cl.run(reqs)
+    assert m.finished_frac() == 1.0
+    for r in reqs:
+        assert len(r.output_tokens) == r.decode_len + 1
+    # every decode instance really ran on a 2-wide "model" axis
+    for e in cl.decode:
+        assert e.backend.mesh is not None
+        assert dict(zip(
+            e.backend.mesh.axis_names, e.backend.mesh.devices.shape
+        ))["model"] == 2
+        e.backend.pool.assert_empty()

@@ -215,8 +215,16 @@ def test_paged_prefill_resumes_from_resident_prefix():
 
 
 def test_paged_cache_rejects_unsupported_configs():
-    with pytest.raises(AssertionError, match="Mamba"):
+    # real exceptions, not asserts: the rejection must survive python -O
+    with pytest.raises(ValueError, match="Mamba"):
         M.init_paged_cache(REGISTRY["jamba-v0.1-52b"].reduced(), 8, 8)
+    import dataclasses
+
+    int8_kv = dataclasses.replace(
+        REGISTRY["llama-3.1-8b"].reduced(), kv_dtype="int8"
+    )
+    with pytest.raises(ValueError, match="int8"):
+        M.init_paged_cache(int8_kv, 8, 8)
 
 
 def test_ragged_prefill_respects_lengths():

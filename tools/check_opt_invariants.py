@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""Prove the serving-state invariants survive ``python -O``.
+
+Bare ``assert`` statements vanish under ``PYTHONOPTIMIZE=1`` — and so
+does pytest's assertion rewriting, which means a *pytest* suite cannot
+demonstrate the production failure mode.  This standalone script runs
+the paths that used to be assert-guarded (page-pool refcounting, block
+tables, paged-config validation) and exits non-zero unless every one of
+them raises its real exception.  CI runs it as
+``PYTHONOPTIMIZE=1 python tools/check_opt_invariants.py``.
+"""
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(__file__), os.pardir, "src")
+)
+
+FAILURES = []
+
+
+def expect(label, fn, exc, needle=""):
+    try:
+        fn()
+    except exc as e:
+        if needle and needle not in str(e):
+            FAILURES.append(
+                f"{label}: raised {exc.__name__} but message {e!r} "
+                f"lacks {needle!r}"
+            )
+        return
+    except AssertionError:
+        FAILURES.append(
+            f"{label}: raised AssertionError — a bare assert is "
+            "guarding production state (vanishes under -O)"
+        )
+        return
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        FAILURES.append(
+            f"{label}: raised {type(e).__name__} ({e}), "
+            f"expected {exc.__name__}"
+        )
+        return
+    FAILURES.append(f"{label}: did not raise (expected {exc.__name__})")
+
+
+def main() -> int:
+    from repro.serving.kvpool import (
+        BlockTable,
+        KVPool,
+        PageAllocError,
+        PageStateError,
+    )
+
+    # --- pool refcount corruption must raise PageStateError -----------
+    pool = KVPool(8, 4)
+    pages = pool.alloc(2)
+    pool.decref(pages)
+    expect("double free", lambda: pool.decref(pages), PageStateError,
+           "double free")
+    expect("incref of free page", lambda: pool.incref(pages),
+           PageStateError, "free page")
+    expect("cow of free page", lambda: pool.cow(pages[0]),
+           PageStateError, "cow")
+    expect("foreign page id", lambda: pool.decref([99]), PageStateError,
+           "foreign")
+    expect("negative alloc", lambda: pool.alloc(-1), ValueError)
+    expect("zero-page pool", lambda: KVPool(0, 4), ValueError)
+
+    # --- capacity exhaustion stays PageAllocError ---------------------
+    expect("pool exhaustion", lambda: pool.alloc(9), PageAllocError)
+
+    # --- leak detection must raise, not assert ------------------------
+    leaky = KVPool(4, 4)
+    leaky.alloc(1)
+    expect("leak check", leaky.assert_empty, PageStateError)
+
+    # --- block-table misuse -------------------------------------------
+    t = BlockTable(pool)
+    t.ensure(5)
+    extra = pool.alloc(1)
+    expect("adopt into non-empty table",
+           lambda: t.adopt(extra, 4), PageStateError)
+    expect("shrink cannot grow", lambda: t.shrink(99), PageStateError)
+    pool.decref(extra)
+    t.release()
+    pool.assert_empty()
+
+    # --- paged-config validation (model + cluster layers) -------------
+    import dataclasses
+
+    from repro.configs.registry import REGISTRY
+    from repro.core.power import A100
+    from repro.models.model import _check_paged
+    from repro.serving.cluster import ClusterConfig
+
+    int8_model = dataclasses.replace(
+        REGISTRY["llama-3.1-8b"], kv_dtype="int8"
+    )
+    expect("int8 paged cache (model layer)",
+           lambda: _check_paged(int8_model.reduced()), ValueError, "int8")
+    expect("mamba paged cache (model layer)",
+           lambda: _check_paged(REGISTRY["jamba-v0.1-52b"].reduced()),
+           ValueError, "Mamba")
+    expect("int8 paged cluster config",
+           lambda: ClusterConfig(model=int8_model, chip=A100, paged=True),
+           ValueError, "int8")
+    expect("non-positive tp",
+           lambda: ClusterConfig(
+               model=REGISTRY["llama-3.1-8b"], chip=A100, tp=0
+           ),
+           ValueError, "tp")
+
+    mode = "-O (asserts stripped)" if not __debug__ else "debug"
+    if FAILURES:
+        print(f"check_opt_invariants [{mode}]: FAIL")
+        for f in FAILURES:
+            print(f"  - {f}")
+        return 1
+    print(f"check_opt_invariants [{mode}]: all invariants held")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,106 @@
+"""Trace-replay scenario matrix + open-loop QPS sweeps with knee detection.
+
+Two halves, both riding the scenario registry
+(:mod:`repro.serving.scenarios`):
+
+* **Conformance matrix** — every registered scenario replayed through
+  the reference 2P2D cluster at pin scale (smoke, seed 0) and checked
+  against its committed golden pins.  A mismatch fails the module (and
+  with it ``--smoke``): the control plane changed behaviour on a
+  production arrival shape.
+* **Open-loop QPS sweeps** — each scenario with ``sweep_rates`` is
+  clock-warped across its rate grid (length marginals untouched) and
+  served by a deliberately small 1P1D fleet so the swept range actually
+  crosses saturation; :func:`repro.serving.loadgen.qps_sweep` reports
+  latency/attainment per rate plus the detected saturation knee.
+
+Besides the usual CSV, writes ``results/fig_traces_replay.json`` — the
+machine-readable payload ``benchmarks/run.py --smoke`` embeds as the
+``trace_replay`` section of ``BENCH_serving.json`` (gated against
+``BENCH_baseline.json`` by ``tools/bench_gate.py``).
+
+    PYTHONPATH=src python -m benchmarks.run fig_traces_replay
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, write_csv
+from repro.serving import PDCluster, qps_sweep, rescale_to_rps
+from repro.serving.scenarios import (
+    SCENARIOS,
+    build_cluster_config,
+    check_pins,
+    run_scenario,
+    scenario_summary,
+)
+
+# sweeps run on a deliberately tiny fleet so the (small) rate grids
+# actually cross the saturation knee inside CI time
+SWEEP_FLEET = {"n_prefill": 1, "n_decode": 1}
+
+
+def _sweep(sc, bank, smoke):
+    trace = sc.build(0, smoke)
+
+    def make_requests(rps):
+        return rescale_to_rps(trace, rps).to_requests(tokens=sc.tokens)
+
+    def run_cluster(reqs):
+        cfg = build_cluster_config(sc, predictor_bank=bank, **SWEEP_FLEET)
+        m = PDCluster(cfg).run(reqs)
+        return m
+
+    return qps_sweep(make_requests, run_cluster, sc.sweep_rates)
+
+
+def run(out_dir=None):
+    smoke = os.environ.get("BENCH_SMOKE") == "1"
+    bank: dict = {}
+    rows = []
+    payload = {"schema": 1, "scenarios": {}, "sweeps": {}}
+    mismatches = []
+
+    # -- conformance matrix (always at pin scale: smoke, seed 0) ------
+    for name, sc in SCENARIOS.items():
+        m, _, reqs = run_scenario(name, smoke=True, predictor_bank=bank)
+        summary = scenario_summary(m)
+        bad = check_pins(sc, summary)
+        mismatches += bad
+        payload["scenarios"][name] = {**summary, "pin_ok": not bad}
+        rows.append({
+            "kind": "scenario", "scenario": name, "rps": "",
+            "n_requests": len(reqs), "pin_ok": int(not bad), **summary,
+        })
+        print(f"  {name:20s} {'ok  ' if not bad else 'PIN '}"
+              f"energy/token {summary['energy_per_token_mj']:8.1f} mJ  "
+              f"ttft {summary['ttft_attain']:.3f}  "
+              f"itl {summary['itl_attain']:.3f}")
+
+    # -- open-loop QPS sweeps + saturation knees ----------------------
+    for name, sc in SCENARIOS.items():
+        if not sc.sweep_rates:
+            continue
+        sweep = _sweep(sc, bank, smoke)
+        payload["sweeps"][name] = sweep
+        for r in sweep["rows"]:
+            rows.append({"kind": "sweep", "scenario": name,
+                         "pin_ok": "", **r})
+        print(f"  {name:20s} sweep {sc.sweep_rates[0]:g}-"
+              f"{sc.sweep_rates[-1]:g} rps: "
+              f"knee {sweep['knee_rps']} rps "
+              f"({sweep['knee_metric']}), attainment knee "
+              f"{sweep['attainment_knee_rps']} rps")
+
+    write_csv("fig_traces_replay", rows, out_dir)
+    path = os.path.join(out_dir or RESULTS_DIR, "fig_traces_replay.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    if mismatches:
+        raise RuntimeError(
+            "golden-pin drift:\n" + "\n".join(mismatches)
+        )
+    return rows

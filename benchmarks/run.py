@@ -45,6 +45,7 @@ MODULES = [
     ("fig_prefix_cache", "Chunked prefill + radix prefix cache (multi-turn)"),
     ("fig_slo_tiers", "Multi-tenant SLO tiers vs single-tier baseline"),
     ("fig_specdec", "Speculative draft-verify decode vs single-token"),
+    ("fig_traces_replay", "Scenario matrix replay + open-loop QPS knees"),
     ("roofline", "§Roofline table from dry-run records"),
     ("perf_iterations", "§Perf    hillclimb log from perf records"),
 ]
@@ -56,7 +57,8 @@ QUICK = {"fig1_5_ucurve", "fig4_itl_sensitivity", "fig6_staircase",
 # prefix-cache + SLO-tier scenarios (all read BENCH_SMOKE=1 and shrink
 # their traces)
 SMOKE = {"fig1_5_ucurve", "fig6_staircase", "fig_hetero_autoscale",
-         "fig_prefix_cache", "fig_slo_tiers", "fig_specdec"}
+         "fig_prefix_cache", "fig_slo_tiers", "fig_specdec",
+         "fig_traces_replay"}
 
 
 def _write_bench_serving(module_status: dict) -> str:
@@ -91,6 +93,12 @@ def _write_bench_serving(module_status: dict) -> str:
         ).get("breakdown"),
         "modules": module_status,
     }
+    replay_path = os.path.join(os.path.dirname(__file__), "results",
+                               "fig_traces_replay.json")
+    if os.path.exists(replay_path):  # scenario matrix + open-loop QPS
+        # knees (written by fig_traces_replay earlier in this smoke run)
+        with open(replay_path) as f:
+            payload["trace_replay"] = json.load(f)
     base_path = os.path.join(os.path.dirname(__file__),
                              "BENCH_baseline.json")
     if os.path.exists(base_path):  # embed the committed pre-PR rows so

@@ -3,6 +3,16 @@
     PYTHONPATH=src python -m repro.launch.serve --arch llama-3.1-8b \
         --dataset sharegpt --rps 8 --duration 60 --policy voltana
 
+Workload sources (mutually exclusive):
+
+* ``--dataset NAME`` — Poisson arrivals over a registered length
+  distribution (every ``repro.serving.workload.DATASETS`` entry, plus
+  the ``azure`` diurnal-mix and ``pd-ratio`` oscillation generators);
+* ``--scenario NAME`` — a named scenario from the registry
+  (``repro.serving.scenarios.SCENARIOS``), replayed at pin scale;
+* ``--trace PATH`` — replay a trace file (canonical / Azure / BurstGPT
+  schemas auto-detected); ``--rps`` rescales its arrival rate.
+
 Policies: voltana (EcoFreq+EcoPred+EcoRoute) | ecofreq-only |
 static (--static-freq MHz) | powercap (--cap-w W).
 """
@@ -14,7 +24,35 @@ import json
 from repro.configs.registry import REGISTRY
 from repro.core.power import CHIPS
 from repro.serving import ClusterConfig, PDCluster, poisson_workload
+from repro.serving.traces import load_trace, rescale_to_rps
 from repro.serving.workload import DATASETS, azure_like, synthetic_pd_ratio
+
+# generator-backed pseudo-datasets (not simple length distributions)
+GENERATORS = {
+    "azure": azure_like,  # alias: the two azure classes on a diurnal mix
+    "pd-ratio": synthetic_pd_ratio,
+}
+
+
+def build_workload(args):
+    if args.trace is not None:
+        trace = load_trace(args.trace)
+        if args.rps is not None:
+            trace = rescale_to_rps(trace, args.rps)
+        return trace.to_requests(seed=args.seed)
+    if args.scenario is not None:
+        from repro.serving.scenarios import scenario_requests, SCENARIOS
+        return scenario_requests(
+            SCENARIOS[args.scenario], seed=args.seed, smoke=False
+        )
+    rps = 8.0 if args.rps is None else args.rps
+    if args.dataset in GENERATORS:
+        return GENERATORS[args.dataset](
+            rps, args.duration, seed=args.seed
+        )
+    return poisson_workload(
+        DATASETS[args.dataset], rps, args.duration, seed=args.seed
+    )
 
 
 def main():
@@ -22,8 +60,16 @@ def main():
     ap.add_argument("--arch", default="llama-3.1-8b")
     ap.add_argument("--chip", default="a100-80g-sxm", choices=sorted(CHIPS))
     ap.add_argument("--dataset", default="sharegpt",
-                    choices=[*DATASETS, "azure", "pd-ratio"])
-    ap.add_argument("--rps", type=float, default=8.0)
+                    choices=sorted([*DATASETS, *GENERATORS]))
+    ap.add_argument("--scenario", default=None,
+                    help="replay a named registry scenario instead of "
+                         "--dataset (see repro.serving.scenarios)")
+    ap.add_argument("--trace", default=None,
+                    help="replay a trace file (canonical/Azure/BurstGPT "
+                         "CSV schema, auto-detected)")
+    ap.add_argument("--rps", type=float, default=None,
+                    help="offered rate (default 8); with --trace, "
+                         "rescales the trace clock to this rate")
     ap.add_argument("--duration", type=float, default=60.0)
     ap.add_argument("--policy", default="voltana",
                     choices=["voltana", "ecofreq-only", "static", "powercap"])
@@ -39,16 +85,12 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.scenario is not None and args.trace is not None:
+        ap.error("--scenario and --trace are mutually exclusive")
+
     chip = CHIPS[args.chip]
     model = REGISTRY[args.arch]
-    if args.dataset == "azure":
-        reqs = azure_like(args.rps, args.duration, seed=args.seed)
-    elif args.dataset == "pd-ratio":
-        reqs = synthetic_pd_ratio(args.rps, args.duration, seed=args.seed)
-    else:
-        reqs = poisson_workload(
-            DATASETS[args.dataset], args.rps, args.duration, seed=args.seed
-        )
+    reqs = build_workload(args)
     cfg = ClusterConfig(
         model=model,
         chip=chip,

@@ -31,6 +31,8 @@ from repro.serving.request import (  # noqa: F401
     UNTIERED,
 )
 from repro.serving.workload import (  # noqa: F401
+    AZURE_CODE,
+    AZURE_CONV,
     DATASETS,
     LMSYS,
     SHAREGPT,
@@ -44,4 +46,34 @@ from repro.serving.workload import (  # noqa: F401
     step_load,
     synthetic_pd_ratio,
     tiered_workload,
+)
+from repro.serving.traces import (  # noqa: F401
+    AgenticSegment,
+    DiurnalSegment,
+    FlashCrowdSegment,
+    TieredSegment,
+    Trace,
+    TraceRecord,
+    load_azure_trace,
+    load_burstgpt_trace,
+    load_trace,
+    rescale,
+    rescale_to_rps,
+    resample,
+    synthetic_trace,
+    tile,
+    trace_from_requests,
+)
+from repro.serving.loadgen import (  # noqa: F401
+    FIFOServer,
+    LoadPoint,
+    OpenLoopDriver,
+    attainment_knee,
+    detect_knee,
+    qps_sweep,
+)
+from repro.serving.scenarios import (  # noqa: F401
+    SCENARIOS,
+    Scenario,
+    run_scenario,
 )

@@ -75,7 +75,12 @@ AZURE_CODE = DatasetDist(
     decode=LengthDist(28.0, 60.0),
 )
 
-DATASETS = {"sharegpt": SHAREGPT, "lmsys": LMSYS}
+# every DatasetDist registered under its own name — launch/serve.py and
+# the benchmarks route --dataset through this one table (the azure
+# classes used to be reachable only via the azure_like generator)
+DATASETS = {
+    d.name: d for d in (SHAREGPT, LMSYS, AZURE_CONV, AZURE_CODE)
+}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,95 @@
+"""Shared serving-invariant probes (used by ``test_invariants.py`` and
+the scenario conformance matrix in ``test_scenarios.py``).
+
+* :class:`TallyBackend` — a SimBackend that independently tallies every
+  IterCost it hands out, so energy conservation can be checked against
+  the control plane's books.
+* :class:`ProbeCluster` — asserts no event is ever scheduled before the
+  current virtual clock.
+* :func:`assert_invariants` — the PR-2 invariant triple (energy
+  conservation, clock monotonicity / lifecycle ordering, no *admitted*
+  request lost or duplicated) over a finished run.  Shed requests are
+  legitimately unserved; everything admitted must finish exactly once
+  with exactly its decode-length tokens.
+"""
+import pytest
+
+from repro.serving import PDCluster, SimBackend
+
+
+class TallyBackend(SimBackend):
+    """SimBackend that independently tallies every IterCost it hands out."""
+
+    def __init__(self, *a, **k):
+        super().__init__(*a, **k)
+        self.energy_sum = 0.0
+        self.time_sum = 0.0
+
+    def _tally(self, c):
+        self.energy_sum += c.energy_j
+        self.time_sum += c.time_s
+        return c
+
+    def prefill_iter(self, *a, **k):
+        return self._tally(super().prefill_iter(*a, **k))
+
+    def prefill_chunk(self, *a, **k):
+        return self._tally(super().prefill_chunk(*a, **k))
+
+    def decode_iter(self, *a, **k):
+        return self._tally(super().decode_iter(*a, **k))
+
+    def spec_decode_iter(self, *a, **k):
+        return self._tally(super().spec_decode_iter(*a, **k))
+
+    def hybrid_iter(self, *a, **k):
+        return self._tally(super().hybrid_iter(*a, **k))
+
+
+class ProbeCluster(PDCluster):
+    """Asserts no event is scheduled before the current virtual clock."""
+
+    def _push(self, t, kind, data):
+        assert t >= self.now - 1e-9, (
+            f"event kind={kind} scheduled in the past: {t} < {self.now}"
+        )
+        super()._push(t, kind, data)
+
+
+def assert_invariants(cluster, metrics, requests, backends=None):
+    """The invariant triple over a finished run (see module docstring).
+
+    ``backends`` is the list of TallyBackends the run's factory handed
+    out (energy conservation is skipped when omitted)."""
+    admitted = [r for r in requests if r.admitted]
+
+    # -- no admitted request lost or duplicated -------------------------
+    assert metrics.finished_frac() == 1.0
+    assert len({r.rid for r in requests}) == len(requests)
+    for r in admitted:
+        assert r.tokens_out == r.decode_len, r
+        assert r.prefill_remaining == 0
+
+    # -- virtual-clock monotonicity (lifecycle ordering) ----------------
+    for r in admitted:
+        assert r.arrival_s <= r.t_prefill_start <= r.t_first_token, r
+        assert r.t_first_token <= r.t_join_decode <= r.t_finish, r
+        assert r.t_finish <= metrics.duration_s + 1e-9
+    # (ProbeCluster additionally asserted every event push was >= now)
+
+    # -- energy conservation --------------------------------------------
+    engines = cluster.prefill + cluster.decode + cluster.hybrid
+    if backends is not None:
+        assert len(backends) == len(engines)
+    for eng in engines:
+        if backends is not None:
+            tallied = eng.backend.energy_sum
+            assert eng.energy.busy_j == pytest.approx(tallied, rel=1e-9), (
+                f"{eng.energy.name}: busy_j {eng.energy.busy_j} != "
+                f"backend-tallied {tallied}"
+            )
+            assert eng.energy.busy_s == pytest.approx(
+                eng.backend.time_sum, rel=1e-9
+            )
+        # idle accounting can never go negative (parks included)
+        assert eng.energy.idle_j >= -1e-9

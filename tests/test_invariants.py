@@ -16,6 +16,7 @@ same scenarios otherwise, so the suite never silently thins out):
 """
 import pytest
 from _hyp import given, settings, st
+from _serving_checks import ProbeCluster, TallyBackend, assert_invariants
 
 from repro.configs.registry import REGISTRY
 from repro.core.power import A100
@@ -24,7 +25,6 @@ from repro.serving import (
     ClusterConfig,
     PDCluster,
     SHAREGPT,
-    SimBackend,
     multiturn_workload,
     poisson_workload,
 )
@@ -42,42 +42,6 @@ def _pred():
             MODEL, A100, A100.freq_levels_2, kv_cap=400_000
         )
     return _PRED
-
-
-class TallyBackend(SimBackend):
-    """SimBackend that independently tallies every IterCost it hands out."""
-
-    def __init__(self, *a, **k):
-        super().__init__(*a, **k)
-        self.energy_sum = 0.0
-        self.time_sum = 0.0
-
-    def _tally(self, c):
-        self.energy_sum += c.energy_j
-        self.time_sum += c.time_s
-        return c
-
-    def prefill_iter(self, *a, **k):
-        return self._tally(super().prefill_iter(*a, **k))
-
-    def prefill_chunk(self, *a, **k):
-        return self._tally(super().prefill_chunk(*a, **k))
-
-    def decode_iter(self, *a, **k):
-        return self._tally(super().decode_iter(*a, **k))
-
-    def hybrid_iter(self, *a, **k):
-        return self._tally(super().hybrid_iter(*a, **k))
-
-
-class ProbeCluster(PDCluster):
-    """Asserts no event is scheduled before the current virtual clock."""
-
-    def _push(self, t, kind, data):
-        assert t >= self.now - 1e-9, (
-            f"event kind={kind} scheduled in the past: {t} < {self.now}"
-        )
-        super()._push(t, kind, data)
 
 
 def _check_invariants(
@@ -119,35 +83,7 @@ def _check_invariants(
     if inject_fault and n_p >= 2:
         cl.schedule_failure(4.0, "prefill", 0)
     m = cl.run(reqs)
-
-    # -- no request lost or duplicated ----------------------------------
-    assert m.finished_frac() == 1.0
-    assert len({r.rid for r in reqs}) == len(reqs)
-    for r in reqs:
-        assert r.tokens_out == r.decode_len, r
-        assert r.prefill_remaining == 0
-
-    # -- virtual-clock monotonicity (lifecycle ordering) ----------------
-    for r in reqs:
-        assert r.arrival_s <= r.t_prefill_start <= r.t_first_token, r
-        assert r.t_first_token <= r.t_join_decode <= r.t_finish, r
-        assert r.t_finish <= m.duration_s + 1e-9
-    # (ProbeCluster additionally asserted every event push was >= now)
-
-    # -- energy conservation --------------------------------------------
-    engines = cl.prefill + cl.decode + cl.hybrid
-    assert len(backends) == len(engines)
-    for eng in engines:
-        tallied = eng.backend.energy_sum
-        assert eng.energy.busy_j == pytest.approx(tallied, rel=1e-9), (
-            f"{eng.energy.name}: busy_j {eng.energy.busy_j} != "
-            f"backend-tallied {tallied}"
-        )
-        assert eng.energy.busy_s == pytest.approx(
-            eng.backend.time_sum, rel=1e-9
-        )
-        # idle accounting can never go negative (parks included)
-        assert eng.energy.idle_j >= -1e-9
+    assert_invariants(cl, m, reqs, backends=backends)
     return m
 
 

@@ -1,0 +1,154 @@
+"""Open-loop load-driver regressions: coordinated omission + knees.
+
+The load harness exists to measure saturation honestly; these tests pin
+the two ways that goes wrong:
+
+* **Coordinated omission** — a deliberately stalled backend must not
+  delay subsequent *arrivals*.  The open-loop driver fires every
+  arrival on the trace clock (fire lag identically zero) and the stall
+  shows up as queueing latency; the closed-loop foil silently throttles
+  its own load and reports near-zero latency for the same scenario.
+  The sim cluster itself is checked too: arrival injection times are
+  the trace times even when every instance is saturated.
+* **Knee detection** — the detected knee tracks true capacity
+  monotonically on crafted M/D/1 curves, stays silent on flat curves,
+  and the attainment knee finds the last rate holding the floor.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.registry import REGISTRY
+from repro.core.power import A100
+from repro.serving import (
+    ClusterConfig,
+    FIFOServer,
+    OpenLoopDriver,
+    PDCluster,
+    SHAREGPT,
+    attainment_knee,
+    detect_knee,
+    poisson_workload,
+)
+from repro.serving.cluster import build_predictor
+
+
+def _arrivals(rps=10.0, n=50):
+    return [i / rps for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Coordinated omission
+# ---------------------------------------------------------------------------
+
+
+def test_stall_does_not_delay_open_loop_arrivals():
+    """The guard the harness exists for: with the server stalled for
+    the first 3 s, open-loop fire times stay on the trace clock and the
+    stall surfaces as latency."""
+    arrivals = _arrivals(rps=10.0, n=40)
+    pts = OpenLoopDriver(open_loop=True).run(
+        arrivals, FIFOServer(service_s=0.05, stall_until_s=3.0)
+    )
+    assert all(p.fire_lag_s == 0.0 for p in pts)
+    # every request scheduled during the stall eats the remaining stall
+    # in its measured latency — nothing is hidden
+    lat = [p.latency_s for p in pts]
+    assert lat[0] == pytest.approx(3.0 + 0.05)
+    assert max(lat) > 1.0
+
+
+def test_closed_loop_foil_hides_the_stall():
+    """Same scenario through the deliberately coordinated driver: fire
+    times drift behind the trace clock and the measured latencies
+    collapse — the omission the open-loop driver prevents."""
+    arrivals = _arrivals(rps=10.0, n=40)
+    open_pts = OpenLoopDriver(open_loop=True).run(
+        arrivals, FIFOServer(service_s=0.05, stall_until_s=3.0)
+    )
+    closed_pts = OpenLoopDriver(open_loop=False).run(
+        arrivals, FIFOServer(service_s=0.05, stall_until_s=3.0)
+    )
+    assert max(p.fire_lag_s for p in closed_pts) > 1.0  # load throttled
+    # latency measured from *scheduled* time agrees; measured from
+    # *fired* time (the classic closed-loop mistake) it vanishes
+    fired_lat = [p.done_s - p.fired_s for p in closed_pts[1:]]
+    assert max(fired_lat) == pytest.approx(0.05)
+    assert np.mean([p.latency_s for p in open_pts]) > 1.0
+
+
+def test_sim_cluster_is_open_loop():
+    """PDCluster injects arrivals at trace times even when saturated:
+    offered load 4x a 1P1D fleet's capacity must not shift any
+    request's arrival_s (arrivals are heap events, never gated on
+    completions)."""
+    model = REGISTRY["llama-3.1-8b"]
+    pred = build_predictor(model, A100, A100.freq_levels_2,
+                           kv_cap=200_000)
+    reqs = poisson_workload(SHAREGPT, 60.0, 20.0, seed=0)
+    scheduled = [r.arrival_s for r in reqs]
+    cfg = ClusterConfig(
+        model=model, chip=A100, n_prefill=1, n_decode=1,
+        predictor=pred, kv_capacity_tokens=200_000,
+        online_adapt=False, seed=0,
+    )
+    m = PDCluster(cfg).run(reqs)
+    assert [r.arrival_s for r in reqs] == scheduled
+    # saturation is visible as queueing, not as missing load
+    assert m.finished_frac() == 1.0
+    assert float(np.quantile(m.ttft_values(), 0.99)) > 1.0
+
+
+def test_driver_validates_input():
+    with pytest.raises(ValueError, match="sorted"):
+        OpenLoopDriver().run([1.0, 0.5], FIFOServer(0.01))
+    with pytest.raises(ValueError, match="before"):
+        OpenLoopDriver().run([0.0], lambda rid, t: t - 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Knee detection
+# ---------------------------------------------------------------------------
+
+
+def _mdo_latency(rates, mu):
+    """Open-loop queueing-wait curve with capacity ``mu``: M/M/1-style
+    blow-up approaching mu, then linear backlog growth past it (an
+    open-loop queue keeps absorbing arrivals beyond capacity)."""
+    return [
+        1.0 / (mu - r + 0.5) if r < mu else 2.0 + (r - mu)
+        for r in rates
+    ]
+
+
+def test_knee_monotone_in_capacity():
+    """Crafted saturating curves: higher true capacity -> knee detected
+    at a higher (or equal) rate, strictly higher across the range."""
+    rates = [float(r) for r in range(2, 42, 2)]
+    knees = [
+        detect_knee(rates, _mdo_latency(rates, mu))
+        for mu in (5.0, 10.0, 20.0)
+    ]
+    assert all(k is not None for k in knees)
+    assert knees == sorted(knees)
+    assert knees[-1] > knees[0]
+
+
+def test_knee_none_on_flat_curve():
+    rates = [2.0, 4.0, 6.0, 8.0]
+    assert detect_knee(rates, [0.10, 0.11, 0.10, 0.105]) is None
+
+
+def test_knee_input_validation():
+    with pytest.raises(ValueError):
+        detect_knee([1.0, 2.0], [0.1, 0.2])  # too few points
+    with pytest.raises(ValueError):
+        detect_knee([1.0, 1.0, 2.0], [0.1, 0.2, 0.3])  # non-increasing
+
+
+def test_attainment_knee():
+    rates = [2.0, 4.0, 6.0, 8.0, 10.0]
+    assert attainment_knee(rates, [1.0, 0.99, 0.95, 0.6, 0.3]) == 6.0
+    # floor never lost inside the sweep: knee is beyond it
+    assert attainment_knee(rates, [1.0] * 5) is None
+    # floor never met at all
+    assert attainment_knee(rates, [0.5] * 5) is None

@@ -317,3 +317,53 @@ def test_bench_gate_rebaseline_adopts_current_and_keeps_pre_pr():
     # regression from the *new* level now trips the gate
     fails, _ = G.gate(_serving(ips=1500.0), G.rebaseline(cur, _BASE))
     assert any("regressed" in f for f in fails)
+
+
+def _replay(energy=451.2, tokens=93081, pin_ok=True, knee=9.0, attain=15.0):
+    return {"trace_replay": {
+        "scenarios": {"flash-crowd": {
+            "energy_per_token_mj": energy, "output_tokens": tokens,
+            "pin_ok": pin_ok,
+        }},
+        "sweeps": {"flash-crowd": {
+            "knee_rps": knee, "attainment_knee_rps": attain,
+            "knee_metric": "ttft_p99_s", "slo_floor": 0.9,
+        }},
+    }}
+
+
+_REPLAY_BASE = {**_BASE, **_load_bench_gate().rebaseline(
+    {**_serving(), **_replay()}, _BASE)}
+
+
+def test_bench_gate_trace_replay_passes_and_catches_drift():
+    G = _load_bench_gate()
+    assert G.gate_trace_replay({**_serving(), **_replay()},
+                               _REPLAY_BASE)[0] == []
+    fails, _ = G.gate_trace_replay(
+        {**_serving(), **_replay(pin_ok=False)}, _REPLAY_BASE)
+    assert any("golden pins drifted" in f for f in fails)
+    fails, _ = G.gate_trace_replay(
+        {**_serving(), **_replay(tokens=93082)}, _REPLAY_BASE)
+    assert any("output_tokens" in f for f in fails)
+    fails, _ = G.gate_trace_replay(
+        {**_serving(), **_replay(knee=12.0)}, _REPLAY_BASE)
+    assert any("knee_rps" in f for f in fails)
+    # a sweep that stops detecting any knee is a failure, not a skip
+    fails, _ = G.gate_trace_replay(
+        {**_serving(), **_replay(knee=None)}, _REPLAY_BASE)
+    assert any("knee" in f for f in fails)
+
+
+def test_bench_gate_trace_replay_section_rules():
+    G = _load_bench_gate()
+    # baseline without the section: nothing to gate (pre-matrix repos)
+    assert G.gate_trace_replay({**_serving(), **_replay()}, _BASE) == ([], [])
+    # baseline *with* the section but current run missing it: fail —
+    # fig_traces_replay silently dropping out must not pass CI
+    fails, _ = G.gate_trace_replay(_serving(), _REPLAY_BASE)
+    assert any("missing" in f for f in fails)
+    # missing single scenario
+    cur = {**_serving(), "trace_replay": {"scenarios": {}, "sweeps": {}}}
+    fails, _ = G.gate_trace_replay(cur, _REPLAY_BASE)
+    assert any("scenario missing" in f for f in fails)

@@ -1,0 +1,105 @@
+"""Scenario conformance matrix: every registry scenario runs through
+the sim cluster under the serving-invariant harness with golden pins.
+
+For each named scenario in ``repro.serving.scenarios.SCENARIOS``:
+
+* the PR-2 invariant triple holds (energy conservation against
+  independently-tallied backend costs, virtual-clock monotonicity +
+  lifecycle ordering, no admitted request lost or duplicated);
+* the committed golden pins match (finished fraction exact, energy per
+  token / attainment / output tokens within their per-pin tolerances).
+
+A pin trip means the control plane changed behaviour on a production
+arrival shape — if intentional, re-capture with
+``PYTHONPATH=src python -m repro.serving.scenarios`` and update both
+``scenarios.py`` and the ``trace_replay`` section of
+``benchmarks/BENCH_baseline.json``.
+"""
+import pytest
+from _serving_checks import ProbeCluster, TallyBackend, assert_invariants
+
+from repro.serving.scenarios import (
+    SCENARIOS,
+    check_pins,
+    run_scenario,
+    scenario_summary,
+)
+
+# one shared predictor bank across the whole matrix (profiling is the
+# expensive part; sharing it is also what the benchmarks do)
+_BANK: dict = {}
+
+
+@pytest.fixture(scope="module", params=sorted(SCENARIOS))
+def scenario_run(request):
+    name = request.param
+    backends = []
+
+    def factory(kind, idx, hw, seed):
+        b = TallyBackend(hw, noise_sigma=0.02, seed=seed)
+        backends.append(b)
+        return b
+
+    m, cluster, reqs = run_scenario(
+        name, smoke=True, predictor_bank=_BANK,
+        cluster_cls=ProbeCluster, backend_factory=factory,
+    )
+    return name, m, cluster, reqs, backends
+
+
+def test_scenario_registry_shape():
+    """The matrix is the substrate later figures run against: at least
+    six named scenarios, every one pinned, and at least two opted into
+    the open-loop QPS sweep (saturation-knee coverage)."""
+    assert len(SCENARIOS) >= 6
+    for s in SCENARIOS.values():
+        assert s.pins, f"{s.name}: no golden pins committed"
+        assert "finished_frac" in s.pins, s.name
+        assert s.description
+    assert sum(1 for s in SCENARIOS.values() if s.sweep_rates) >= 2
+
+
+def test_scenario_invariants(scenario_run):
+    """Energy conservation / clock monotonicity / no admitted loss on
+    every scenario (ProbeCluster checked event ordering during the
+    run)."""
+    name, m, cluster, reqs, backends = scenario_run
+    assert_invariants(cluster, m, reqs, backends=backends)
+
+
+def test_scenario_golden_pins(scenario_run):
+    name, m, cluster, reqs, backends = scenario_run
+    mismatches = check_pins(SCENARIOS[name], scenario_summary(m))
+    assert not mismatches, "\n".join(mismatches)
+
+
+def test_scenario_replay_deterministic():
+    """Same scenario, same seed -> identical workload (trace build and
+    token regeneration are pure functions of the seed)."""
+    sc = SCENARIOS["agentic-multiturn"]
+    a = sc.build(3, True)
+    b = sc.build(3, True)
+    assert a.records == b.records
+    ra = a.to_requests(tokens=True, seed=3)
+    rb = b.to_requests(tokens=True, seed=3)
+    assert [r.prompt_tokens for r in ra] == [r.prompt_tokens for r in rb]
+    assert sc.build(4, True).records != a.records
+
+
+def test_scenario_conversation_prefixes():
+    """Replayed conversation turns are strict prefix extensions — the
+    property the radix cache's hit rate (a pinned metric) rides on."""
+    sc = SCENARIOS["agentic-multiturn"]
+    reqs = sc.build(0, True).to_requests(tokens=True)
+    by_conv: dict = {}
+    for r in sorted(reqs, key=lambda r: (r.conv_id, r.turn)):
+        if r.conv_id < 0:
+            continue
+        prev = by_conv.get(r.conv_id)
+        if prev is not None:
+            assert r.prompt_tokens[: len(prev)] == prev, (
+                f"conv {r.conv_id} turn {r.turn} does not extend its "
+                "predecessor"
+            )
+        by_conv[r.conv_id] = r.prompt_tokens
+    assert by_conv, "agentic trace produced no conversations"

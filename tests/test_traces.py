@@ -1,0 +1,201 @@
+"""Trace ingestion / rescaling properties (hypothesis-swept where
+installed, with explicit examples that always run).
+
+The properties the sweep pins:
+
+* every loader yields sorted, non-negative arrivals and >= 1 tokens on
+  both sides — the :class:`~repro.serving.traces.Trace` constructor
+  enforces them, so the sweep is really exercising the normalizers;
+* ``rescale(t, a)`` scales mean RPS by exactly ``a`` while the length
+  marginals are *identical* (clock-warping never touches tokens), and
+  ``resample`` matches the source length moments within tolerance;
+* ``save() -> load_trace()`` round-trips losslessly (floats written
+  with ``repr``), including kind/tier/conversation metadata;
+* foreign-schema sniffing dispatches Azure and BurstGPT headers and
+  rejects unknown ones.
+"""
+import io
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.serving import SHAREGPT
+from repro.serving.traces import (
+    AZURE_SAMPLE_CSV,
+    BURSTGPT_SAMPLE_CSV,
+    AgenticSegment,
+    DiurnalSegment,
+    Trace,
+    TraceRecord,
+    load_azure_trace,
+    load_burstgpt_trace,
+    load_trace,
+    resample,
+    rescale,
+    rescale_to_rps,
+    synthetic_trace,
+    tile,
+    trace_from_requests,
+)
+from repro.serving.workload import poisson_workload
+
+
+def _poisson_trace(rps=5.0, duration=60.0, seed=0):
+    return trace_from_requests(
+        "t", poisson_workload(SHAREGPT, rps, duration, seed=seed)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Constructor / loader invariants
+# ---------------------------------------------------------------------------
+
+
+def test_trace_rejects_malformed():
+    ok = TraceRecord(1.0, 100, 10)
+    with pytest.raises(ValueError):
+        Trace("bad", (TraceRecord(-1.0, 100, 10),))
+    with pytest.raises(ValueError):
+        Trace("bad", (ok, TraceRecord(0.5, 100, 10)))  # unsorted
+    with pytest.raises(ValueError):
+        Trace("bad", (TraceRecord(0.0, 0, 10),))  # empty prompt
+    with pytest.raises(ValueError):
+        Trace("bad", (TraceRecord(0.0, 100, 0),))  # empty output
+
+
+@pytest.mark.parametrize("csv_text,loader", [
+    (AZURE_SAMPLE_CSV, load_azure_trace),
+    (BURSTGPT_SAMPLE_CSV, load_burstgpt_trace),
+])
+def test_foreign_loaders_normalize(csv_text, loader):
+    t = loader(csv_text)
+    arr = t.arrivals_s
+    assert arr[0] == 0.0  # t0 shifted to the origin
+    assert np.all(np.diff(arr) >= 0.0)
+    assert np.all(arr >= 0.0)
+    assert t.prompt_lens.min() >= 1 and t.output_lens.min() >= 1
+    assert len(t.records) == 64
+
+
+def test_load_trace_sniffs_schema(tmp_path):
+    assert len(load_trace(io.StringIO(AZURE_SAMPLE_CSV)).records) == 64
+    bg = load_trace(io.StringIO(BURSTGPT_SAMPLE_CSV))
+    assert len(bg.records) == 64
+    assert bg.records[0].kind  # Model column preserved as request kind
+    p = tmp_path / "who.csv"
+    p.write_text("foo,bar\n1,2\n")
+    with pytest.raises(ValueError, match="schema"):
+        load_trace(str(p))
+
+
+# ---------------------------------------------------------------------------
+# Rescaling / resampling / round-trip (property sweep)
+# ---------------------------------------------------------------------------
+
+
+# explicit grid — always runs, hypothesis or not (same shape as the
+# invariant suite: the property sweep widens coverage, never replaces it)
+_GRID = [
+    # seed factor rps
+    (0, 0.5, 3.0),
+    (1, 2.0, 6.0),
+    (2, 7.5, 1.5),
+    (3, 0.25, 10.0),
+]
+
+
+@pytest.mark.parametrize("seed,factor,rps", _GRID)
+def test_rescale_grid(seed, factor, rps):
+    _check_rescale(seed, factor, rps)
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    factor=st.floats(0.25, 8.0, allow_nan=False),
+    rps=st.floats(1.0, 12.0, allow_nan=False),
+)
+@settings(max_examples=20, deadline=None)
+def test_rescale_properties(seed, factor, rps):
+    _check_rescale(seed, factor, rps)
+
+
+def _check_rescale(seed, factor, rps):
+    """Rate x factor, length marginals untouched; rescale_to_rps hits
+    its target exactly."""
+    src = _poisson_trace(rps=rps, seed=seed)
+    out = rescale(src, factor)
+    assert out.mean_rps == pytest.approx(src.mean_rps * factor, rel=1e-9)
+    assert np.array_equal(out.prompt_lens, src.prompt_lens)
+    assert np.array_equal(out.output_lens, src.output_lens)
+    assert np.all(np.diff(out.arrivals_s) >= 0.0)
+    pinned = rescale_to_rps(src, 6.0)
+    assert pinned.mean_rps == pytest.approx(6.0, rel=1e-9)
+
+
+@pytest.mark.parametrize("seed", [0, 7, 23])
+def test_resample_moments_grid(seed):
+    _check_resample(seed)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_resample_matches_source_moments(seed):
+    _check_resample(seed)
+
+
+def _check_resample(seed):
+    """Bootstrap resampling preserves the empirical length marginals'
+    first two moments within sampling tolerance."""
+    src = _poisson_trace(rps=6.0, duration=120.0, seed=seed)
+    out = resample(src, rps=8.0, duration_s=240.0, seed=seed + 1)
+    assert out.mean_rps == pytest.approx(8.0, rel=0.35)  # Poisson noise
+    sm, om = src.moments(), out.moments()
+    for key in ("prompt_mean", "output_mean"):
+        assert om[key] == pytest.approx(sm[key], rel=0.25)
+    for key in ("prompt_std", "output_std"):
+        # heavy-tailed lengths: std is noisier than the mean
+        assert om[key] == pytest.approx(sm[key], rel=0.5)
+
+
+@pytest.mark.parametrize("seed", [0, 5, 11])
+def test_roundtrip_grid(seed, tmp_path):
+    _check_roundtrip(seed, tmp_path)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_roundtrip_lossless(seed, tmp_path_factory):
+    _check_roundtrip(seed, tmp_path_factory.mktemp("traces"))
+
+
+def _check_roundtrip(seed, dirpath):
+    """export -> ingest is exact equality, metadata included."""
+    src = synthetic_trace(
+        [DiurnalSegment(duration_s=30.0, base_rps=2.0, peak_rps=6.0),
+         AgenticSegment(duration_s=30.0, n_conversations=6,
+                        turns_mean=3.0, think_mean_s=2.0)],
+        seed=seed, name="rt",
+    )
+    p = dirpath / f"rt{seed}.csv"
+    src.save(str(p))
+    back = load_trace(str(p))
+    assert back.records == src.records
+
+
+def test_tile_extends_rate_preserving():
+    src = _poisson_trace(rps=5.0, duration=40.0, seed=3)
+    out = tile(src, 4)
+    assert len(out.records) == 4 * len(src.records)
+    assert out.mean_rps == pytest.approx(src.mean_rps, rel=0.05)
+    assert np.all(np.diff(out.arrivals_s) >= 0.0)
+
+
+def test_to_requests_inverts_trace_from_requests():
+    reqs = poisson_workload(SHAREGPT, 4.0, 30.0, seed=9)
+    t = trace_from_requests("inv", reqs)
+    back = t.to_requests()
+    src = sorted(reqs, key=lambda r: r.arrival_s)
+    assert [r.arrival_s for r in back] == [r.arrival_s for r in src]
+    assert [r.prompt_len for r in back] == [r.prompt_len for r in src]
+    assert [r.decode_len for r in back] == [r.decode_len for r in src]

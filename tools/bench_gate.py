@@ -12,7 +12,12 @@ things worse:
   speculative ``accept_rate`` — these are bit-exact simulator outputs, so
   *any* change means the control plane changed behaviour, not just speed;
 * nonzero steady-state ``recompiles`` (the pure-Sim reference scenario
-  touches no jit entry point, and warmed real backends must not either).
+  touches no jit entry point, and warmed real backends must not either);
+* scenario-matrix drift in the ``trace_replay`` section: a scenario
+  dropping its golden pins (``pin_ok``), its exact ``output_tokens``
+  count, or a QPS sweep's detected saturation knee moving off the
+  baselined rate (knees are grid values from a deterministic sim — any
+  move means capacity or routing changed).
 
 Prints a before/after table (and appends it to ``$GITHUB_STEP_SUMMARY``
 when CI provides one).  After an intentional perf change, refresh the
@@ -95,12 +100,79 @@ def gate(serving: dict, baseline: dict,
     return failures, rows
 
 
+def gate_trace_replay(serving: dict,
+                      baseline: dict) -> Tuple[List[str], List[Dict]]:
+    """Scenario-matrix gate: every baselined scenario must still hold
+    its golden pins and token count; baselined saturation knees must
+    not move."""
+    failures: List[str] = []
+    rows: List[Dict] = []
+    base = baseline.get("trace_replay", {})
+    if not base:
+        return failures, rows  # baseline predates the scenario matrix
+    cur = serving.get("trace_replay", {})
+    if not cur:
+        return (["trace_replay: section missing from BENCH_serving.json "
+                 "(fig_traces_replay failed?)"], rows)
+    cur_sweeps = cur.get("sweeps", {})
+    for name, b in sorted(base.get("scenarios", {}).items()):
+        c = cur.get("scenarios", {}).get(name)
+        row: Dict = {"scenario": name}
+        if c is None:
+            failures.append(f"trace_replay/{name}: scenario missing")
+            row["status"] = "MISSING"
+            rows.append(row)
+            continue
+        row["energy_per_token_mj"] = c.get("energy_per_token_mj")
+        row["output_tokens"] = c.get("output_tokens")
+        if not c.get("pin_ok"):
+            failures.append(f"trace_replay/{name}: golden pins drifted")
+        if c.get("output_tokens") != b.get("output_tokens"):
+            failures.append(
+                f"trace_replay/{name}: output_tokens "
+                f"{c.get('output_tokens')} != baseline "
+                f"{b.get('output_tokens')}")
+        bs = base.get("sweeps", {}).get(name)
+        if bs is not None:
+            cs = cur_sweeps.get(name, {})
+            row["knee_rps"] = cs.get("knee_rps")
+            row["attainment_knee_rps"] = cs.get("attainment_knee_rps")
+            for key in ("knee_rps", "attainment_knee_rps"):
+                if cs.get(key) != bs.get(key):
+                    failures.append(
+                        f"trace_replay/{name}: {key} {cs.get(key)} != "
+                        f"baseline {bs.get(key)}")
+            if cs.get("knee_rps") is None:
+                failures.append(
+                    f"trace_replay/{name}: no saturation knee detected "
+                    "in the swept range")
+        row["status"] = ("OK" if not any(
+            f.startswith(f"trace_replay/{name}:") for f in failures
+        ) else "FAIL")
+        rows.append(row)
+    return failures, rows
+
+
+def render_replay_table(rows: List[Dict], markdown: bool = False) -> str:
+    cols = [("scenario", "scenario"),
+            ("energy_per_token_mj", "mJ/token"),
+            ("output_tokens", "tokens out"),
+            ("knee_rps", "knee rps"),
+            ("attainment_knee_rps", "attain knee"),
+            ("status", "status")]
+    return _render(rows, cols, markdown)
+
+
 def render_table(rows: List[Dict], markdown: bool = False) -> str:
     cols = [("variant", "variant"), ("pre_pr_iters_per_s", "pre-PR it/s"),
             ("baseline_iters_per_s", "baseline it/s"),
             ("iters_per_s", "current it/s"), ("delta_pct", "Δ base %"),
             ("speedup_vs_pre_pr", "× vs pre-PR"),
             ("recompiles", "recompiles"), ("status", "status")]
+    return _render(rows, cols, markdown)
+
+
+def _render(rows: List[Dict], cols, markdown: bool = False) -> str:
     header = [h for _, h in cols]
     body = [[("" if r.get(k) is None else str(r.get(k))) for k, _ in cols]
             for r in rows]
@@ -118,13 +190,28 @@ def render_table(rows: List[Dict], markdown: bool = False) -> str:
 
 
 def rebaseline(serving: dict, baseline: dict) -> dict:
-    """Adopt the current event-loop rows as the new gate reference
-    (``pre_pr`` and the note are preserved)."""
+    """Adopt the current event-loop + trace-replay rows as the new gate
+    reference (``pre_pr`` and the note are preserved)."""
     new = dict(baseline)
     new["event_loop"] = {
         variant: {k: row[k] for k in BASELINE_FIELDS if k in row}
         for variant, row in sorted(serving.get("event_loop", {}).items())
     }
+    replay = serving.get("trace_replay")
+    if replay:
+        new["trace_replay"] = {
+            "scenarios": {
+                name: {k: v for k, v in row.items() if k != "pin_ok"}
+                for name, row in sorted(replay.get("scenarios", {}).items())
+            },
+            "sweeps": {
+                name: {"knee_rps": s.get("knee_rps"),
+                       "attainment_knee_rps": s.get("attainment_knee_rps"),
+                       "knee_metric": s.get("knee_metric"),
+                       "slo_floor": s.get("slo_floor")}
+                for name, s in sorted(replay.get("sweeps", {}).items())
+            },
+        }
     return new
 
 
@@ -159,13 +246,20 @@ def main(argv=None) -> int:
         return 0
 
     failures, rows = gate(serving, baseline, args.tolerance)
-    table = render_table(rows)
-    print(table)
+    replay_failures, replay_rows = gate_trace_replay(serving, baseline)
+    failures += replay_failures
+    print(render_table(rows))
+    if replay_rows:
+        print("\n" + render_replay_table(replay_rows))
     summary = os.environ.get("GITHUB_STEP_SUMMARY")
     if summary:
         with open(summary, "a") as f:
             f.write("### Event-loop perf gate\n\n")
             f.write(render_table(rows, markdown=True) + "\n\n")
+            if replay_rows:
+                f.write("### Scenario-matrix gate\n\n")
+                f.write(render_replay_table(replay_rows, markdown=True)
+                        + "\n\n")
             if failures:
                 f.write("**FAILURES**\n\n")
                 f.writelines(f"- {x}\n" for x in failures)

@@ -112,13 +112,33 @@ class EcoFreq:
     # paper's exact Alg. 1. Measured (llama-8B@55rps): 0.8 restores ITL
     # attainment 0.85 -> 1.0 for +1.2% energy.
     slo_margin: float = 1.0
+    # decision memo: skip the predictor entirely when consecutive
+    # iterations present the same quantized state.  Keys are the
+    # predictor's own quantile-bin coordinates plus the exact budget, so
+    # a hit returns exactly what the ladder scan would have — bit-exact
+    # by construction (GBTree predictions are constant within a bin
+    # cell).  False = always scan (the pre-memo behavior).
+    select_memo: bool = True
+
+    _MEMO_CAP = 4096  # distinct quantized states kept before a reset
 
     def __post_init__(self):
         self.freq_options = tuple(sorted(set(self.freq_options)))
+        self._ladder = np.asarray(self.freq_options)
+        self._memo: dict = {}
+        self._memo_version = -1
+        self.select_memo_hits = 0
+        self.select_memo_misses = 0
 
     @property
     def f_max(self) -> float:
         return self.freq_options[-1]
+
+    def invalidate(self) -> None:
+        """Drop memoized decisions.  Behavior-neutral (keys are exact /
+        bin-exact), called by engines at preemption/park/wake boundaries
+        as belt-and-braces against future key widening."""
+        self._memo.clear()
 
     def budget(self, batch: BatchInfo) -> float:
         if batch.phase == "prefill":
@@ -147,6 +167,37 @@ class EcoFreq:
             t = self.predictor.predict_decode(f, batch.n_req, batch.n_kv)
         return t + self.latency_bias_s
 
+    def _memo_key(self, s: float, batch: BatchInfo):
+        """Quantized decision key, or None when the state isn't keyable.
+
+        Decode/verify states key on the predictor's quantile-bin
+        coordinates (predictions are constant within a cell); prefill
+        states key on the exact feature tuple (GBLinear is continuous).
+        The budget ``s`` enters exactly, so tier deadlines, spec yield
+        and margin all self-invalidate through the key."""
+        try:
+            if batch.phase == "prefill":
+                return ("p", batch.n_tok, batch.n_cached, s,
+                        self.latency_bias_s)
+            if batch.spec_k > 0:
+                return ("v",) + self.predictor.verify_bin_key(
+                    batch.n_req, batch.n_kv, batch.spec_k
+                ) + (s, self.latency_bias_s)
+            return ("d",) + self.predictor.decode_bin_key(
+                batch.n_req, batch.n_kv
+            ) + (s, self.latency_bias_s)
+        except (AttributeError, TypeError):
+            return None  # non-EcoPred predictor / unfitted bins
+
+    def _scan(self, s: float, batch: BatchInfo) -> float:
+        # lowest frequency meeting the budget — one predictor query
+        # serves the whole ladder in every phase
+        preds = self.predict(self._ladder, batch)
+        ok = preds <= s
+        if ok.any():
+            return self.freq_options[int(np.argmax(ok))]
+        return self.f_max
+
     def select(self, state: SystemState, batch: BatchInfo) -> float:
         # step 1 — queue check: clear backlogged requests timely (tiered:
         # only urgent-tier backlog boosts; batch-tier backlog paces EDF)
@@ -161,12 +212,27 @@ class EcoFreq:
         s = self.budget(batch)
         if s <= 0.0:
             return self.f_max
-        # step 3 — lowest frequency meeting the budget (batched query)
-        preds = self.predict(np.asarray(self.freq_options), batch)
-        for f, t in zip(self.freq_options, preds):
-            if t <= s:
-                return f
-        return self.f_max
+        # step 3 — lowest frequency meeting the budget, memoized on the
+        # quantized (phase, state-bins, budget) key
+        if not self.select_memo:
+            return self._scan(s, batch)
+        key = self._memo_key(s, batch)
+        if key is None:
+            return self._scan(s, batch)
+        pv = getattr(self.predictor, "version", 0)
+        if pv != self._memo_version:
+            self._memo.clear()
+            self._memo_version = pv
+        f = self._memo.get(key)
+        if f is not None:
+            self.select_memo_hits += 1
+            return f
+        f = self._scan(s, batch)
+        self.select_memo_misses += 1
+        if len(self._memo) >= self._MEMO_CAP:
+            self._memo.clear()
+        self._memo[key] = f
+        return f
 
 
 # ---------------------------------------------------------------------------
@@ -197,14 +263,36 @@ class PowerCapFreq:
     cap_w: float
 
     def __post_init__(self):
-        lo, hi = self.chip.f_min, self.chip.f_max
-        for _ in range(50):
-            mid = 0.5 * (lo + hi)
-            if P.power(self.chip, mid, 1.0) <= self.cap_w:
-                lo = mid
-            else:
-                hi = mid
-        self.f_cap = lo
+        # Closed-form inversion of ``P.power(chip, f, 1.0) == cap_w``
+        # (no scipy, no iteration).  With x = f/f_max and the DVFS
+        # voltage curve V(x), Eq. 1 gives  x·V(x)² = d  where
+        # d = (cap_w − p_idle)·V(1)² / (p_elec_max − p_idle):
+        # * voltage-floor region (x ≤ x_knee, V ≡ 1): x = d;
+        # * above the knee V(x) = a + b·x is affine, so the cap point is
+        #   the real root of  b²x³ + 2abx² + a²x − d = 0  in [x_knee, 1].
+        c = self.chip
+        v1 = P.voltage(c, c.f_max)
+        d = (self.cap_w - c.p_idle) * (v1 * v1) / (c.p_elec_max - c.p_idle)
+        xk = c.x_volt_knee
+        if d <= 0.0:
+            x = c.f_min / c.f_max
+        elif d <= xk:
+            x = d
+        else:
+            b = c.volt_slope / (1.0 - xk)
+            a = 1.0 - c.volt_slope * xk / (1.0 - xk)
+            roots = np.roots([b * b, 2.0 * a * b, a * a, -d])
+            real = roots[np.abs(roots.imag) < 1e-9].real
+            cand = real[real >= xk - 1e-12]
+            # x·V(x)² is strictly increasing, so at most one root ≥ knee
+            x = float(cand.min()) if cand.size else 1.0
+        f = min(max(x * c.f_max, c.f_min), c.f_max)
+        # absorb root-finding float error: the cap is an invariant
+        for _ in range(4):
+            if P.power(c, f, 1.0) <= self.cap_w or f <= c.f_min:
+                break
+            f = max(c.f_min, f * (1.0 - 1e-9))
+        self.f_cap = f
 
     def select(self, state: SystemState, batch: BatchInfo) -> float:
         return min(self.f_cap, self.chip.f_max)
@@ -228,3 +316,11 @@ class IntervalFreq:
             self._held = self.base.select(state, batch)
             self._last_t = state.now_s
         return self._held
+
+    def invalidate(self) -> None:
+        """Forward to the wrapped controller.  The *held* decision is
+        deliberately kept: dropping it would re-decide off-boundary and
+        diverge from a memo-disabled run."""
+        base_inv = getattr(self.base, "invalidate", None)
+        if base_inv is not None:
+            base_inv()

@@ -22,6 +22,7 @@ are batched together").
 """
 from __future__ import annotations
 
+from bisect import bisect_right
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence
 
@@ -70,6 +71,10 @@ class EcoPred:
         self._since_v = 0
         self.n_adaptations = 0
         self.online_enabled = True
+        # bin-edge lists for the scalar bin-key path, cached per model
+        # version (np.searchsorted is ~10× slower than bisect for one
+        # scalar, and the select memo asks per iteration)
+        self._edge_cache: dict = {}
         # speculative-verify latency model over (f, N_req, N_kv, k):
         # fitted lazily (ensure_verify_profile) so legacy clusters never
         # pay for — or observe — the extra model
@@ -242,10 +247,11 @@ class EcoPred:
         model — the verify model is trained on real speculation windows
         only, and extrapolating it to k=0 would bypass the calibrated
         decode fit."""
-        assert self.verify_model is not None, (
-            "verify model not profiled — call ensure_verify_profile() "
-            "(the cluster does this when spec_decode=True)"
-        )
+        if self.verify_model is None:
+            raise RuntimeError(
+                "verify model not profiled — call ensure_verify_profile() "
+                "(the cluster does this when spec_decode=True)"
+            )
         f = np.asarray(f, float)
         q = np.asarray(n_req, float)
         c = np.asarray(n_kv, float)
@@ -264,6 +270,127 @@ class EcoPred:
                 self.decode_model.predict(X[plain, :3]), 0.0
             )
         return out
+
+    # ------------------------------------------------------------------
+    # Matrix what-ifs (paper §V-E: "multiple queries ... are batched
+    # together") — one (n_states × n_ladder) feature matrix per decision,
+    # answered by a single model call.  Rows are binned/evaluated
+    # independently by both model families, so these are bit-identical
+    # to the equivalent scalar loops.
+    # ------------------------------------------------------------------
+    def predict_prefill_matrix(self, freqs, n_tok, n_cached=0) -> np.ndarray:
+        """``(n, k)`` prefill what-ifs: rows are ``(n_tok, n_cached)``
+        states, columns the frequency ladder.
+
+        Evaluated one ladder-row at a time on purpose: BLAS gemv results
+        are shape-dependent at the ULP level, so collapsing states into
+        one ``(n·k, d)`` GEMM would *not* be bit-identical to the scalar
+        :meth:`predict_prefill` loop it replaces (the tree models don't
+        have this problem — binning makes them exactly row-independent)."""
+        fr = np.asarray(freqs, np.float64).ravel()
+        t = np.asarray(n_tok, np.float64).ravel()
+        c = np.broadcast_to(
+            np.asarray(n_cached, np.float64), t.shape
+        ).ravel()
+        k = fr.size
+        out = np.empty((t.size, k))
+        for i in range(t.size):
+            out[i] = self.prefill_model.predict(
+                self._pfeat(fr, np.full(k, t[i]), np.full(k, c[i]))
+            )
+        return np.maximum(out, 0.0)
+
+    def predict_decode_matrix(self, freqs, n_req, n_kv) -> np.ndarray:
+        """``(n, k)`` decode what-ifs: rows are ``(n_req, n_kv)`` states,
+        columns the frequency ladder."""
+        fr = np.asarray(freqs, np.float64).ravel()
+        q = np.asarray(n_req, np.float64).ravel()
+        c = np.asarray(n_kv, np.float64).ravel()
+        n, k = q.size, fr.size
+        X = np.empty((n * k, 3))
+        X[:, 0] = np.tile(fr, n)
+        X[:, 1] = np.repeat(q, k)
+        X[:, 2] = np.repeat(c, k)
+        return np.maximum(
+            self.decode_model.predict_f64(X), 0.0
+        ).reshape(n, k)
+
+    def predict_verify_matrix(self, freqs, n_req, n_kv, k) -> np.ndarray:
+        """``(n, k_ladder)`` speculative-iteration what-ifs; per-row
+        ``k == 0`` states fall back to the plain decode model exactly
+        like :meth:`predict_verify`."""
+        if self.verify_model is None:
+            raise RuntimeError(
+                "verify model not profiled — call ensure_verify_profile() "
+                "(the cluster does this when spec_decode=True)"
+            )
+        fr = np.asarray(freqs, np.float64).ravel()
+        q = np.asarray(n_req, np.float64).ravel()
+        c = np.asarray(n_kv, np.float64).ravel()
+        kk = np.broadcast_to(np.asarray(k, np.float64), q.shape).ravel()
+        n, nl = q.size, fr.size
+        X = np.empty((n * nl, 4))
+        X[:, 0] = np.tile(fr, n)
+        X[:, 1] = np.repeat(q, nl)
+        X[:, 2] = np.repeat(c, nl)
+        X[:, 3] = np.repeat(kk, nl)
+        out = np.maximum(self.verify_model.predict_f64(X), 0.0)
+        plain = X[:, 3] == 0.0
+        if plain.any():
+            out[plain] = np.maximum(
+                self.decode_model.predict_f64(
+                    np.ascontiguousarray(X[plain, :3])
+                ),
+                0.0,
+            )
+        return out.reshape(n, nl)
+
+    # ------------------------------------------------------------------
+    # Decision-memo support: model-mutation version + bin coordinates
+    # ------------------------------------------------------------------
+    @property
+    def version(self) -> int:
+        """Monotone counter bumped whenever any underlying model refits
+        (offline profile, online ``continue_fit``, lazy verify profile).
+        Decision memos key on it to stay coherent without references."""
+        v = self.prefill_model.version + self.decode_model.version
+        if self.verify_model is not None:
+            v += 1 + self.verify_model.version
+        return v
+
+    def _edges(self, model, tag: str) -> list:
+        """``model.bin_edges_`` as plain float lists, re-extracted when
+        the model refits.  ``bisect`` over a list matches
+        ``np.searchsorted(..., side="right")`` exactly (same comparison
+        on the same float64 values) at a fraction of the per-call cost."""
+        key = (tag, model.version)
+        ed = self._edge_cache.get(key)
+        if ed is None:
+            self._edge_cache.clear()  # at most one live version per model
+            ed = [e.tolist() for e in model.bin_edges_]
+            self._edge_cache[key] = ed
+        return ed
+
+    def decode_bin_key(self, n_req, n_kv) -> tuple:
+        """Quantile-bin coordinates of a decode state.  GBTree predictions
+        are constant within a bin cell, so two states sharing this key are
+        *guaranteed* identical ladder predictions — the foundation of the
+        EcoFreq select memo."""
+        e = self._edges(self.decode_model, "d")
+        return (
+            bisect_right(e[1], float(n_req)),
+            bisect_right(e[2], float(n_kv)),
+        )
+
+    def verify_bin_key(self, n_req, n_kv, k) -> tuple:
+        """Bin coordinates of a speculative-verify state (see
+        :meth:`decode_bin_key`)."""
+        e = self._edges(self.verify_model, "v")
+        return (
+            bisect_right(e[1], float(n_req)),
+            bisect_right(e[2], float(n_kv)),
+            bisect_right(e[3], float(k)),
+        )
 
     # ------------------------------------------------------------------
     # Online adaptation

@@ -143,12 +143,27 @@ class RoundRobinRouter:
 # ---------------------------------------------------------------------------
 
 
+_ROUTE_MEMO_CAP = 4096  # distinct quantized route states kept per router
+
+
 class EcoRoute:
-    def __init__(self, ecofreq: EcoFreq, delta: float):
-        """``delta`` is the imbalance-prevention threshold Δ (MHz)."""
+    def __init__(self, ecofreq: EcoFreq, delta: float, memo: bool = True):
+        """``delta`` is the imbalance-prevention threshold Δ (MHz).
+        ``memo=False`` disables the decision memo (always re-evaluate)."""
         self.ecofreq = ecofreq
         self.delta = delta
         self._rr = 0
+        self.memo = memo
+        self._memo: dict = {}
+        self._memo_version = -1
+        self.route_memo_hits = 0
+        self.route_memo_misses = 0
+        self.route_batch_queries = 0
+        self.route_batch_rows = 0
+
+    def invalidate(self) -> None:
+        """Drop memoized decisions (behavior-neutral: keys are exact)."""
+        self._memo.clear()
 
     # -- frequency decision for a hypothetical decode state ---------------
     def _freqs(
@@ -170,31 +185,25 @@ class EcoRoute:
         """
         opts = np.asarray(self.ecofreq.freq_options)
         n = states.shape[0]
-        ff = np.repeat(opts[None, :], n, axis=0)  # (n, k)
-        qq = np.repeat(states[:, 0:1], len(opts), axis=1)
-        kk = np.repeat(states[:, 1:2], len(opts), axis=1)
-        spec_rows = (
-            np.flatnonzero(spec_k > 0)
-            if spec_k is not None else np.empty(0, int)
-        )
-        plain_rows = (
-            np.flatnonzero(spec_k <= 0)
-            if spec_k is not None else np.arange(n)
-        )
-        t = np.empty((n, len(opts)))
-        if plain_rows.size:  # each model queried only for its own rows
-            t[plain_rows] = self.ecofreq.predictor.predict_decode(
-                ff[plain_rows].ravel(), qq[plain_rows].ravel(),
-                kk[plain_rows].ravel(),
-            ).reshape(len(plain_rows), len(opts))
-        if spec_rows.size:
-            kv = np.repeat(
-                spec_k[spec_rows, None].astype(float), len(opts), axis=1
-            )
-            t[spec_rows] = self.ecofreq.predictor.predict_verify(
-                ff[spec_rows].ravel(), qq[spec_rows].ravel(),
-                kk[spec_rows].ravel(), kv.ravel(),
-            ).reshape(len(spec_rows), len(opts))
+        pred = self.ecofreq.predictor
+        self.route_batch_queries += 1
+        self.route_batch_rows += n
+        if spec_k is not None and (spec_k > 0).any():
+            spec_rows = np.flatnonzero(spec_k > 0)
+            plain_rows = np.flatnonzero(spec_k <= 0)
+            t = np.empty((n, len(opts)))
+            if plain_rows.size:  # each model queried only for its own rows
+                t[plain_rows] = pred.predict_decode_matrix(
+                    opts, states[plain_rows, 0], states[plain_rows, 1]
+                )
+            if spec_rows.size:
+                t[spec_rows] = pred.predict_verify_matrix(
+                    opts, states[spec_rows, 0], states[spec_rows, 1],
+                    spec_k[spec_rows].astype(float),
+                )
+        else:
+            # one (n_states × n_ladder) matrix, one model call
+            t = pred.predict_decode_matrix(opts, states[:, 0], states[:, 1])
         if bias is not None:
             t = t + bias[:, None]
         slo = self.ecofreq.slo_itl_s
@@ -204,6 +213,31 @@ class EcoRoute:
         # first qualifying option; none -> max
         first = np.where(ok.any(axis=1), ok.argmax(axis=1), len(opts) - 1)
         return opts[first]
+
+    def _route_key(self, states, bias, spec, emit):
+        """Quantized key under which the (f_cur, f_hyp) arrays are
+        constant: the predictor's bin coordinates of every row (GBTree
+        output is constant within a cell) plus the exact bias/spec/emit
+        bytes.  None when the predictor isn't bin-keyable."""
+        pred = self.ecofreq.predictor
+        try:
+            e = pred.decode_model.bin_edges_
+            qb = np.searchsorted(e[1], states[:, 0], side="right")
+            kb = np.searchsorted(e[2], states[:, 1], side="right")
+        except (AttributeError, TypeError):
+            return None
+        key = (qb.tobytes(), kb.tobytes(), bias.tobytes())
+        if emit is not None:
+            vm = pred.verify_model
+            if vm is None or vm.bin_edges_ is None:
+                return None
+            ev = vm.bin_edges_
+            qv = np.searchsorted(ev[1], states[:, 0], side="right")
+            kv = np.searchsorted(ev[2], states[:, 1], side="right")
+            sv = np.searchsorted(ev[3], spec.astype(float), side="right")
+            key += (qv.tobytes(), kv.tobytes(), sv.tobytes(),
+                    spec.tobytes(), emit.tobytes())
+        return key
 
     def route(self, views: List[InstanceView], req: RouteRequest) -> int:
         cands = _candidates(views, req)
@@ -217,10 +251,28 @@ class EcoRoute:
                 [_view_emitted(v) for v in cands]
                 + [_hyp_emitted(v, req) for v in cands]
             )
-        # one batched EcoPred pass for current + hypothetical states
-        both = self._freqs(
-            np.concatenate([cur, hyp], axis=0), bias, spec, emit
-        )
+        states = np.concatenate([cur, hyp], axis=0)
+        # one batched EcoPred pass for current + hypothetical states,
+        # memoized on the quantized route state (selection below always
+        # re-runs so the live round-robin counter keeps advancing)
+        both = key = None
+        if self.memo:
+            pv = getattr(self.ecofreq.predictor, "version", 0)
+            if pv != self._memo_version:
+                self._memo.clear()
+                self._memo_version = pv
+            key = self._route_key(states, bias, spec, emit)
+            if key is not None:
+                both = self._memo.get(key)
+        if both is None:
+            both = self._freqs(states, bias, spec, emit)
+            if key is not None:
+                self.route_memo_misses += 1
+                if len(self._memo) >= _ROUTE_MEMO_CAP:
+                    self._memo.clear()
+                self._memo[key] = both
+        else:
+            self.route_memo_hits += 1
         f_cur, f_hyp = both[: len(cands)], both[len(cands):]
 
         raised = f_hyp > f_cur
@@ -282,12 +334,33 @@ class EnergyAwareEcoRoute:
         slo_itl_s: float,
         tol: float = 0.05,
         spec_draft_frac: float = 0.05,
+        memo: bool = True,
     ):
         self.profiles = profiles
         self.slo_itl_s = slo_itl_s
         self.tol = tol
         self.spec_draft_frac = spec_draft_frac
         self._rr = 0
+        # marginal energy is continuous in the raw state (hw model, not
+        # the binned predictor), so this memo keys on the *exact* state
+        # tuple — low hit rate under churn, but always correct
+        self.memo = memo
+        self._memo: dict = {}
+        self._memo_version = -1
+        self.route_memo_hits = 0
+        self.route_memo_misses = 0
+        self.route_batch_queries = 0
+        self.route_batch_rows = 0
+
+    def _pred_version(self) -> int:
+        return sum(
+            getattr(p.ecofreq.predictor, "version", 0)
+            for p in self.profiles.values()
+        )
+
+    def invalidate(self) -> None:
+        """Drop memoized decisions (behavior-neutral: keys are exact)."""
+        self._memo.clear()
 
     def _whatif(
         self, p: InstanceProfile, n_req: int, n_kv: int, bias: float,
@@ -314,6 +387,38 @@ class EnergyAwareEcoRoute:
         j = int(ok.argmax()) if ok.any() else len(opts) - 1
         return float(opts[j]), float(t[j])
 
+    def _whatifs(self, rows: list) -> list:
+        """Batched :meth:`_whatif`: ``rows`` is a list of
+        ``(profile, n_req, n_kv, bias, slo_scaled, spec_k)`` queries.
+        Queries sharing a (predictor, ladder) — the whole fleet, when
+        homogeneous — collapse into one matrix call per model family.
+        Returns ``[(f, t), ...]`` bit-identical to the scalar loop."""
+        out: list = [None] * len(rows)
+        groups: Dict[tuple, List[int]] = {}
+        for i, (p, _q, _c, _b, _s, sk) in enumerate(rows):
+            gk = (id(p.ecofreq.predictor), p.ecofreq.freq_options, sk > 0)
+            groups.setdefault(gk, []).append(i)
+        for (_pid, _opts, is_spec), idxs in groups.items():
+            p0 = rows[idxs[0]][0]
+            opts = np.asarray(p0.ecofreq.freq_options)
+            q = np.array([rows[i][1] for i in idxs], float)
+            c = np.array([rows[i][2] for i in idxs], float)
+            self.route_batch_queries += 1
+            self.route_batch_rows += len(idxs)
+            if is_spec:
+                k = np.array([rows[i][5] for i in idxs], float)
+                t = p0.ecofreq.predictor.predict_verify_matrix(
+                    opts, q, c, k
+                )
+            else:
+                t = p0.ecofreq.predictor.predict_decode_matrix(opts, q, c)
+            for j, i in enumerate(idxs):
+                ti = t[j] + rows[i][3]
+                ok = ti <= rows[i][4]
+                jj = int(ok.argmax()) if ok.any() else len(opts) - 1
+                out[i] = (float(opts[jj]), float(ti[jj]))
+        return out
+
     def _iter_energy(
         self, p: InstanceProfile, n_req: int, n_kv: int, f: float,
         spec_k: int,
@@ -331,9 +436,13 @@ class EnergyAwareEcoRoute:
         SLO here; the tier-aware subclass substitutes per-tier bindings."""
         return self.slo_itl_s, self.slo_itl_s
 
-    def route(self, views: List[InstanceView], req: RouteRequest) -> int:
-        cands = _candidates(views, req)
-        scored = []
+    def _score(self, cands: List[InstanceView], req: RouteRequest) -> list:
+        """Per-candidate ``(meets_slo, dE, t_hyp)`` triples — the
+        view-independent part of :meth:`route` (what the memo caches).
+        What-ifs for every candidate's current + hypothetical states
+        batch into grouped matrix calls."""
+        rows: list = []
+        meta: list = []
         for v in cands:
             p = self.profiles[v.idx]
             cur_slo, hyp_slo = self._slos(v, req)
@@ -343,27 +452,63 @@ class EnergyAwareEcoRoute:
             # iteration — the tokens-per-joule pricing
             em_cur = _view_emitted(v)
             em_hyp = _hyp_emitted(v, req)
-            f_hyp, t_hyp = self._whatif(
-                p, v.n_req + 1, v.n_kv + req.prompt_len,
-                v.latency_bias_s, hyp_slo, v.spec_k, em_hyp,
-            )
+            hyp_i = len(rows)
+            rows.append((p, v.n_req + 1, v.n_kv + req.prompt_len,
+                         v.latency_bias_s, hyp_slo * max(1.0, em_hyp),
+                         v.spec_k))
+            cur_i = None
+            if v.n_req > 0:
+                cur_i = len(rows)
+                rows.append((p, v.n_req, v.n_kv, v.latency_bias_s,
+                             cur_slo * max(1.0, em_cur), v.spec_k))
+            meta.append((v, p, hyp_i, cur_i, hyp_slo, em_cur, em_hyp))
+        fts = self._whatifs(rows)
+        scored = []
+        for v, p, hyp_i, cur_i, hyp_slo, em_cur, em_hyp in meta:
+            f_hyp, t_hyp = fts[hyp_i]
             e_hyp = self._iter_energy(
                 p, v.n_req + 1, v.n_kv + req.prompt_len, f_hyp, v.spec_k
             ) / em_hyp
             e_cur = 0.0
-            if v.n_req > 0:
-                f_cur, _ = self._whatif(
-                    p, v.n_req, v.n_kv, v.latency_bias_s, cur_slo,
-                    v.spec_k, em_cur,
-                )
+            if cur_i is not None:
+                f_cur, _ = fts[cur_i]
                 e_cur = self._iter_energy(
                     p, v.n_req, v.n_kv, f_cur, v.spec_k
                 ) / em_cur
             scored.append(
-                (t_hyp <= hyp_slo * max(1.0, em_hyp), e_hyp - e_cur,
-                 t_hyp, v)
+                (t_hyp <= hyp_slo * max(1.0, em_hyp), e_hyp - e_cur, t_hyp)
             )
-        pick = _select(scored, self._rr, self.tol)
+        return scored
+
+    def route(self, views: List[InstanceView], req: RouteRequest) -> int:
+        cands = _candidates(views, req)
+        scored = key = None
+        if self.memo:
+            pv = self._pred_version()
+            if pv != self._memo_version:
+                self._memo.clear()
+                self._memo_version = pv
+            key = (
+                (req.prompt_len, req.itl_slo_s, req.accept_rate),
+                tuple(
+                    (v.idx, v.n_req, v.n_kv, v.latency_bias_s,
+                     v.binding_itl_s, v.spec_k, v.accept_ewma)
+                    for v in cands
+                ),
+            )
+            scored = self._memo.get(key)
+        if scored is None:
+            scored = self._score(cands, req)
+            if key is not None:
+                self.route_memo_misses += 1
+                if len(self._memo) >= _ROUTE_MEMO_CAP:
+                    self._memo.clear()
+                self._memo[key] = scored
+        else:
+            self.route_memo_hits += 1
+        pick = _select(
+            [s + (v,) for s, v in zip(scored, cands)], self._rr, self.tol
+        )
         self._rr += 1
         return pick.idx
 
@@ -441,12 +586,20 @@ class EnergyAwarePrefillRouter:
         slo_ttft_s: float,
         tol: float = 0.05,
         budget_frac: float = 0.5,
+        memo: bool = True,
     ):
         self.profiles = profiles
         self.slo_ttft_s = slo_ttft_s
         self.tol = tol
         self.budget = slo_ttft_s * budget_frac
         self._rr = 0
+        self.memo = memo
+        self._memo: dict = {}
+        self._memo_version = -1
+        self.route_memo_hits = 0
+        self.route_memo_misses = 0
+        self.route_batch_queries = 0
+        self.route_batch_rows = 0
 
     def _whatif(self, p: InstanceProfile, n_tok: int) -> tuple:
         opts = np.asarray(p.ecofreq.freq_options)
@@ -457,23 +610,94 @@ class EnergyAwarePrefillRouter:
         j = int(ok.argmax()) if ok.any() else len(opts) - 1
         return float(opts[j]), float(t[j])
 
-    def route(self, views: List[InstanceView], req: RouteRequest) -> int:
-        cands = _candidates(views, req)
-        scored = []
-        for v in cands:
+    def _whatifs(self, cands: List[InstanceView], n_toks: list,
+                 n_cached: Optional[list] = None) -> list:
+        """Batched queue-drain what-ifs: candidates sharing a
+        (predictor, ladder) collapse into one prefill matrix call."""
+        out: list = [None] * len(cands)
+        groups: Dict[tuple, List[int]] = {}
+        for i, v in enumerate(cands):
             p = self.profiles[v.idx]
-            f_hyp, t_hyp = self._whatif(p, v.n_kv + req.prompt_len)
+            gk = (id(p.ecofreq.predictor), p.ecofreq.freq_options)
+            groups.setdefault(gk, []).append(i)
+        for idxs in groups.values():
+            p0 = self.profiles[cands[idxs[0]].idx]
+            opts = np.asarray(p0.ecofreq.freq_options)
+            toks = np.array([n_toks[i] for i in idxs], float)
+            cached = (
+                np.array([n_cached[i] for i in idxs], float)
+                if n_cached is not None else 0
+            )
+            self.route_batch_queries += 1
+            self.route_batch_rows += len(idxs)
+            t = p0.ecofreq.predictor.predict_prefill_matrix(
+                opts, toks, cached
+            )
+            for j, i in enumerate(idxs):
+                ok = t[j] <= self.budget
+                jj = int(ok.argmax()) if ok.any() else len(opts) - 1
+                out[i] = (float(opts[jj]), float(t[j][jj]))
+        return out
+
+    def _pred_version(self) -> int:
+        return sum(
+            getattr(p.ecofreq.predictor, "version", 0)
+            for p in self.profiles.values()
+        )
+
+    def _memo_lookup(self, key):
+        pv = self._pred_version()
+        if pv != self._memo_version:
+            self._memo.clear()
+            self._memo_version = pv
+        return self._memo.get(key)
+
+    def _memo_store(self, key, scored) -> None:
+        self.route_memo_misses += 1
+        if len(self._memo) >= _ROUTE_MEMO_CAP:
+            self._memo.clear()
+        self._memo[key] = scored
+
+    def invalidate(self) -> None:
+        """Drop memoized decisions (behavior-neutral: keys are exact)."""
+        self._memo.clear()
+
+    def _score(self, cands: List[InstanceView], req: RouteRequest) -> list:
+        fts = self._whatifs(
+            cands, [v.n_kv + req.prompt_len for v in cands]
+        )
+        scored = []
+        for v, (f_hyp, t_hyp) in zip(cands, fts):
             t_hyp += v.busy_remaining_s  # head-of-line: in-flight batch
-            e_marg = p.hw.prefill_iter(
+            e_marg = self.profiles[v.idx].hw.prefill_iter(
                 req.prompt_len, req.prompt_len, f_hyp
             ).energy_j
-            scored.append((t_hyp <= self.budget, e_marg, t_hyp, v))
-        pick = _select(scored, self._rr, self.tol)
+            scored.append((t_hyp <= self.budget, e_marg, t_hyp))
+        return scored
+
+    def route(self, views: List[InstanceView], req: RouteRequest) -> int:
+        cands = _candidates(views, req)
+        scored = key = None
+        if self.memo:
+            key = (
+                req.prompt_len,
+                tuple((v.idx, v.n_kv, v.busy_remaining_s) for v in cands),
+            )
+            scored = self._memo_lookup(key)
+        if scored is None:
+            scored = self._score(cands, req)
+            if key is not None:
+                self._memo_store(key, scored)
+        else:
+            self.route_memo_hits += 1
+        pick = _select(
+            [s + (v,) for s, v in zip(scored, cands)], self._rr, self.tol
+        )
         self._rr += 1
         return pick.idx
 
 
-class CacheAffinityPrefillRouter:
+class CacheAffinityPrefillRouter(EnergyAwarePrefillRouter):
     """Prefix-cache-aware prefill placement (hit-rate-weighted what-if).
 
     Each candidate view carries ``cached_len`` — the longest prefix of the
@@ -491,19 +715,6 @@ class CacheAffinityPrefillRouter:
     back through ``tol``-banded round-robin keeps cold prompts spread.
     """
 
-    def __init__(
-        self,
-        profiles: Dict[int, InstanceProfile],
-        slo_ttft_s: float,
-        tol: float = 0.05,
-        budget_frac: float = 0.5,
-    ):
-        self.profiles = profiles
-        self.slo_ttft_s = slo_ttft_s
-        self.tol = tol
-        self.budget = slo_ttft_s * budget_frac
-        self._rr = 0
-
     def _whatif(self, p: InstanceProfile, n_new: int, n_cached: int) -> tuple:
         """Lowest budget-meeting (f, projected drain) on p's ladder for a
         queue of ``n_new`` fresh tokens over ``n_cached`` resident ones."""
@@ -516,20 +727,41 @@ class CacheAffinityPrefillRouter:
         j = int(ok.argmax()) if ok.any() else len(opts) - 1
         return float(opts[j]), float(t[j])
 
-    def route(self, views: List[InstanceView], req: RouteRequest) -> int:
-        cands = _candidates(views, req)
-        scored = []
-        for v in cands:
-            p = self.profiles[v.idx]
-            n_new = max(1, req.prompt_len - v.cached_len)
+    def _score(self, cands: List[InstanceView], req: RouteRequest) -> list:
+        n_news = [max(1, req.prompt_len - v.cached_len) for v in cands]
+        fts = self._whatifs(
+            cands,
             # v.n_kv carries the instance's queued (pending) tokens
-            f_hyp, t_hyp = self._whatif(p, v.n_kv + n_new, v.cached_len)
+            [v.n_kv + n for v, n in zip(cands, n_news)],
+            [v.cached_len for v in cands],
+        )
+        scored = []
+        for v, n_new, (f_hyp, t_hyp) in zip(cands, n_news, fts):
             t_hyp += v.busy_remaining_s  # head-of-line: in-flight batch
-            e_marg = p.hw.prefill_chunk_iter(
+            e_marg = self.profiles[v.idx].hw.prefill_chunk_iter(
                 n_new, v.cached_len, 1, f_hyp
             ).energy_j
             scored.append((t_hyp <= self.budget, v.cached_len, e_marg,
-                           t_hyp, v))
+                           t_hyp))
+        return scored
+
+    def route(self, views: List[InstanceView], req: RouteRequest) -> int:
+        cands = _candidates(views, req)
+        cached = key = None
+        if self.memo:
+            key = (
+                req.prompt_len,
+                tuple((v.idx, v.n_kv, v.busy_remaining_s, v.cached_len)
+                      for v in cands),
+            )
+            cached = self._memo_lookup(key)
+        if cached is None:
+            cached = self._score(cands, req)
+            if key is not None:
+                self._memo_store(key, cached)
+        else:
+            self.route_memo_hits += 1
+        scored = [s + (v,) for s, v in zip(cached, cands)]
         ok = [s for s in scored if s[0]]
         if ok:
             best_match = max(s[1] for s in ok)

@@ -59,6 +59,9 @@ class GBLinear:
         self.intercept_: float = 0.0
         self._mu: Optional[np.ndarray] = None
         self._sd: Optional[np.ndarray] = None
+        # bumped on every (re)fit so decision-level memos above the
+        # predictor can detect model mutation without holding references
+        self.version = 0
 
     def _z(self, X: np.ndarray) -> np.ndarray:
         return (X - self._mu) / self._sd
@@ -84,6 +87,7 @@ class GBLinear:
                 res = y - (Z @ self.coef_ + self.intercept_)
             step = np.linalg.solve(A, Z.T @ res)
             self.coef_ += self.learning_rate * step
+        self.version += 1
         return self
 
     def continue_fit(self, X: np.ndarray, y: np.ndarray,
@@ -103,6 +107,7 @@ class GBLinear:
                 res = y - (Z @ self.coef_ + self.intercept_)
             step = np.linalg.solve(A, Z.T @ res)
             self.coef_ += self.learning_rate * step
+        self.version += 1
         return self
 
     def predict(self, X: np.ndarray) -> np.ndarray:
@@ -273,6 +278,9 @@ class GBTree:
         self._memo: dict = {}
         self.memo_hits = 0
         self.memo_misses = 0
+        # bumped on every fit/continue_fit so decision-level memos above
+        # the predictor can detect ensemble mutation cheaply
+        self.version = 0
 
     # -- binning --------------------------------------------------------
     def _make_bins(self, X: np.ndarray) -> None:
@@ -340,6 +348,7 @@ class GBTree:
                         break
         self._memo = {}
         self._packed = None
+        self.version += 1
         return self
 
     def continue_fit(
@@ -369,6 +378,7 @@ class GBTree:
             pred += self.learning_rate * tree.predict_binned(B)
         self._memo = {}
         self._packed = None
+        self.version += 1
         return self
 
     # -- prediction -------------------------------------------------------
@@ -439,4 +449,11 @@ class GBTree:
 
     def predict(self, X: np.ndarray) -> np.ndarray:
         X = np.atleast_2d(np.asarray(X, np.float64))
+        return self.predict_binned(self._bin(X))
+
+    def predict_f64(self, X: np.ndarray) -> np.ndarray:
+        """Matrix fast path: ``X`` must already be a C-contiguous float64
+        ``(n, d)`` array (the batched what-if builders construct exactly
+        that), skipping the ``asarray``/``atleast_2d`` checks of
+        :meth:`predict`.  Same bins, same memo — bit-identical results."""
         return self.predict_binned(self._bin(X))

@@ -107,6 +107,11 @@ class ClusterConfig:
     freq_options_prefill: Optional[Sequence[float]] = None  # GH200 split
     control_interval_s: Optional[float] = None  # Fig. 20 window ablation
     delta: float = 500.0  # EcoRoute imbalance threshold (MHz)
+    # decision-plane memoization: EcoFreq.select and the routers cache
+    # decisions keyed on the quantized iteration state (bit-identical to
+    # uncached — keys capture everything the decision reads).  False
+    # recomputes every decision; useful for memo-correctness audits.
+    decision_memo: bool = True
     # engine limits
     prefill_batch_tokens: int = 8_192
     decode_max_running: int = 512
@@ -324,6 +329,7 @@ class PDCluster:
                 self.decode_router: Router = TierAwareEcoRoute(
                     self._profiles_d, cfg.slo_itl_s,
                     spec_draft_frac=cfg.spec_draft_frac,
+                    memo=cfg.decision_memo,
                 )
             elif self._varied_decode:
                 for i, spec in enumerate(self.decode_specs):
@@ -331,14 +337,18 @@ class PDCluster:
                 self.decode_router = EnergyAwareEcoRoute(
                     self._profiles_d, cfg.slo_itl_s,
                     spec_draft_frac=cfg.spec_draft_frac,
+                    memo=cfg.decision_memo,
                 )
             else:
                 route_ef = EcoFreq(
                     self.decode_specs[0].freqs(),
                     self._pred_for(self.decode_specs[0]),
                     cfg.slo_ttft_s, cfg.slo_itl_s,
+                    select_memo=cfg.decision_memo,
                 )
-                self.decode_router = EcoRoute(route_ef, cfg.delta)
+                self.decode_router = EcoRoute(
+                    route_ef, cfg.delta, memo=cfg.decision_memo
+                )
             if cfg.prefix_cache:
                 # cache-affinity placement: hit-rate-weighted what-if over
                 # every instance that owns a radix tree
@@ -349,7 +359,8 @@ class PDCluster:
                         self._default_spec_d
                     )
                 self.prefill_router = CacheAffinityPrefillRouter(
-                    self._profiles_p, cfg.slo_ttft_s
+                    self._profiles_p, cfg.slo_ttft_s,
+                    memo=cfg.decision_memo,
                 )
             elif self.hetero:
                 # the per-instance what-if is also the better prefill
@@ -361,7 +372,8 @@ class PDCluster:
                         self._default_spec_d
                     )
                 self.prefill_router = EnergyAwarePrefillRouter(
-                    self._profiles_p, cfg.slo_ttft_s
+                    self._profiles_p, cfg.slo_ttft_s,
+                    memo=cfg.decision_memo,
                 )
             if self._varied_decode and not self.tiered:
                 for j in range(len(self.hybrid)):
@@ -375,6 +387,11 @@ class PDCluster:
             AutoScaler(cfg.autoscale, self) if cfg.autoscale else None
         )
 
+        # observers notified when an engine is created *after*
+        # construction (chaos scale-out): loopprof registers here so
+        # mid-run spawns are instrumented like the originals
+        self._spawn_hooks: List[Callable] = []
+
         # event loop state
         self._heap: List[tuple] = []
         self._seq = itertools.count()
@@ -384,6 +401,13 @@ class PDCluster:
         self._arrived_tokens = 0
 
     # -- construction -------------------------------------------------------
+    def _notify_spawn(self, eng) -> None:
+        """Run registered spawn observers on a freshly created engine
+        (scale-out path): profilers wrap its backend/controller exactly
+        as they wrapped the construction-time fleet."""
+        for hook in self._spawn_hooks:
+            hook(eng)
+
     def _hw_for(self, spec: InstanceSpec) -> HardwareModel:
         if spec.key not in self._hws:
             self._hws[spec.key] = HardwareModel(
@@ -437,7 +461,8 @@ class PDCluster:
     def _profile(self, spec: InstanceSpec) -> InstanceProfile:
         c = self.cfg
         ef = EcoFreq(
-            spec.freqs(), self._pred_for(spec), c.slo_ttft_s, c.slo_itl_s
+            spec.freqs(), self._pred_for(spec), c.slo_ttft_s, c.slo_itl_s,
+            select_memo=c.decision_memo,
         )
         return InstanceProfile(spec.chip, ef, self._hw_for(spec))
 
@@ -459,7 +484,8 @@ class PDCluster:
 
             assert c.power_cap_w is not None
             return PowerCapFreq(chip, c.power_cap_w)
-        ef = EcoFreq(freq_options, predictor, c.slo_ttft_s, c.slo_itl_s)
+        ef = EcoFreq(freq_options, predictor, c.slo_ttft_s, c.slo_itl_s,
+                     select_memo=c.decision_memo)
         if c.control_interval_s:
             from repro.core.ecofreq import IntervalFreq
 
@@ -955,16 +981,19 @@ class PDCluster:
                         spec = self._default_spec_d
                         idx = len(self.decode)
                         self.decode_specs.append(spec)
-                        self.decode.append(self._make_decode(idx, spec))
+                        eng = self._make_decode(idx, spec)
+                        self.decode.append(eng)
                         if self._profiles_d:
                             self._profiles_d[idx] = self._profile(spec)
                     else:
                         spec = self._default_spec_p
                         idx = len(self.prefill)
                         self.prefill_specs.append(spec)
-                        self.prefill.append(self._make_prefill(idx, spec))
+                        eng = self._make_prefill(idx, spec)
+                        self.prefill.append(eng)
                         if self._profiles_p:
                             self._profiles_p[idx] = self._profile(spec)
+                    self._notify_spawn(eng)
 
             elif kind == _SCALE:
                 self.autoscaler.step(self.now)

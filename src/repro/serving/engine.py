@@ -248,14 +248,25 @@ class ParkableEngine:
     def drain(self) -> None:
         self.accepting = False
 
+    def _invalidate_controller(self) -> None:
+        """Drop the controller's decision memo, if it keeps one.  Memo
+        keys capture the full decision state, so this is about bounding
+        staleness across lifecycle discontinuities (park/wake,
+        preemption, failure) rather than correctness."""
+        inv = getattr(getattr(self, "controller", None), "invalidate", None)
+        if inv is not None:
+            inv()
+
     def begin_park(self, now: float) -> None:
         if self._parked_at is None and self.empty:
             self._parked_at = now
+            self._invalidate_controller()
 
     def unpark(self, now: float) -> None:
         if self._parked_at is not None:
             self.energy.parked_s += now - self._parked_at
             self._parked_at = None
+            self._invalidate_controller()
 
     def readmit(self, now: float) -> None:
         self.accepting = True
@@ -598,6 +609,7 @@ class DecodeEngine(ParkableEngine):
         if v.slo_ttft_s > 0:
             v.deadline_s = now + v.slo_ttft_s
         self.preempted_out.append(v)
+        self._invalidate_controller()
         return True
 
     def take_preempted(self) -> List[Request]:
@@ -774,6 +786,7 @@ class DecodeEngine(ParkableEngine):
     def fail(self) -> List[Request]:
         """Instance dies: KV is lost; in-flight requests need re-prefill."""
         self.alive = False
+        self._invalidate_controller()
         lost = list(self.running) + list(self.waiting)
         self.running.clear()
         self.waiting.clear()

@@ -38,7 +38,13 @@ bookkeeping, EcoPred recording, EcoFreq's ladder scan, EcoRoute, heap
 ops — overlaps with the in-flight device step.  Control decisions never
 read token *content* (requests finish by count; speculative acceptance
 is the engine's seeded realization), so deferral cannot reorder
-anything: Sim==Real parity is structural.
+anything: Sim==Real parity is structural.  ``pipeline_depth`` bounds
+how many iterations may be in flight at once: dispatch only blocks once
+``pipeline_depth`` deferred emissions are queued (and then only on the
+oldest), while slot insert/release and flush drain everything — depth 1
+is the classic one-iteration-deep pipeline, bit-exact with prior
+releases, and every depth replays the same jitted shapes
+(``recompiles == 0`` holds regardless of depth).
 
 Jitted entry points come from :mod:`repro.serving.jitcache`: instances
 with the same config share one compile cache, decode/draft/verify jits
@@ -66,7 +72,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -118,6 +125,7 @@ class RealBackend(SimBackend):
         donate_kv: bool = True,
         mesh=None,
         sharding_policy=None,
+        pipeline_depth: int = 1,
     ):
         super().__init__(hw, noise_sigma, seed)
         self.cfg = cfg
@@ -146,10 +154,21 @@ class RealBackend(SimBackend):
         self.free = list(range(slots))[::-1]
         self._next_dev = jnp.zeros(slots, jnp.int32)
         self.pos = np.zeros(slots, np.int32)
-        # deferred emission from the in-flight decode/spec step, drained
-        # at the next backend touch / release / flush
-        self._pending = None
+        # deferred emissions from in-flight decode/spec steps: a bounded
+        # ring of up to ``pipeline_depth`` iterations.  Dispatch only
+        # blocks (drains the oldest entry) once the ring is full;
+        # insert/release/flush drain everything.  depth=1 reproduces the
+        # single-slot behavior exactly.
+        if pipeline_depth < 1:
+            raise ValueError(
+                f"pipeline_depth must be >= 1, got {pipeline_depth}"
+            )
+        self.pipeline_depth = pipeline_depth
+        self._ring: Deque[Tuple] = deque()
         self.device_wait_s = 0.0  # host time spent blocked on transfers
+        # occupancy telemetry: mean ring depth observed at dispatch
+        self.pipeline_depth_sum = 0
+        self.pipeline_dispatches = 0
 
         if paged:
             assert max_len % page_size == 0, (max_len, page_size)
@@ -324,14 +343,14 @@ class RealBackend(SimBackend):
     # ------------------------------------------------------------------
     # Deferred emission (async dispatch)
     # ------------------------------------------------------------------
-    def _drain(self) -> None:
-        """Materialize the in-flight iteration's token ids and emit them
-        into the requests' output streams.  This is the **only** place
-        the host blocks on device results — called lazily at the next
-        backend touch, a slot release, or the end-of-run flush."""
-        p, self._pending = self._pending, None
-        if p is None:
-            return
+    def _drain_one(self) -> None:
+        """Materialize the *oldest* in-flight iteration's token ids and
+        emit them into the requests' output streams.  This is the
+        **only** place the host blocks on device results — called when
+        the ring reaches ``pipeline_depth`` at dispatch, at a slot
+        insert/release, or the end-of-run flush.  Oldest-first order
+        keeps each request's stream append-ordered."""
+        p = self._ring.popleft()
         t0 = time.perf_counter()
         if p[0] == "decode":
             _, pairs, ids = p
@@ -352,6 +371,14 @@ class RealBackend(SimBackend):
                 r.output_tokens.append(int(tgt[s, a]))
                 self.spec_real_matches += int(match[s])
                 self.spec_real_drafted += self.spec_k
+
+    def _drain(self) -> None:
+        """Drain the whole ring: every deferred iteration is emitted, in
+        dispatch order.  Full drain points (insert, release, flush) keep
+        every request's stream complete before it is read or its slot
+        reused."""
+        while self._ring:
+            self._drain_one()
 
     def flush(self) -> None:
         """Emit every deferred token (cluster end-of-run hook)."""
@@ -544,7 +571,10 @@ class RealBackend(SimBackend):
             self.block_tables[slot] = -1
 
     def _real_decode_step(self, reqs: List[Request]) -> None:
-        self._drain()  # previous iteration's ids are due for emission
+        # bounded depth: block only once pipeline_depth iterations are
+        # in flight, and then only on the oldest (depth=1: the previous)
+        while len(self._ring) >= self.pipeline_depth:
+            self._drain_one()
         if self.paged:
             # grow tail pages where the next write crosses a boundary
             for r in reqs:
@@ -582,7 +612,9 @@ class RealBackend(SimBackend):
             s = self.slot_of[r.rid]
             pairs.append((r, s))
             self.pos[s] += 1
-        self._pending = ("decode", pairs, ids)
+        self._ring.append(("decode", pairs, ids))
+        self.pipeline_depth_sum += len(self._ring)
+        self.pipeline_dispatches += 1
 
     def decode_iter(self, reqs: List[Request], n_req: int, n_kv: int,
                     f: float):
@@ -633,7 +665,8 @@ class RealBackend(SimBackend):
         bonus/correction token, and the pages holding only rejected
         positions are returned to the pool (page-exact rollback).
         """
-        self._drain()  # previous iteration's ids are due for emission
+        while len(self._ring) >= self.pipeline_depth:
+            self._drain_one()
         for r in reqs:
             self._grow_for_verify(r, k)
         # drafting (batched over every slot; free slots write masked
@@ -692,7 +725,9 @@ class RealBackend(SimBackend):
         )
         self._prev_dev = jnp.where(occ, new_prev, self._prev_dev)
         self._next_dev = jnp.where(occ, tgt[rows, a_dev], self._next_dev)
-        self._pending = ("spec", entries, drafts, tgt, match)
+        self._ring.append(("spec", entries, drafts, tgt, match))
+        self.pipeline_depth_sum += len(self._ring)
+        self.pipeline_dispatches += 1
         for r, s, a in entries:
             self.pos[s] += a + 1
             # page-exact rollback of the rejected suffix
@@ -756,6 +791,7 @@ def make_real_backend_factory(
     tp: int = 0,
     devices=None,
     sharding_policy=None,
+    pipeline_depth: int = 1,
 ):
     """Factory for ClusterConfig.backend_factory: every instance gets its
     own slot/pool state but shares the (read-only) weights *and* — via
@@ -771,7 +807,12 @@ def make_real_backend_factory(
     ``InstanceSpec.tp`` — passed through the factory's ``tp`` keyword —
     overrides the default degree per instance, so a heterogeneous fleet
     compiles heterogeneous shardings.  ``tp=0`` (default) is the legacy
-    meshless single-device path, bit-exact with prior releases."""
+    meshless single-device path, bit-exact with prior releases.
+
+    ``pipeline_depth`` sets each instance's async-dispatch window: how
+    many decode/spec iterations may be in flight before dispatch blocks
+    on the oldest deferred emission (see the module docstring).  Token
+    streams are identical at every depth; 1 is the classic behavior."""
     slicer = MeshSlicer(devices) if tp or devices is not None else None
     default_tp = tp
 
@@ -792,6 +833,7 @@ def make_real_backend_factory(
             draft_params=draft_params if k else None,
             donate_kv=donate_kv, mesh=mesh,
             sharding_policy=sharding_policy,
+            pipeline_depth=pipeline_depth,
         )
 
     return factory

@@ -1,0 +1,334 @@
+"""Batched decision plane: matrix what-ifs, decision memos, telemetry.
+
+The perf work in the EcoFreq/EcoRoute hot path is only admissible if it
+is *bit-identical* to the scalar code it replaced — the benchmark gate
+pins energy numbers exactly, so a single ULP of drift in a predicted
+latency can flip a frequency pick and fail an energy pin three layers
+up.  These tests are that audit:
+
+* the ``predict_*_matrix`` entry points against their scalar loops,
+* memoized ``EcoFreq.select`` / router ``route`` against memo-disabled
+  twins over randomized replays,
+* memo invalidation when online adaptation mutates a predictor,
+* a full Sim-cluster run with ``decision_memo`` on vs off,
+* the loop profiler's live instrumentation across mid-run scale-out.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.registry import REGISTRY
+from repro.core.ecofreq import BatchInfo, EcoFreq, SystemState
+from repro.core.ecopred import EcoPred
+from repro.core.ecoroute import (
+    EcoRoute,
+    EnergyAwareEcoRoute,
+    InstanceProfile,
+    InstanceView,
+    RouteRequest,
+)
+from repro.core.hwmodel import HardwareModel
+from repro.core.power import A100
+from repro.serving import ClusterConfig, PDCluster, poisson_workload
+from repro.serving import loopprof
+from repro.serving.cluster import build_predictor
+from repro.serving.workload import SHAREGPT
+
+MODEL = REGISTRY["llama-3.1-8b"]
+
+
+@pytest.fixture(scope="module")
+def hw():
+    return HardwareModel(MODEL, A100)
+
+
+@pytest.fixture(scope="module")
+def pred(hw):
+    return EcoPred(A100.freq_levels_5).offline_profile(
+        hw, n_prefill=1200, n_decode=3000, noise_sigma=0.0
+    )
+
+
+@pytest.fixture(scope="module")
+def spred(hw):
+    """Separate instance so the shared ``pred`` stays verify-free."""
+    p = EcoPred(A100.freq_levels_5).offline_profile(
+        hw, n_prefill=800, n_decode=2000, noise_sigma=0.0
+    )
+    return p.ensure_verify_profile(hw, n_samples=1500, noise_sigma=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Matrix entry points == scalar loops, to the bit
+# ---------------------------------------------------------------------------
+
+
+def test_decode_matrix_matches_scalar(pred):
+    rng = np.random.default_rng(11)
+    freqs = np.asarray(A100.freq_levels_5)
+    q = rng.integers(1, 500, 40)
+    c = q * rng.integers(100, 1600, 40)
+    mat = pred.predict_decode_matrix(freqs, q, c)
+    assert mat.shape == (40, len(freqs))
+    for i in range(len(q)):
+        for j, f in enumerate(freqs):
+            ref = pred.predict_decode(f, int(q[i]), int(c[i]))[0]
+            assert mat[i, j] == ref
+
+
+def test_verify_matrix_matches_scalar_including_k0(spred):
+    """Rows with ``k == 0`` must fall back to the decode model exactly
+    like the scalar ``predict_verify`` does."""
+    rng = np.random.default_rng(12)
+    freqs = np.asarray(A100.freq_levels_5)
+    q = rng.integers(1, 300, 30)
+    c = q * rng.integers(100, 1200, 30)
+    k = rng.choice([0, 1, 2, 4], 30)
+    assert (k == 0).any() and (k > 0).any()
+    mat = spred.predict_verify_matrix(freqs, q, c, k)
+    for i in range(len(q)):
+        for j, f in enumerate(freqs):
+            ref = spred.predict_verify(
+                f, float(q[i]), float(c[i]), float(k[i])
+            )[0]
+            assert mat[i, j] == ref
+
+
+def test_prefill_matrix_matches_scalar(pred):
+    """The GBLinear gemv is shape-dependent at the ULP level, which is
+    why the matrix path evaluates one ladder-row at a time — so each row
+    must equal the ladder-shaped scalar query bit-for-bit."""
+    rng = np.random.default_rng(13)
+    freqs = np.asarray(A100.freq_levels_5)
+    t = rng.integers(1, 4096, 25)
+    c = rng.integers(0, 2048, 25)
+    c[:10] = 0  # keep the legacy whole-prompt case covered
+    mat = pred.predict_prefill_matrix(freqs, t, c)
+    k = len(freqs)
+    for i in range(len(t)):
+        ref = pred.predict_prefill(
+            freqs, np.full(k, float(t[i])), np.full(k, float(c[i]))
+        )
+        np.testing.assert_array_equal(mat[i], ref)
+
+
+# ---------------------------------------------------------------------------
+# EcoFreq select memo
+# ---------------------------------------------------------------------------
+
+
+def _random_batches(rng, n):
+    """A replay drawing from a small state pool so the memo gets hits."""
+    pool_q = rng.integers(1, 500, 12)
+    pool_kv = pool_q * rng.integers(100, 1600, 12)
+    pool_t = rng.integers(16, 4096, 8)
+    out = []
+    for _ in range(n):
+        if rng.random() < 0.3:
+            i = int(rng.integers(0, len(pool_t)))
+            b = BatchInfo(
+                "prefill", n_tok=int(pool_t[i]),
+                max_waiting_s=float(rng.choice([0.0, 0.1, 0.4])),
+            )
+        else:
+            i = int(rng.integers(0, len(pool_q)))
+            b = BatchInfo(
+                "decode", n_req=int(pool_q[i]), n_kv=int(pool_kv[i])
+            )
+        st = SystemState(has_waiting=bool(rng.random() < 0.1))
+        out.append((st, b))
+    return out
+
+
+def test_select_memo_bit_identical_to_memoless_twin(pred):
+    em = EcoFreq(A100.freq_levels_5, pred, 0.6, 0.06, select_memo=True)
+    eu = EcoFreq(A100.freq_levels_5, pred, 0.6, 0.06, select_memo=False)
+    for st, b in _random_batches(np.random.default_rng(21), 400):
+        assert em.select(st, b) == eu.select(st, b)
+    assert em.select_memo_hits > 0
+    assert eu.select_memo_hits == 0  # disabled twin never touches it
+
+
+def test_select_memo_invalidated_by_online_adaptation(hw):
+    """``continue_fit`` bumps the model version; the next select must
+    re-scan (miss) and agree with a memo-disabled twin on the *mutated*
+    predictor, not return the stale pick."""
+    p = EcoPred(A100.freq_levels_5, adapt_every=16).offline_profile(
+        hw, n_prefill=400, n_decode=1200, noise_sigma=0.0
+    )
+    em = EcoFreq(A100.freq_levels_5, p, 0.6, 0.06, select_memo=True)
+    eu = EcoFreq(A100.freq_levels_5, p, 0.6, 0.06, select_memo=False)
+    st, b = SystemState(), BatchInfo("decode", n_req=64, n_kv=64000)
+    assert em.select(st, b) == eu.select(st, b)
+    assert em.select(st, b) == eu.select(st, b)  # second call: memo hit
+    assert em.select_memo_hits == 1
+    v0 = p.version
+    rng = np.random.default_rng(3)
+    for _ in range(p.adapt_every):  # trips one background adaptation
+        p.record_decode(
+            1005.0, int(rng.integers(1, 200)),
+            int(rng.integers(1000, 200000)), float(rng.uniform(0.01, 0.1)),
+        )
+    assert p.version > v0
+    misses0 = em.select_memo_misses
+    assert em.select(st, b) == eu.select(st, b)
+    assert em.select_memo_misses == misses0 + 1  # stale memo was dropped
+
+
+# ---------------------------------------------------------------------------
+# Router memos
+# ---------------------------------------------------------------------------
+
+
+def _random_views(rng, n_inst):
+    pool_q = rng.integers(1, 300, 8)
+    return [
+        InstanceView(
+            i,
+            int(pool_q[int(rng.integers(0, len(pool_q)))]),
+            int(pool_q[int(rng.integers(0, len(pool_q)))]) * 600,
+            latency_bias_s=float(rng.choice([0.0, 0.0, 0.02])),
+        )
+        for i in range(n_inst)
+    ]
+
+
+def test_ecoroute_memo_parity_and_hits(pred):
+    ef = EcoFreq(A100.freq_levels_5, pred, 0.6, 0.06)
+    em = EcoRoute(ef, delta=500.0, memo=True)
+    eu = EcoRoute(ef, delta=500.0, memo=False)
+    rng = np.random.default_rng(31)
+    for _ in range(250):
+        views = _random_views(rng, 3)
+        req = RouteRequest(int(rng.choice([256, 600, 1024])))
+        assert em.route(views, req) == eu.route(views, req)
+    # deterministic repeat: the same route state twice must hit the memo
+    views = [InstanceView(0, 10, 6000), InstanceView(1, 20, 12000)]
+    hits0 = em.route_memo_hits
+    for _ in range(2):
+        assert em.route(views, RouteRequest(600)) \
+            == eu.route(views, RouteRequest(600))
+    assert em.route_memo_hits > hits0
+
+
+def test_energy_aware_route_memo_parity(spred):
+    ef = EcoFreq(A100.freq_levels_5, spred, 0.6, 0.06)
+    hwm = HardwareModel(MODEL, A100)
+    profiles = {
+        i: InstanceProfile(A100, ef, hwm) for i in range(3)
+    }
+    em = EnergyAwareEcoRoute(profiles, 0.06, memo=True)
+    eu = EnergyAwareEcoRoute(profiles, 0.06, memo=False)
+    rng = np.random.default_rng(41)
+    for _ in range(200):
+        views = _random_views(rng, 3)
+        if rng.random() < 0.4:  # speculative instances in the mix
+            for v in views:
+                v.spec_k, v.accept_ewma = 2, 0.7
+        req = RouteRequest(
+            int(rng.choice([256, 600])),
+            itl_slo_s=float(rng.choice([0.06, 0.12])),
+        )
+        assert em.route(views, req) == eu.route(views, req)
+    # exact-tuple keys: a verbatim repeat of the same state must hit
+    views = [InstanceView(i, 10 + i, (10 + i) * 600) for i in range(3)]
+    hits0 = em.route_memo_hits
+    for _ in range(2):
+        assert em.route(views, RouteRequest(600)) \
+            == eu.route(views, RouteRequest(600))
+    assert em.route_memo_hits > hits0
+
+
+def test_energy_aware_whatifs_match_scalar(spred):
+    """The grouped matrix ``_whatifs`` must reproduce the scalar
+    ``_whatif`` loop exactly, spec and non-spec rows interleaved."""
+    ef = EcoFreq(A100.freq_levels_5, spred, 0.6, 0.06)
+    hwm = HardwareModel(MODEL, A100)
+    p = InstanceProfile(A100, ef, hwm)
+    er = EnergyAwareEcoRoute({0: p}, 0.06)
+    rng = np.random.default_rng(51)
+    rows = []
+    for _ in range(30):
+        sk = int(rng.choice([0, 0, 2, 4]))
+        q = int(rng.integers(1, 300))
+        rows.append((
+            p, q, q * int(rng.integers(100, 1200)),
+            float(rng.choice([0.0, 0.02])),
+            float(rng.choice([0.06, 0.12])), sk,
+        ))
+    batched = er._whatifs(rows)
+    for row, got in zip(rows, batched):
+        pr, q, c, bias, slo, sk = row
+        ref = er._whatif(pr, q, c, bias, slo_s=slo, spec_k=sk)
+        assert got == ref
+    assert er.route_batch_rows >= len(rows)
+    assert er.route_batch_queries < len(rows)  # they actually grouped
+
+
+# ---------------------------------------------------------------------------
+# Full-cluster replay: decision_memo on == off, end to end
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def cpred():
+    return build_predictor(MODEL, A100, A100.freq_levels_2,
+                           kv_cap=400_000)
+
+
+def _cluster_cfg(cpred, **kw):
+    base = dict(
+        model=MODEL, chip=A100, n_prefill=2, n_decode=2,
+        slo_ttft_s=0.6, slo_itl_s=0.06, predictor=cpred,
+        kv_capacity_tokens=400_000, online_adapt=False, seed=3,
+        policy="voltana",
+    )
+    base.update(kw)
+    return ClusterConfig(**base)
+
+
+def test_cluster_memo_on_equals_off(cpred):
+    runs = {}
+    for memo in (True, False):
+        reqs = poisson_workload(SHAREGPT, 8.0, 30.0, seed=5)
+        cl = PDCluster(_cluster_cfg(cpred, decision_memo=memo))
+        m = cl.run(reqs)
+        runs[memo] = (m, reqs, cl)
+    m1, r1, cl1 = runs[True]
+    m0, r0, _ = runs[False]
+    assert m1.energy_j() == m0.energy_j()
+    for a, b in zip(r1, r0):
+        assert (a.t_first_token, a.t_finish, a.tokens_out,
+                a.decode_instance) \
+            == (b.t_first_token, b.t_finish, b.tokens_out,
+                b.decode_instance)
+    # and the memoized run actually exercised the memo
+    hits = 0
+    for eng in list(cl1.prefill) + list(cl1.decode):
+        c = getattr(eng.controller, "base", eng.controller)
+        hits += getattr(c, "select_memo_hits", 0)
+    assert hits > 0
+
+
+# ---------------------------------------------------------------------------
+# Loop profiler: live instrumentation survives mid-run scale-out
+# ---------------------------------------------------------------------------
+
+
+def test_loopprof_covers_engines_spawned_mid_run(cpred):
+    reqs = poisson_workload(SHAREGPT, 10.0, 30.0, seed=11)
+    cl = PDCluster(_cluster_cfg(cpred))
+    cl.schedule_scale_out(5.0, "decode")
+    prof = loopprof.install(cl)
+    n0 = len(prof._engines)
+    m = cl.run(reqs)
+    assert m.finished_frac() == 1.0
+    assert len(cl.decode) == 3
+    assert len(prof._engines) == n0 + 1  # the spawn hook fired
+    # every backend iteration anywhere — including on the engine spawned
+    # mid-run — went through the profiler's wrappers
+    engines = list(cl.prefill) + list(cl.decode) + list(cl.hybrid)
+    assert prof.iterations == sum(e.backend.n_iters for e in engines)
+    bd = prof.breakdown(wall_s=1.0)
+    assert bd["select_memo_hit_rate"] > 0.0
+    assert bd["route_batch_rows_avg"] >= 1.0
+    assert bd["pipeline_depth_avg"] == 0.0  # Sim: nothing in flight

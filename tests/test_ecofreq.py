@@ -98,3 +98,88 @@ def test_straggler_bias_raises_frequency(pred):
                    latency_bias_s=0.05)
     b = BatchInfo("decode", n_req=64, n_kv=64000)
     assert slow.select(SystemState(), b) >= fast.select(SystemState(), b)
+
+
+def test_powercap_closed_form_across_chip_zoo():
+    """Cap invariant + equivalence with the retired 50-step bisection,
+    for every chip in the zoo and caps from below-idle to above-max."""
+    for chip in P.CHIPS.values():
+        for frac in (-0.1, 0.2, 0.45, 0.7, 0.85, 0.97, 1.0, 1.2):
+            cap = chip.p_idle + frac * (chip.p_elec_max - chip.p_idle)
+            pc = PowerCapFreq(chip, cap)
+            assert chip.f_min <= pc.f_cap <= chip.f_max
+            # worst-case draw respects the cap wherever it is reachable
+            if P.power(chip, chip.f_min, 1.0) <= cap:
+                assert P.power(chip, pc.f_cap, 1.0) <= cap
+            # reference: the bisection this closed form replaced
+            lo, hi = chip.f_min, chip.f_max
+            if P.power(chip, hi, 1.0) <= cap:
+                ref = hi
+            else:
+                for _ in range(50):
+                    mid = 0.5 * (lo + hi)
+                    if P.power(chip, mid, 1.0) <= cap:
+                        lo = mid
+                    else:
+                        hi = mid
+                ref = lo
+            assert abs(pc.f_cap - ref) < 1e-3, (chip.name, cap)
+
+
+def test_interval_redecides_exactly_at_boundary(pred):
+    """Holds strictly inside the window, re-decides the moment
+    ``now - last >= interval_s`` — with the select memo on and off."""
+    b_small = BatchInfo("decode", n_req=2, n_kv=2000)
+    b_big = BatchInfo("decode", n_req=500, n_kv=800000)
+    for memo in (True, False):
+        ef2 = EcoFreq(A100.freq_levels_5, pred, 0.6, 0.06,
+                      select_memo=memo)
+        ic = IntervalFreq(ef2, interval_s=5.0)
+        f0 = ic.select(SystemState(now_s=0.0), b_small)
+        assert ic.select(SystemState(now_s=4.999), b_big) == f0
+        assert ic.select(SystemState(now_s=5.0), b_big) \
+            == max(ef2.freq_options)
+
+
+def test_interval_invalidate_forwards_but_keeps_held(pred):
+    """invalidate() drops the wrapped EcoFreq's memo yet keeps the held
+    window decision — dropping it would re-decide off-boundary and
+    diverge from a memo-disabled run."""
+    ef2 = EcoFreq(A100.freq_levels_5, pred, 0.6, 0.06, select_memo=True)
+    ic = IntervalFreq(ef2, interval_s=5.0)
+    b_small = BatchInfo("decode", n_req=2, n_kv=2000)
+    f0 = ic.select(SystemState(now_s=0.0), b_small)
+    assert ef2._memo, "select never populated the memo"
+    ic.invalidate()
+    assert not ef2._memo
+    b_big = BatchInfo("decode", n_req=500, n_kv=800000)
+    assert ic.select(SystemState(now_s=1.0), b_big) == f0
+
+
+def test_interval_with_memo_matches_memoless_twin(pred):
+    """IntervalFreq over a memoized EcoFreq replays bit-identically to
+    one over a memo-disabled EcoFreq across a random state sweep."""
+    em = IntervalFreq(
+        EcoFreq(A100.freq_levels_5, pred, 0.6, 0.06, select_memo=True),
+        interval_s=2.0,
+    )
+    eu = IntervalFreq(
+        EcoFreq(A100.freq_levels_5, pred, 0.6, 0.06, select_memo=False),
+        interval_s=2.0,
+    )
+    rng = np.random.default_rng(7)
+    t = 0.0
+    for _ in range(300):
+        t += float(rng.uniform(0.05, 0.9))
+        b = BatchInfo("decode", n_req=int(rng.integers(1, 500)),
+                      n_kv=int(rng.integers(100, 800000)))
+        st = SystemState(now_s=t, has_waiting=bool(rng.random() < 0.1))
+        assert em.select(st, b) == eu.select(st, b)
+    # two boundary crossings with one identical state: the second base
+    # re-decision must come from the memo
+    b = BatchInfo("decode", n_req=8, n_kv=5000)
+    hits0 = em.base.select_memo_hits
+    for dt in (3.0, 6.0):
+        st = SystemState(now_s=t + dt)
+        assert em.select(st, b) == eu.select(st, b)
+    assert em.base.select_memo_hits > hits0

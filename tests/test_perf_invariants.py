@@ -87,7 +87,7 @@ def _workload(rc, seed=31):
     return attach_tokens(reqs, rc.vocab_size, seed=32)
 
 
-def _mixed_cfg(rc, rparams, spec_pred, draft):
+def _mixed_cfg(rc, rparams, spec_pred, draft, pipeline_depth=1):
     """Chunked prefill + SLO tiers + paged KV + speculative decode over
     the real backend — every jit entry point in one trace."""
     dc, dparams = draft
@@ -101,6 +101,7 @@ def _mixed_cfg(rc, rparams, spec_pred, draft):
         backend_factory=make_real_backend_factory(
             rc, rparams, slots=8, max_len=128, paged=True, page_size=16,
             spec_k=2, draft_cfg=dc, draft_params=dparams,
+            pipeline_depth=pipeline_depth,
         ),
     )
 
@@ -239,6 +240,54 @@ def test_donated_stream_is_near_argmax_of_reference(rc, rparams,
             pos = pos + 1
 
 
+def test_pipeline_depth_parity(rc, rparams, spec_pred, draft):
+    """Depth-K async dispatch is a host-side reordering only: the same
+    mixed workload at K ∈ {1, 2, 4} must emit bit-identical token
+    streams, identical timing/energy, and zero steady-state recompiles
+    (the ring changes *when* device results are read, never the shapes
+    that were dispatched)."""
+    jitcache.clear()
+    runs = {}
+    for depth in (1, 1, 2, 4):  # first depth-1 run warms the jit cache
+        reqs = _workload(rc)
+        cfg = _mixed_cfg(rc, rparams, spec_pred, draft,
+                         pipeline_depth=depth)
+        cl = PDCluster(cfg)
+        m = cl.run(reqs)
+        assert m.finished_frac() == 1.0
+        runs[depth] = (reqs, m, cl)
+    ref_reqs, ref_m, _ = runs[1]
+    assert ref_m.recompiles == 0  # K=1 itself is warm by now
+    for depth in (2, 4):
+        reqs, m, cl = runs[depth]
+        assert m.recompiles == 0, (
+            f"depth {depth} recompiled — the ring changed a shape"
+        )
+        assert m.energy_j() == ref_m.energy_j()
+        for rr, rd in zip(ref_reqs, reqs):
+            assert rr.output_tokens == rd.output_tokens
+            assert (rr.t_first_token, rr.t_finish, rr.decode_instance) \
+                == (rd.t_first_token, rd.t_finish, rd.decode_instance)
+        for eng in cl.decode:
+            assert eng.backend.pipeline_depth == depth
+            assert not eng.backend._ring  # end-of-run flush drained it
+    # at depth 4 the ring actually carried multiple iterations in flight
+    _, _, cl4 = runs[4]
+    disp = sum(e.backend.pipeline_dispatches for e in cl4.decode)
+    occ = sum(e.backend.pipeline_depth_sum for e in cl4.decode)
+    assert disp > 0
+    assert occ / disp > 1.0, "depth-4 ring never got past one in flight"
+
+
+def test_pipeline_depth_validation(rc, rparams):
+    from repro.core.hwmodel import HardwareModel
+
+    hw = HardwareModel(MODEL, A100)
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        RealBackend(hw, rc, rparams, slots=4, max_len=64,
+                    pipeline_depth=0)
+
+
 def test_gbtree_memo_is_exact():
     """predict_binned's per-row memo returns bit-identical values to the
     uncached ensemble walk, across fit -> predict -> continue_fit."""
@@ -367,3 +416,53 @@ def test_bench_gate_trace_replay_section_rules():
     cur = {**_serving(), "trace_replay": {"scenarios": {}, "sweeps": {}}}
     fails, _ = G.gate_trace_replay(cur, _REPLAY_BASE)
     assert any("scenario missing" in f for f in fails)
+
+
+def _bd(select=0.30, route=0.10, hit=0.98, wall=1.0):
+    return {"event_loop_breakdown": {
+        "select_s": select, "route_s": route, "wall_s": wall,
+        "select_memo_hit_rate": hit,
+    }}
+
+
+_BD_BASE = {**_BASE, **_bd()}
+
+
+def test_bench_gate_breakdown_shares_and_hit_floor():
+    G = _load_bench_gate()
+    # same shares at a different machine speed: OK (shares, not seconds)
+    fails, rows = G.gate_breakdown(
+        _bd(select=0.15, route=0.05, wall=0.5), _BD_BASE)
+    assert not fails
+    assert all(r["status"] == "OK" for r in rows)
+    # select share creeping back up past tolerance + 2pp slack: FAIL
+    fails, rows = G.gate_breakdown(_bd(select=0.40), _BD_BASE)
+    assert any("select_share" in f for f in fails)
+    assert any("control_share" in f for f in fails)
+    # memo hit rate collapsing under 90% of baseline: FAIL
+    fails, _ = G.gate_breakdown(_bd(hit=0.5), _BD_BASE)
+    assert any("select_memo_hit_rate" in f for f in fails)
+
+
+def test_bench_gate_breakdown_section_rules():
+    G = _load_bench_gate()
+    # pre-round-2 baseline without breakdown rows: nothing to gate
+    assert G.gate_breakdown(_bd(), _BASE) == ([], [])
+    # baseline has it but the current run silently dropped it: FAIL
+    fails, _ = G.gate_breakdown(_serving(), _BD_BASE)
+    assert any("missing" in f for f in fails)
+
+
+def test_bench_gate_rebaseline_adopts_breakdown():
+    G = _load_bench_gate()
+    cur = {**_serving(ips=2000.0), **_bd(select=0.05, route=0.02)}
+    new = G.rebaseline(cur, _BD_BASE)
+    assert new["event_loop_breakdown"]["select_s"] == 0.05
+    assert G.gate_breakdown(cur, new) == ([], [
+        {"field": "select_share", "baseline": 0.05, "current": 0.05,
+         "status": "OK"},
+        {"field": "control_share", "baseline": 0.07, "current": 0.07,
+         "status": "OK"},
+        {"field": "select_memo_hit_rate", "baseline": 0.98,
+         "current": 0.98, "status": "OK"},
+    ])

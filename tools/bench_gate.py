@@ -13,6 +13,12 @@ things worse:
   *any* change means the control plane changed behaviour, not just speed;
 * nonzero steady-state ``recompiles`` (the pure-Sim reference scenario
   touches no jit entry point, and warmed real backends must not either);
+* decision-plane regressions in ``event_loop_breakdown``: the EcoFreq
+  ``select_s`` share of the instrumented wall (and the combined
+  select+route control share) must not regress more than ``--tolerance``
+  relative over the baseline share, and the ``select_memo_hit_rate``
+  must stay within 90% of its baselined value (skipped when the
+  committed baseline predates the breakdown rows);
 * scenario-matrix drift in the ``trace_replay`` section: a scenario
   dropping its golden pins (``pin_ok``), its exact ``output_tokens``
   count, or a QPS sweep's detected saturation knee moving off the
@@ -100,6 +106,66 @@ def gate(serving: dict, baseline: dict,
     return failures, rows
 
 
+def gate_breakdown(serving: dict, baseline: dict,
+                   tolerance: float = 0.10) -> Tuple[List[str], List[Dict]]:
+    """Decision-plane gate over ``event_loop_breakdown``.
+
+    Phases are compared as *shares* of the instrumented wall (absolute
+    seconds track machine speed; shares track where the loop spends its
+    time).  A share may regress at most ``tolerance`` relative plus a
+    small absolute slack — sub-percent shares jitter run to run — and
+    the select-memo hit rate has a 0.9× floor.  Baselines without
+    breakdown rows (pre round-2) skip this gate."""
+    failures: List[str] = []
+    rows: List[Dict] = []
+    base = baseline.get("event_loop_breakdown")
+    if not base:
+        return failures, rows
+    cur = serving.get("event_loop_breakdown")
+    if not cur:
+        return (["event_loop_breakdown: missing from BENCH_serving.json"],
+                rows)
+
+    def share(d: dict, *keys: str):
+        w = d.get("wall_s") or 0.0
+        return sum(d.get(k) or 0.0 for k in keys) / w if w else None
+
+    checks = [
+        ("select_share", share(cur, "select_s"), share(base, "select_s")),
+        ("control_share", share(cur, "select_s", "route_s"),
+         share(base, "select_s", "route_s")),
+    ]
+    for name, c, b in checks:
+        row = {"field": name,
+               "baseline": None if b is None else round(b, 4),
+               "current": None if c is None else round(c, 4)}
+        if c is None or b is None:
+            failures.append(f"breakdown/{name}: share not computable "
+                            "(wall_s missing)")
+            row["status"] = "MISSING"
+        elif c > b * (1.0 + tolerance) + 0.02:
+            failures.append(
+                f"breakdown/{name}: {c:.4f} regressed past baseline "
+                f"{b:.4f} (>{tolerance:.0%} + 2pp slack)")
+            row["status"] = "FAIL"
+        else:
+            row["status"] = "OK"
+        rows.append(row)
+
+    b_hit = base.get("select_memo_hit_rate")
+    c_hit = cur.get("select_memo_hit_rate")
+    if b_hit:
+        row = {"field": "select_memo_hit_rate",
+               "baseline": b_hit, "current": c_hit, "status": "OK"}
+        if c_hit is None or c_hit < 0.9 * b_hit:
+            failures.append(
+                f"breakdown/select_memo_hit_rate: {c_hit} fell under "
+                f"90% of baseline {b_hit}")
+            row["status"] = "FAIL"
+        rows.append(row)
+    return failures, rows
+
+
 def gate_trace_replay(serving: dict,
                       baseline: dict) -> Tuple[List[str], List[Dict]]:
     """Scenario-matrix gate: every baselined scenario must still hold
@@ -153,6 +219,13 @@ def gate_trace_replay(serving: dict,
     return failures, rows
 
 
+def render_breakdown_table(rows: List[Dict],
+                           markdown: bool = False) -> str:
+    cols = [("field", "breakdown field"), ("baseline", "baseline"),
+            ("current", "current"), ("status", "status")]
+    return _render(rows, cols, markdown)
+
+
 def render_replay_table(rows: List[Dict], markdown: bool = False) -> str:
     cols = [("scenario", "scenario"),
             ("energy_per_token_mj", "mJ/token"),
@@ -197,6 +270,9 @@ def rebaseline(serving: dict, baseline: dict) -> dict:
         variant: {k: row[k] for k in BASELINE_FIELDS if k in row}
         for variant, row in sorted(serving.get("event_loop", {}).items())
     }
+    bd = serving.get("event_loop_breakdown")
+    if bd:
+        new["event_loop_breakdown"] = dict(bd)
     replay = serving.get("trace_replay")
     if replay:
         new["trace_replay"] = {
@@ -246,9 +322,14 @@ def main(argv=None) -> int:
         return 0
 
     failures, rows = gate(serving, baseline, args.tolerance)
+    bd_failures, bd_rows = gate_breakdown(serving, baseline,
+                                          args.tolerance)
+    failures += bd_failures
     replay_failures, replay_rows = gate_trace_replay(serving, baseline)
     failures += replay_failures
     print(render_table(rows))
+    if bd_rows:
+        print("\n" + render_breakdown_table(bd_rows))
     if replay_rows:
         print("\n" + render_replay_table(replay_rows))
     summary = os.environ.get("GITHUB_STEP_SUMMARY")
@@ -256,6 +337,10 @@ def main(argv=None) -> int:
         with open(summary, "a") as f:
             f.write("### Event-loop perf gate\n\n")
             f.write(render_table(rows, markdown=True) + "\n\n")
+            if bd_rows:
+                f.write("### Decision-plane gate\n\n")
+                f.write(render_breakdown_table(bd_rows, markdown=True)
+                        + "\n\n")
             if replay_rows:
                 f.write("### Scenario-matrix gate\n\n")
                 f.write(render_replay_table(replay_rows, markdown=True)

@@ -111,6 +111,15 @@ def main() -> int:
            ),
            ValueError, "tp")
 
+    # --- unprofiled verify model must raise, not assert ---------------
+    from repro.core.ecopred import EcoPred
+
+    expect("unprofiled verify model",
+           lambda: EcoPred((1000.0, 1400.0)).predict_verify(
+               1400.0, 4.0, 1000.0, 4.0
+           ),
+           RuntimeError, "ensure_verify_profile")
+
     mode = "-O (asserts stripped)" if not __debug__ else "debug"
     if FAILURES:
         print(f"check_opt_invariants [{mode}]: FAIL")

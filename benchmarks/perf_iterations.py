@@ -135,7 +135,8 @@ def event_loop_benchmark(rate_rps: float = 6.0, duration_s: float = 60.0,
 
 
 def real_mesh_benchmark(tp: int = 1, rate_rps: float = 2.5,
-                        duration_s: float = 30.0, seed: int = 0) -> dict:
+                        duration_s: float = 30.0, seed: int = 0,
+                        pipeline_depth: int = 1) -> dict:
     """Wall-clock the **real** (JAX-executing) event loop on a tp-wide
     mesh slice — the ``real_mesh_tp1`` gate row.  A reduced-model paged
     P/D cluster runs the scenario twice with one shared backend factory:
@@ -148,7 +149,11 @@ def real_mesh_benchmark(tp: int = 1, rate_rps: float = 2.5,
     same fingerprint regardless of host device count, and the virtual
     clock prices the same A100 scenario as the Sim rows — the
     ``energy_per_token_j`` golden pin must not drift when the mesh path
-    changes."""
+    changes.
+
+    ``pipeline_depth`` sets each real backend's async-dispatch window
+    (K ∈ {1, 2, 4} is the standing sweep in ``BENCH_serving.json``;
+    the serving default stays K=1 until real hardware says otherwise)."""
     import dataclasses
     import time
 
@@ -167,6 +172,7 @@ def real_mesh_benchmark(tp: int = 1, rate_rps: float = 2.5,
     factory = make_real_backend_factory(
         rc, rparams, slots=8, max_len=128, paged=True, page_size=16,
         tp=tp, devices=jax.devices()[:tp],
+        pipeline_depth=pipeline_depth,
     )
     tiny = DatasetDist(
         "tiny",
@@ -184,7 +190,7 @@ def real_mesh_benchmark(tp: int = 1, rate_rps: float = 2.5,
             policy="voltana", online_adapt=False, predictor_bank={},
             seed=seed, paged=True, kv_page_size=16,
             prefill_chunk_tokens=32, decode_max_running=8,
-            noise_sigma=0.0,
+            noise_sigma=0.0, backend_factory=factory,
         )
         cluster = PDCluster(cfg)
         t0 = time.perf_counter()
@@ -201,6 +207,7 @@ def real_mesh_benchmark(tp: int = 1, rate_rps: float = 2.5,
     return {
         "tp": tp,
         "backend": "real",
+        "pipeline_depth": pipeline_depth,
         "requests": len(m.requests),
         "output_tokens": m.output_tokens(),
         "iterations": iters,

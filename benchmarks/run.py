@@ -91,6 +91,14 @@ def _write_bench_serving(module_status: dict) -> str:
         "event_loop_breakdown": event_loop_benchmark(
             paged=False, predictor_bank=bank, breakdown=True
         ).get("breakdown"),
+        # standing depth-K data for the K>1 default question (ROADMAP):
+        # the same real tp=1 scenario with the async-dispatch ring at
+        # each depth; k1 is the headline real_mesh_tp1 row itself
+        "pipeline_depth_sweep": {
+            "k1": event_loop["real_mesh_tp1"],
+            "k2": real_mesh_benchmark(tp=1, pipeline_depth=2),
+            "k4": real_mesh_benchmark(tp=1, pipeline_depth=4),
+        },
         "modules": module_status,
     }
     replay_path = os.path.join(os.path.dirname(__file__), "results",

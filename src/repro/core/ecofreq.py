@@ -48,7 +48,7 @@ def expected_emitted(accept_rate: float, k: int) -> float:
     return out
 
 
-@dataclass
+@dataclass(slots=True)
 class BatchInfo:
     """What the engine sends the controller when scheduling a batch (B)."""
 
@@ -75,7 +75,7 @@ class BatchInfo:
     emitted_per_iter: float = 1.0
 
 
-@dataclass
+@dataclass(slots=True)
 class SystemState:
     """Instance system state (M): queue + clock."""
 

@@ -106,14 +106,20 @@ class EcoPred:
         n_cached = rng.integers(0, r.max_cached_tokens + 1, n_prefill)
         n_cached[: n_prefill // 2] = 0
         f_p = freqs[rng.integers(0, len(freqs), n_prefill)]
-        y_p = np.array(
-            [
-                hw.prefill_chunk_time(int(t), int(c), float(f))
-                if c > 0
-                else hw.prefill_time(int(t), float(f))
-                for t, c, f in zip(n_tok, n_cached, f_p)
-            ]
-        )
+        # one array-native pricing call per lane kind (chunked vs whole
+        # prompt) instead of n_prefill scalar oracle calls — bit-identical
+        # to the scalar loop by the *_iter_batch contract
+        y_p = np.empty(n_prefill)
+        chunked = n_cached > 0
+        if chunked.any():
+            y_p[chunked] = hw.prefill_chunk_iter_batch(
+                n_tok[chunked], n_cached[chunked], 1, f_p[chunked]
+            ).time_s
+        whole = ~chunked
+        if whole.any():
+            y_p[whole] = hw.prefill_iter_batch(
+                n_tok[whole], None, f_p[whole]
+            ).time_s
         y_p *= np.exp(rng.normal(0.0, noise_sigma, n_prefill))
         self.prefill_model.fit(self._pfeat(f_p, n_tok, n_cached), y_p)
 
@@ -125,12 +131,7 @@ class EcoPred:
                                 np.maximum(n_req, 1), n_decode),
         ).astype(int)
         f_d = freqs[rng.integers(0, len(freqs), n_decode)]
-        y_d = np.array(
-            [
-                hw.decode_time(int(q), int(k), float(f))
-                for q, k, f in zip(n_req, n_kv, f_d)
-            ]
-        )
+        y_d = hw.decode_iter_batch(n_req, n_kv, f_d).time_s.copy()
         y_d *= np.exp(rng.normal(0.0, noise_sigma, n_decode))
         Xd = np.stack([f_d, n_req.astype(float), n_kv.astype(float)], axis=1)
         cut = int(0.9 * n_decode)
@@ -171,13 +172,9 @@ class EcoPred:
         ).astype(int)
         f_v = freqs[rng.integers(0, len(freqs), n_samples)]
         k_v = ks[rng.integers(0, len(ks), n_samples)]
-        y = np.array(
-            [
-                hw.spec_decode_time(int(q), int(c), int(k), float(f),
-                                    draft_frac)
-                for q, c, k, f in zip(n_req, n_kv, k_v, f_v)
-            ]
-        )
+        y = hw.spec_decode_iter_batch(
+            n_req, n_kv, k_v, draft_frac, f_v
+        ).time_s.copy()
         y *= np.exp(rng.normal(0.0, noise_sigma, n_samples))
         X = np.stack(
             [f_v, n_req.astype(float), n_kv.astype(float),
@@ -270,6 +267,51 @@ class EcoPred:
                 self.decode_model.predict(X[plain, :3]), 0.0
             )
         return out
+
+    # ------------------------------------------------------------------
+    # Scalar fast paths (the per-event straggler-bias re-predict at
+    # _D_DONE is one state, one frequency — array plumbing dominated the
+    # model walk).  Bin the three/four features with ``bisect`` and
+    # answer straight from the GBTree row memo; any miss falls through to
+    # the vectorized path, which fills the memo.  Bit-identical to
+    # ``float(predict_*(...)[0])`` because GBTree predictions are a pure
+    # function of the binned row.
+    # ------------------------------------------------------------------
+    def predict_decode_scalar(self, f: float, n_req, n_kv) -> float:
+        m = self.decode_model
+        if m.trees:
+            e = self._edges(m, "d")
+            v = m._memo.get(bytes((
+                bisect_right(e[0], float(f)),
+                bisect_right(e[1], float(n_req)),
+                bisect_right(e[2], float(n_kv)),
+            )))
+            if v is not None:
+                m.memo_hits += 1
+                return float(v) if v > 0.0 else 0.0
+        return float(self.predict_decode(f, n_req, n_kv)[0])
+
+    def predict_verify_scalar(self, f: float, n_req, n_kv, k) -> float:
+        if self.verify_model is None:
+            raise RuntimeError(
+                "verify model not profiled — call ensure_verify_profile() "
+                "(the cluster does this when spec_decode=True)"
+            )
+        if float(k) == 0.0:  # k==0 rides the calibrated decode fit
+            return self.predict_decode_scalar(f, n_req, n_kv)
+        m = self.verify_model
+        if m.trees:
+            e = self._edges(m, "v")
+            v = m._memo.get(bytes((
+                bisect_right(e[0], float(f)),
+                bisect_right(e[1], float(n_req)),
+                bisect_right(e[2], float(n_kv)),
+                bisect_right(e[3], float(k)),
+            )))
+            if v is not None:
+                m.memo_hits += 1
+                return float(v) if v > 0.0 else 0.0
+        return float(self.predict_verify(f, n_req, n_kv, k)[0])
 
     # ------------------------------------------------------------------
     # Matrix what-ifs (paper §V-E: "multiple queries ... are batched

@@ -62,7 +62,7 @@ def _hyp_emitted(v: "InstanceView", req: "RouteRequest") -> float:
     return expected_emitted(p, v.spec_k)
 
 
-@dataclass
+@dataclass(slots=True)
 class InstanceView:
     """Router-visible state of one decode instance (m_i)."""
 
@@ -87,7 +87,7 @@ class InstanceView:
     accept_ewma: Optional[float] = None
 
 
-@dataclass
+@dataclass(slots=True)
 class RouteRequest:
     """What the router knows about the request being placed."""
 

@@ -146,43 +146,102 @@ class SimBackend:
     """Latency/energy from the hardware model with measurement noise."""
 
     def __init__(self, hw: HardwareModel, noise_sigma: float = 0.02,
-                 seed: int = 0, slow_factor: float = 1.0):
+                 seed: int = 0, slow_factor: float = 1.0,
+                 batch_pricing: bool = False):
         self.hw = hw
         self.noise_sigma = noise_sigma
         self.slow_factor = slow_factor  # straggler injection (>1 == slow)
+        self.batch_pricing = batch_pricing  # price via the array twins
         self._rng = np.random.default_rng(seed)
         self.n_iters = 0  # total iterations executed (perf telemetry)
+        # per-call Generator.normal() + scalar exp dominate pricing
+        # overhead, so noise factors are precomputed in blocks: the
+        # generator fills a block from the same bit stream it would
+        # consume one draw at a time, and vectorized np.exp is verified
+        # bit-equal to the scalar ufunc across the full domain here
+        # (tests/test_hwmodel_batch.py pins both), so the noise sequence
+        # is bit-identical to per-call draws
+        self._noise_blk = np.empty(0)
+        self._noise_i = 0
+        self._tab = hw._table()  # pricing table, bound once (hot path)
+        self._dcost = self._tab._dc_fn  # specialized decode pricer
+        self._tp = hw.tp
 
     def _noise(self) -> float:
         if self.noise_sigma <= 0:
             return self.slow_factor
-        return self.slow_factor * float(
-            np.exp(self._rng.normal(0.0, self.noise_sigma))
-        )
+        i = self._noise_i
+        blk = self._noise_blk
+        if i >= blk.shape[0]:
+            blk = np.exp(self._rng.normal(0.0, self.noise_sigma,
+                                          size=1024))
+            self._noise_blk = blk
+            i = 0
+        self._noise_i = i + 1
+        return self.slow_factor * float(blk[i])
 
     def prefill_iter(self, reqs: List[Request], n_tok: int, f: float
                      ) -> IterCost:
         self.n_iters += 1
         avg_ctx = n_tok / max(1, len(reqs))
-        c = self.hw.prefill_iter(n_tok, avg_ctx, f)
-        t = c.time_s * self._noise()
-        return IterCost(t, c.power_w, c.power_w * t, c.f_effective, c.theta)
+        if self.batch_pricing:
+            c = self.hw.prefill_iter_batch([n_tok], [avg_ctx], [f]).row(0)
+            t = c.time_s * self._noise()
+            return IterCost(t, c.power_w, c.power_w * t,
+                            c.f_effective, c.theta)
+        # flattened hw.prefill_iter — same operations, same order as the
+        # layered path (see decode_iter), one noise draw either way
+        noise = self._noise()
+        tab = self._tab
+        if n_tok <= 0:
+            return IterCost(0.0, tab.p_idle * self._tp, 0.0, f, 0.0)
+        time_s, p, _e, f_eff, theta = tab.cost(
+            *tab.prefill_terms(n_tok, float(avg_ctx)), f)
+        p *= self._tp
+        t = time_s * noise
+        return IterCost(t, p, p * t, f_eff, theta)
 
     def prefill_chunk(self, reqs: List[Request], takes: List[int],
                       n_new: int, n_ctx: int, f: float) -> IterCost:
         """Partial-prefill iteration: ``n_new`` fresh tokens against
         ``n_ctx`` resident prefix tokens (cache hits + earlier chunks)."""
         self.n_iters += 1
-        c = self.hw.prefill_chunk_iter(n_new, n_ctx, max(1, len(reqs)), f)
+        if self.batch_pricing:
+            c = self.hw.prefill_chunk_iter_batch(
+                [n_new], [n_ctx], [max(1, len(reqs))], [f]
+            ).row(0)
+        else:
+            c = self.hw.prefill_chunk_iter(n_new, n_ctx, max(1, len(reqs)), f)
         t = c.time_s * self._noise()
         return IterCost(t, c.power_w, c.power_w * t, c.f_effective, c.theta)
 
     def decode_iter(self, reqs: List[Request], n_req: int, n_kv: int,
                     f: float) -> IterCost:
         self.n_iters += 1
-        c = self.hw.decode_iter(n_req, n_kv, f)
-        t = c.time_s * self._noise()
-        return IterCost(t, c.power_w, c.power_w * t, c.f_effective, c.theta)
+        if self.batch_pricing:
+            c = self.hw.decode_iter_batch([n_req], [n_kv], [f]).row(0)
+            t = c.time_s * self._noise()
+            return IterCost(t, c.power_w, c.power_w * t,
+                            c.f_effective, c.theta)
+        # flattened hw.decode_iter: the dominant pricing call skips the
+        # intermediate IterCost and prices straight off the table, with
+        # the noise draw inlined (``_noise`` body, hoisted before the
+        # zero-work branch — the pricer never touches the RNG, so the
+        # draw sequence is unchanged) — bit-identical either way
+        i = self._noise_i
+        blk = self._noise_blk
+        if i >= blk.shape[0]:
+            blk = np.exp(self._rng.normal(0.0, self.noise_sigma,
+                                          size=1024))
+            self._noise_blk = blk
+            i = 0
+        self._noise_i = i + 1
+        if n_req <= 0:
+            return IterCost(0.0, self._tab.p_idle * self._tp, 0.0, f, 0.0)
+        time_s, p, _e, f_eff, theta = self._dcost(n_req, n_kv, f)
+        p *= self._tp
+        t = time_s * (self.slow_factor * float(blk[i]))
+        return IterCost(t, p, p * t, f_eff, theta)
 
     def spec_decode_iter(self, reqs: List[Request], n_req: int, n_kv: int,
                          k: int, accepts: List[int], draft_frac: float,
@@ -193,7 +252,12 @@ class SimBackend:
         and verification run in full either way; acceptance decides the
         *yield* the engine books in finish_iteration."""
         self.n_iters += 1
-        c = self.hw.spec_decode_iter(n_req, n_kv, k, draft_frac, f)
+        if self.batch_pricing:
+            c = self.hw.spec_decode_iter_batch(
+                [n_req], [n_kv], [k], draft_frac, [f]
+            ).row(0)
+        else:
+            c = self.hw.spec_decode_iter(n_req, n_kv, k, draft_frac, f)
         t = c.time_s * self._noise()
         return IterCost(t, c.power_w, c.power_w * t, c.f_effective, c.theta)
 
@@ -202,9 +266,15 @@ class SimBackend:
                     n_new: int, n_ctx: int, f: float) -> IterCost:
         """Mixed iteration: decode step + piggybacked prefill chunk."""
         self.n_iters += 1
-        c = self.hw.hybrid_iter(
-            n_req, n_kv, n_new, n_ctx, max(1, len(pre_reqs)), f
-        )
+        if self.batch_pricing:
+            c = self.hw.hybrid_iter_batch(
+                [n_req], [n_kv], [n_new], [n_ctx],
+                [max(1, len(pre_reqs))], [f]
+            ).row(0)
+        else:
+            c = self.hw.hybrid_iter(
+                n_req, n_kv, n_new, n_ctx, max(1, len(pre_reqs)), f
+            )
         t = c.time_s * self._noise()
         return IterCost(t, c.power_w, c.power_w * t, c.f_effective, c.theta)
 
@@ -531,7 +601,15 @@ class DecodeEngine(ParkableEngine):
 
     @property
     def n_kv(self) -> int:
-        return sum(self._kv_footprint(r.kv_len) for r in self.running)
+        # Hot path (read every iteration + every router probe): inline
+        # the per-request footprint instead of a method call per request.
+        ps = self.page_size
+        if ps <= 0:
+            return sum(r.kv_len for r in self.running)
+        return sum(
+            -(-r.kv_len // ps) * ps if r.kv_len > 0 else r.kv_len
+            for r in self.running
+        )
 
     @property
     def kv_headroom(self) -> int:
@@ -734,12 +812,12 @@ class DecodeEngine(ParkableEngine):
         """Predicted duration of an iteration at the current state — the
         straggler-bias reference (verify model when speculating)."""
         if self.spec_k > 0:
-            return float(self.predictor.predict_verify(
+            return self.predictor.predict_verify_scalar(
                 f, self.n_req, self.n_kv, self.spec_k
-            )[0])
-        return float(self.predictor.predict_decode(
+            )
+        return self.predictor.predict_decode_scalar(
             f, self.n_req, self.n_kv
-        )[0])
+        )
 
     def finish_iteration(self, now: float) -> List[Request]:
         """Book this iteration's yield; returns newly finished requests.

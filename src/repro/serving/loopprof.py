@@ -22,6 +22,12 @@ for the per-phase wall split the benchmark harness publishes in
   backends' deferred-emission drains; 0 in pure simulation).
 * ``metrics``  — ``finish_iteration`` bookkeeping + straggler-bias
   re-prediction at ``_D_DONE``.
+* ``queue``    — event-heap pops (the loop's only unavoidable
+  per-event cost; pushes land under the handler that issued them).
+* ``bookkeeping`` — per-event handler wall *not* covered by the probes
+  above: routing wrappers' kick logic, request lifecycle mutation,
+  chaos/scale handling, heap pushes.  Round 3 made this measurable so
+  the unaccounted residue is timer overhead, not folklore.
 
 Decision-plane telemetry (round 2) rides along in the same dict:
 
@@ -55,6 +61,8 @@ class LoopProfile:
     backend_s: float = 0.0
     finish_total_s: float = 0.0
     route_s: float = 0.0
+    queue_s: float = 0.0        # event-heap pops (profiled drain)
+    bookkeeping_s: float = 0.0  # handler wall minus the probes above
     iterations: int = 0
     _engines: List = field(default_factory=list)   # live, grows on spawn
     _backends: List = field(default_factory=list)  # live, grows on spawn
@@ -101,6 +109,8 @@ class LoopProfile:
             "dispatch_s": max(0.0, self.backend_s - dev),
             "device_wait_s": dev,
             "metrics_s": self.finish_total_s,
+            "queue_s": self.queue_s,
+            "bookkeeping_s": self.bookkeeping_s,
             "iterations": self.iterations,
             "select_memo_hit_rate": self._select_memo_rate(),
             "route_batch_rows_avg": self._route_batch_avg(),
@@ -111,7 +121,8 @@ class LoopProfile:
             out["accounted_frac"] = round(
                 (out["schedule_s"] + out["select_s"] + out["route_s"]
                  + out["dispatch_s"] + out["device_wait_s"]
-                 + out["metrics_s"]) / wall_s, 4,
+                 + out["metrics_s"] + out["queue_s"]
+                 + out["bookkeeping_s"]) / wall_s, 4,
             )
         return {
             k: (round(v, 4) if isinstance(v, float) else v)
@@ -168,4 +179,7 @@ def install(cluster) -> LoopProfile:
     if hooks is not None:
         hooks.append(instrument)
     prof._routers = [cluster.prefill_router, cluster.decode_router]
+    # the cluster's run loop switches to its profiled drain (heap-pop +
+    # per-event residue timing) when a profile is attached
+    cluster._prof = prof
     return prof

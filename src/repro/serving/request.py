@@ -37,7 +37,7 @@ class Phase(enum.Enum):
 # ---------------------------------------------------------------------------
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class TierSpec:
     """One SLO class: per-tier latency targets + scheduling capabilities.
 
@@ -73,7 +73,7 @@ DEFAULT_TIERS: Dict[str, TierSpec] = {
 }
 
 
-@dataclass
+@dataclass(slots=True)
 class Request:
     rid: int
     arrival_s: float

@@ -1,0 +1,238 @@
+"""Batch pricing twins == scalar pricers, to the bit.
+
+The array-native ``*_iter_batch`` methods (PR 10) must reproduce the
+scalar ``*_iter`` loops exactly — the EcoPred profiling oracles, the
+``batch_pricing`` SimBackend path, and every golden energy pin in
+``BENCH_baseline.json`` ride on this equivalence.  The sweep covers the
+chip zoo × architecture zoo × tp, with states pinned on the known
+numeric edges:
+
+* MXU staircase: padded-batch boundaries (``mxu_tile`` ± 1);
+* TDP throttle: f_max on saturating batches (vectorized bisection must
+  replay the scalar 40-step sequence);
+* memory knee: frequencies straddling ``f_mem_knee`` (the ``(xk/x)**γ``
+  slowdown routes through per-element pow — ``np.power`` does not
+  bit-match Python ``**`` on every platform);
+* zero-work lanes: empty batches must price as idle, exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.ecopred import EcoPred, ProfileRanges
+from repro.core.hwmodel import HardwareModel, IterCost
+from repro.core.power import CHIPS
+
+FIELDS = ("time_s", "power_w", "energy_j", "f_effective", "theta")
+
+# dense / GQA-window / MoE / pure-SSM / hybrid attn+SSM+MoE
+ARCHS = ("llama-3.1-8b", "gemma2-27b", "qwen3-moe-30b-a3b",
+         "mamba2-2.7b", "jamba-v0.1-52b")
+
+
+def _freq_grid(chip):
+    """Ladder pinned on every numeric edge: range ends, both knees ± 1,
+    and an off-grid interior point."""
+    fs = {chip.f_min, chip.f_max, chip.f_volt_knee, chip.f_mem_knee,
+          chip.f_volt_knee - 1.0, chip.f_mem_knee + 1.0,
+          0.5 * (chip.f_min + chip.f_max) + 0.37}
+    return sorted(f for f in fs if chip.f_min <= f <= chip.f_max)
+
+
+def _states(chip):
+    """(n_req, n_kv) decode states on the staircase edges + a
+    TDP-saturating giant batch + the empty batch."""
+    t = chip.mxu_tile
+    return [(0, 0), (1, 17), (t - 1, 4_096), (t, 4_096), (t + 1, 4_096),
+            (7, 100_000), (2 * t, 600_000), (513, 1_000_000)]
+
+
+def _assert_rows_equal(batch, scalars, ctx):
+    assert len(batch) == len(scalars)
+    for i, sc in enumerate(scalars):
+        row = batch.row(i)
+        assert isinstance(row, IterCost)
+        for fld in FIELDS:
+            b, s = getattr(row, fld), getattr(sc, fld)
+            assert isinstance(b, float)
+            # bit-identity, not closeness: == catches everything except
+            # NaN, which must not appear on either side
+            assert b == s and not np.isnan(b), (
+                f"{ctx}[{i}].{fld}: batch {b!r} != scalar {s!r}"
+            )
+
+
+@pytest.mark.parametrize("chip_name", sorted(CHIPS))
+@pytest.mark.parametrize("arch", ARCHS)
+def test_batch_equals_scalar_all_phases(chip_name, arch):
+    chip = CHIPS[chip_name]
+    for tp in (1, 2):
+        hw = HardwareModel(get_config(arch), chip, tp)
+        tab = hw._table()
+        states = _states(chip)
+        for f in _freq_grid(chip):
+            nr = [s[0] for s in states]
+            kv = [s[1] for s in states]
+            fs = [f] * len(states)
+
+            _assert_rows_equal(
+                hw.decode_iter_batch(nr, kv, fs),
+                [hw.decode_iter(a, b, f) for a, b in states],
+                f"{arch}/{chip_name}/tp{tp}/decode@{f}")
+            # the codegen-specialized fast path (SimBackend's per-call
+            # pricer) must replay the composed terms+cost sequence to
+            # the bit, for every generated variant of the model zoo
+            for a, b in states:
+                assert tab.decode_cost(a, b, f) == tab.cost(
+                    *tab.decode_terms(a, b), f
+                ), f"{arch}/{chip_name}/tp{tp}/decode_cost@{f}:{a},{b}"
+
+            for k in (0, 1, 4):
+                _assert_rows_equal(
+                    hw.verify_iter_batch(nr, kv, [k] * len(states), fs),
+                    [hw.verify_iter(a, b, k, f) for a, b in states],
+                    f"{arch}/{chip_name}/tp{tp}/verify-k{k}@{f}")
+                _assert_rows_equal(
+                    hw.spec_decode_iter_batch(nr, kv, [k] * len(states),
+                                              0.05, fs),
+                    [hw.spec_decode_iter(a, b, k, 0.05, f)
+                     for a, b in states],
+                    f"{arch}/{chip_name}/tp{tp}/spec-k{k}@{f}")
+
+            for frac in (0.0, 0.05):
+                _assert_rows_equal(
+                    hw.draft_iter_batch(nr, kv, frac, fs),
+                    [hw.draft_iter(a, b, frac, f) for a, b in states],
+                    f"{arch}/{chip_name}/tp{tp}/draft-{frac}@{f}")
+
+            toks = [0, 1, chip.mxu_tile - 1, chip.mxu_tile + 1, 2_048]
+            _assert_rows_equal(
+                hw.prefill_iter_batch(toks, None, [f] * len(toks)),
+                [hw.prefill_iter(n, None, f) for n in toks],
+                f"{arch}/{chip_name}/tp{tp}/prefill@{f}")
+            ctxs = [0, 64, 64, 4_096, 15]
+            _assert_rows_equal(
+                hw.prefill_chunk_iter_batch(toks, ctxs, [1, 2, 3, 4, 1],
+                                            [f] * len(toks)),
+                [hw.prefill_chunk_iter(n, c, r, f)
+                 for n, c, r in zip(toks, ctxs, [1, 2, 3, 4, 1])],
+                f"{arch}/{chip_name}/tp{tp}/chunk@{f}")
+
+            news = [0, 32, 0, 128, 64]
+            _assert_rows_equal(
+                hw.hybrid_iter_batch(nr[:5], kv[:5], news, ctxs,
+                                     [1, 1, 2, 2, 3], [f] * 5),
+                [hw.hybrid_iter(a, b, n, c, r, f)
+                 for a, b, n, c, r in zip(nr, kv, news, ctxs,
+                                          [1, 1, 2, 2, 3])],
+                f"{arch}/{chip_name}/tp{tp}/hybrid@{f}")
+
+
+def test_batch_default_frequency_and_broadcast():
+    hw = HardwareModel(get_config("llama-3.1-8b"), CHIPS["a100-80g-sxm"], 1)
+    out = hw.decode_iter_batch([1, 8, 64], 4_096)  # f=None -> f_max
+    _assert_rows_equal(
+        out, [hw.decode_iter(n, 4_096) for n in (1, 8, 64)],
+        "broadcast/default-f")
+    assert len(hw.decode_iter_batch(5, [10, 20, 30])) == 3
+
+
+def test_predict_scalar_matches_vector_paths():
+    """`predict_decode_scalar` / `predict_verify_scalar` (the event
+    loop's per-iteration re-predict) must return exactly what the
+    vectorized predictors return, memo hit or miss."""
+    chip = CHIPS["a100-80g-sxm"]
+    hw = HardwareModel(get_config("llama-3.1-8b"), chip, 1)
+    ranges = ProfileRanges(max_requests=64, max_kv_tokens=200_000)
+    pred = EcoPred(chip.freq_levels_5).offline_profile(
+        hw, ranges=ranges, n_prefill=300, n_decode=900
+    )
+    pred.ensure_verify_profile(hw, k_options=(1, 2, 4), ranges=ranges,
+                               n_samples=900)
+    rng = np.random.default_rng(3)
+    for _ in range(200):
+        f = float(rng.choice(chip.freq_levels_5))
+        n_req = int(rng.integers(0, 64))
+        n_kv = int(rng.integers(0, 200_000))
+        k = int(rng.choice([0, 1, 2, 4]))
+        assert pred.predict_decode_scalar(f, n_req, n_kv) == float(
+            pred.predict_decode(f, n_req, n_kv)[0]
+        )
+        assert pred.predict_verify_scalar(f, n_req, n_kv, k) == float(
+            pred.predict_verify(f, n_req, n_kv, k)[0]
+        )
+    # the second sweep over the same states must be answered from the
+    # GBTree memo (the scalar fast path), still bit-identically
+    hits0 = pred.decode_model.memo_hits
+    assert pred.predict_decode_scalar(1410.0, 8, 50_000) == float(
+        pred.predict_decode(1410.0, 8, 50_000)[0]
+    )
+    assert pred.predict_decode_scalar(1410.0, 8, 50_000) == float(
+        pred.predict_decode(1410.0, 8, 50_000)[0]
+    )
+    assert pred.decode_model.memo_hits > hits0
+
+
+def test_unprofiled_verify_scalar_raises():
+    pred = EcoPred((1000.0, 1400.0))
+    with pytest.raises(RuntimeError, match="ensure_verify_profile"):
+        pred.predict_verify_scalar(1400.0, 4, 1000, 4)
+
+
+def test_vectorized_exp_matches_scalar_ufunc():
+    """``SimBackend._noise`` precomputes ``np.exp`` over whole noise
+    blocks; that is bit-safe only while the vectorized ufunc rounds
+    identically to per-element scalar calls on this platform — pin it
+    across the sigma ranges the backends actually draw from."""
+    rng = np.random.default_rng(123)
+    for sigma in (0.005, 0.05, 0.5):
+        z = rng.normal(0.0, sigma, size=4_096)
+        vec = np.exp(z)
+        assert all(vec[i] == np.exp(z[i]) for i in range(z.shape[0]))
+
+
+def test_noise_block_matches_percall_draws():
+    """Block-drawn noise must replay the exact per-call RNG sequence:
+    same generator bit stream, same exp, same slow_factor product."""
+    from repro.serving.engine import SimBackend
+
+    hw = HardwareModel(get_config("llama-3.1-8b"), CHIPS["a100-80g-sxm"], 1)
+    b = SimBackend(hw, noise_sigma=0.03, seed=42, slow_factor=1.1)
+    ref = np.random.default_rng(42)
+    for _ in range(3_000):  # crosses two block refills
+        assert b._noise() == 1.1 * float(np.exp(ref.normal(0.0, 0.03)))
+
+
+def _twin_metrics(batch_pricing: bool, spec: bool):
+    from repro.serving import ClusterConfig, PDCluster, poisson_workload
+    from repro.serving.workload import SHAREGPT
+
+    cfg = ClusterConfig(
+        model=get_config("llama-3.1-8b"), chip=CHIPS["a100-80g-sxm"],
+        n_prefill=1, n_decode=2, policy="voltana", online_adapt=False,
+        predictor_bank={}, seed=0, paged=True, spec_decode=spec,
+    )
+    cluster = PDCluster(cfg)
+    for eng in cluster.prefill + cluster.decode + cluster.hybrid:
+        eng.backend.batch_pricing = batch_pricing
+    reqs = poisson_workload(SHAREGPT, 4.0, 15.0, seed=7)
+    return cluster.run(reqs)
+
+
+@pytest.mark.parametrize("spec", [False, True])
+def test_cluster_twin_run_batch_pricing(spec):
+    """Full-cluster twin: the same workload priced through the scalar
+    pricers and through the batch twins must produce identical energy
+    and token streams — not approximately, identically."""
+    a = _twin_metrics(False, spec)
+    b = _twin_metrics(True, spec)
+    assert a.energy_per_token_j() == b.energy_per_token_j()
+    assert a.output_tokens() == b.output_tokens()
+    assert a.duration_s == b.duration_s
+    for ea, eb in zip(a.instances, b.instances):
+        assert ea.busy_j == eb.busy_j and ea.idle_j == eb.idle_j
+    for ra, rb in zip(a.requests, b.requests):
+        assert (ra.t_first_token, ra.t_finish, ra.tokens_out,
+                ra.max_itl_s, ra.spec_accepted) == (
+            rb.t_first_token, rb.t_finish, rb.tokens_out,
+            rb.max_itl_s, rb.spec_accepted)

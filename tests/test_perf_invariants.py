@@ -463,6 +463,49 @@ def test_bench_gate_rebaseline_adopts_breakdown():
          "status": "OK"},
         {"field": "control_share", "baseline": 0.07, "current": 0.07,
          "status": "OK"},
+        {"field": "dispatch_share", "baseline": 0.0, "current": 0.0,
+         "status": "OK"},
         {"field": "select_memo_hit_rate", "baseline": 0.98,
          "current": 0.98, "status": "OK"},
     ])
+
+
+def test_bench_gate_accounted_frac_floor():
+    G = _load_bench_gate()
+    floor = G.ACCOUNTED_FRAC_FLOOR
+    ok = _bd()
+    ok["event_loop_breakdown"]["accounted_frac"] = floor
+    fails, rows = G.gate_breakdown(ok, _BD_BASE)
+    assert not fails
+    assert any(r["field"] == "accounted_frac" and r["status"] == "OK"
+               for r in rows)
+    bad = _bd()
+    bad["event_loop_breakdown"]["accounted_frac"] = floor - 0.01
+    fails, _ = G.gate_breakdown(bad, _BD_BASE)
+    assert any("accounted_frac" in f for f in fails)
+
+
+def test_bench_gate_dispatch_share_pre_pr3_cut():
+    G = _load_bench_gate()
+
+    def bd(dispatch, wall=1.0):
+        d = _bd(wall=wall)
+        d["event_loop_breakdown"]["dispatch_s"] = dispatch
+        return d
+
+    base = {**_BD_BASE,
+            "pre_pr3_breakdown": {"dispatch_s": 0.30, "wall_s": 1.0}}
+    base["event_loop_breakdown"] = dict(base["event_loop_breakdown"])
+    base["event_loop_breakdown"]["dispatch_s"] = 0.12
+    # holding the 2x cut vs the frozen pre-round-3 share: OK
+    fails, rows = G.gate_breakdown(bd(0.12), base)
+    assert not fails
+    assert any(r["field"] == "dispatch_share_vs_pre_pr3"
+               and r["status"] == "OK" for r in rows)
+    # dispatch share creeping back over half the pre-round-3 share: FAIL
+    fails, _ = G.gate_breakdown(bd(0.151, wall=1.0), base)
+    assert any("2x cut" in f for f in fails)
+    # baselines without the frozen row skip the check
+    fails, rows = G.gate_breakdown(bd(0.40), _BD_BASE)
+    assert not any(r["field"] == "dispatch_share_vs_pre_pr3"
+                   for r in rows)

@@ -18,7 +18,10 @@ things worse:
   select+route control share) must not regress more than ``--tolerance``
   relative over the baseline share, and the ``select_memo_hit_rate``
   must stay within 90% of its baselined value (skipped when the
-  committed baseline predates the breakdown rows);
+  committed baseline predates the breakdown rows); round 3 adds a
+  ``dispatch_share`` relative check, an ``accounted_frac`` ≥ 0.85
+  floor, and — against the frozen ``pre_pr3_breakdown`` row — the
+  standing requirement that the dispatch share keep its ≥2× cut;
 * scenario-matrix drift in the ``trace_replay`` section: a scenario
   dropping its golden pins (``pin_ok``), its exact ``output_tokens``
   count, or a QPS sweep's detected saturation knee moving off the
@@ -48,6 +51,9 @@ DEFAULT_BASELINE = os.path.join(REPO, "benchmarks", "BENCH_baseline.json")
 
 # pins that must match the baseline exactly (deterministic sim outputs)
 EXACT_PINS = ("energy_per_token_j", "accept_rate")
+# minimum fraction of the instrumented wall the loopprof phases must
+# attribute (round 3 added queue_s/bookkeeping_s to make this reachable)
+ACCOUNTED_FRAC_FLOOR = 0.85
 # fields carried into the baseline on --rebaseline
 BASELINE_FIELDS = (
     "requests", "output_tokens", "iterations", "iters_per_s",
@@ -134,6 +140,8 @@ def gate_breakdown(serving: dict, baseline: dict,
         ("select_share", share(cur, "select_s"), share(base, "select_s")),
         ("control_share", share(cur, "select_s", "route_s"),
          share(base, "select_s", "route_s")),
+        ("dispatch_share", share(cur, "dispatch_s"),
+         share(base, "dispatch_s")),
     ]
     for name, c, b in checks:
         row = {"field": name,
@@ -150,6 +158,38 @@ def gate_breakdown(serving: dict, baseline: dict,
             row["status"] = "FAIL"
         else:
             row["status"] = "OK"
+        rows.append(row)
+
+    # round 3: the loop's wall must be measurably *accounted* — the
+    # queue_s/bookkeeping_s probes exist precisely so the unattributed
+    # residue stays timer overhead, not a hidden hot phase
+    c_acc = cur.get("accounted_frac")
+    if "accounted_frac" in cur or "accounted_frac" in base:
+        row = {"field": "accounted_frac",
+               "baseline": base.get("accounted_frac"),
+               "current": c_acc, "status": "OK"}
+        if c_acc is None or c_acc < ACCOUNTED_FRAC_FLOOR:
+            failures.append(
+                f"breakdown/accounted_frac: {c_acc} under the "
+                f"{ACCOUNTED_FRAC_FLOOR} floor")
+            row["status"] = "FAIL"
+        rows.append(row)
+
+    # round-3 acceptance, kept standing: dispatch share must hold the
+    # ≥2× cut against the frozen pre-round-3 breakdown row
+    pre3 = baseline.get("pre_pr3_breakdown")
+    if pre3:
+        b_disp = share(pre3, "dispatch_s")
+        c_disp = share(cur, "dispatch_s")
+        row = {"field": "dispatch_share_vs_pre_pr3",
+               "baseline": None if b_disp is None else round(b_disp, 4),
+               "current": None if c_disp is None else round(c_disp, 4),
+               "status": "OK"}
+        if b_disp and (c_disp is None or c_disp > 0.5 * b_disp):
+            failures.append(
+                f"breakdown/dispatch_share: {c_disp} lost the 2x cut "
+                f"vs pre-round-3 {b_disp:.4f}")
+            row["status"] = "FAIL"
         rows.append(row)
 
     b_hit = base.get("select_memo_hit_rate")

@@ -111,6 +111,34 @@ def main() -> int:
            ),
            ValueError, "tp")
 
+    # --- packed event-heap kind guard ---------------------------------
+    # a kind outside the 3-bit field would silently corrupt event FIFO
+    # ordering; the push guard must be a real exception under -O
+    from repro.serving.cluster import PDCluster
+
+    def _bad_kind():
+        c = PDCluster.__new__(PDCluster)  # heap state only, no fleet
+        c._heap = []
+        c._eseq = 0
+        c._push(0.0, 8, None)
+
+    expect("packed event kind out of range", _bad_kind, ValueError,
+           "3-bit")
+
+    def _good_kinds():
+        c = PDCluster.__new__(PDCluster)
+        c._heap = []
+        c._eseq = 0
+        for k in range(8):
+            c._push(0.0, k, None)
+        if [key & 7 for _, key, _ in sorted(c._heap)] != list(range(8)):
+            raise RuntimeError("packed heap lost kind/FIFO ordering")
+
+    try:
+        _good_kinds()
+    except Exception as e:  # noqa: BLE001
+        FAILURES.append(f"packed event heap round-trip: {e}")
+
     # --- unprofiled verify model must raise, not assert ---------------
     from repro.core.ecopred import EcoPred
 
